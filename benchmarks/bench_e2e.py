@@ -1,0 +1,134 @@
+"""Figs. 13/14/15 — the motivational experiment repeated with ALL
+modifications (within-batch parallelism + lazy init + prefetch ring), plus
+the per-layer throughput decomposition.
+
+Cells: {vanilla, threaded, asyncio} x {s3, scratch} x {torch raw loop,
+Trainer}.  Reported per cell: runtime, img/s, Mbit/s, util columns, median
+span durations for the Fig. 14 lanes (get_batch / batch_to_device /
+run_training_batch).
+
+Paper claims validated:
+  * threaded-s3 end-to-end reaches a large fraction of vanilla-scratch
+    (paper: 67%, a 15.5x gain over vanilla-s3),
+  * batch-loading median drops by an order of magnitude on s3 (paper 12x),
+  * accelerator idle time drops correspondingly,
+  * Lightning-threaded can outperform Lightning-scratch-vanilla (paper 2.5x).
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+import jax.random as jr
+
+from benchmarks.bench_motivational import TCFG, jitted_step, paper_regime
+from benchmarks.common import Result, Scale, make_image_dataset, make_loader, make_store, median
+from repro.core.tracing import BATCH_TO_DEVICE, GET_BATCH, RUN_TRAINING_BATCH, Tracer
+from repro.core.worker import LOAD_BATCH
+from repro.core.utilization import accelerator_stats
+from benchmarks.bench_motivational import BENCH_RESNET
+from repro.train.steps import init_resnet_train_state
+from repro.train.trainer import LoggingCallback, Trainer, raw_train_loop
+
+NAME = "e2e"
+PAPER_REF = "Figs. 13/14/15"
+
+
+def _cell(storage: str, impl: str, lib: str, scale: Scale) -> Dict:
+    scale = paper_regime(scale)
+    tracer = Tracer()
+    store = make_store(storage, scale)
+    ds = make_image_dataset(store, scale, out_size=64, tracer=tracer)
+    loader = make_loader(ds, impl, scale, tracer=tracer, lazy_init=True)
+    state = init_resnet_train_state(BENCH_RESNET, TCFG, jr.PRNGKey(0))
+    step = jitted_step(scale.batch_size)  # shared executable; no compile skew
+    t0 = time.monotonic()
+    if lib == "torch":
+        res = raw_train_loop(
+            step, state, loader, epochs=scale.epochs, tracer=tracer, jit=False
+        )
+    else:
+        # paper A.3 semantics: the *vanilla* Lightning cells keep the original
+        # aggressive logging; the modified (threaded/asyncio) cells carry the
+        # paper's logging fix (reduced frequency, no per-step GPU monitor).
+        logging = (
+            LoggingCallback(log_every_n_steps=1, cost_s=0.1)
+            if impl == "vanilla"
+            else LoggingCallback(log_every_n_steps=50)
+        )
+        trainer = Trainer(step, state, callbacks=[logging], tracer=tracer, jit=False)
+        res = trainer.fit(loader, epochs=scale.epochs)
+    t1 = time.monotonic()
+    util = accelerator_stats(tracer, t0, t1)
+    imgs = res.steps * scale.batch_size
+    nbytes = sum(s.args.get("nbytes", 0) for s in tracer.spans(GET_BATCH))
+    return {
+        "storage": storage,
+        "impl": impl,
+        "lib": lib,
+        "runtime_s": round(res.wall_s, 2),
+        "img_per_s": round(imgs / res.wall_s, 1),
+        "mbit_per_s": round(nbytes * 8 / 1024**2 / res.wall_s, 1),
+        "util_zero_pct": round(util.util_zero_pct, 1),
+        "load_batch_ms": round(median(tracer.durations(LOAD_BATCH)) * 1e3, 1),
+        "get_batch_wait_ms": round(median(tracer.durations(GET_BATCH)) * 1e3, 1),
+        "to_device_ms": round(median(tracer.durations(BATCH_TO_DEVICE)) * 1e3, 1),
+        "train_ms": round(median(tracer.durations(RUN_TRAINING_BATCH)) * 1e3, 1),
+    }
+
+
+def run(scale: Scale) -> Result:
+    rows = []
+    for storage in ("s3", "scratch"):
+        for impl in ("vanilla", "threaded", "asyncio"):
+            for lib in ("torch", "lightning"):
+                rows.append(_cell(storage, impl, lib, scale))
+
+    r = {(x["storage"], x["impl"], x["lib"]): x for x in rows}
+    e2e_gain = (
+        r[("s3", "threaded", "torch")]["img_per_s"]
+        / r[("s3", "vanilla", "torch")]["img_per_s"]
+    )
+    frac_of_scratch = (
+        r[("s3", "threaded", "torch")]["img_per_s"]
+        / r[("scratch", "vanilla", "torch")]["img_per_s"]
+    )
+    def _ms(cell):  # sub-0.1ms medians round to 0 on scratch
+        return max(cell["load_batch_ms"], 0.1)
+
+    batch_gain = _ms(r[("s3", "vanilla", "torch")]) / _ms(
+        r[("s3", "threaded", "torch")]
+    )
+    scr_batch_gain = _ms(r[("scratch", "vanilla", "torch")]) / _ms(
+        r[("scratch", "threaded", "torch")]
+    )
+    idle_drop = (
+        r[("s3", "vanilla", "torch")]["util_zero_pct"]
+        - r[("s3", "threaded", "torch")]["util_zero_pct"]
+    )
+    lightning_gain = (
+        r[("s3", "threaded", "lightning")]["img_per_s"]
+        / r[("scratch", "vanilla", "lightning")]["img_per_s"]
+    )
+    for x in rows:
+        x["pct_of_scratch_vanilla"] = round(
+            100 * x["img_per_s"] / r[(("scratch", "vanilla", x["lib"]))]["img_per_s"], 1
+        )
+    claims = [
+        (f"threaded-s3 e2e gain over vanilla-s3 (got {e2e_gain:.1f}x; paper 15.5x)",
+         e2e_gain >= 3.0),
+        (f"threaded-s3 reaches large fraction of vanilla-scratch "
+         f"(got {100*frac_of_scratch:.0f}%; paper 67%)",
+         frac_of_scratch >= 0.4),
+        (f"s3 batch-load median drops (got {batch_gain:.1f}x; paper 12x)",
+         batch_gain >= 4.0),
+        (f"scratch batch-load median drops (got {scr_batch_gain:.1f}x; paper 3x — "
+         f"driven by GIL-releasing decode, simulated per DESIGN §8)",
+         scr_batch_gain >= 1.5),
+        (f"accelerator idle%% drops on s3 (by {idle_drop:.0f} points)",
+         idle_drop > 15),
+        (f"Lightning-threaded-s3 vs Lightning-vanilla-scratch "
+         f"(got {lightning_gain:.1f}x; paper 2.5x)",
+         lightning_gain >= 1.0),
+    ]
+    return Result(NAME, PAPER_REF, rows, claims)

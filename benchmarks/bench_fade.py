@@ -1,0 +1,59 @@
+"""Appendix A.6 — fade-in/fade-out effect.
+
+Bucket ``get_item`` span starts/ends over the experiment duration: the
+first decile has few completions (fade-in: the pipeline is filling) and the
+last decile has few starts (fade-out: the sampler is exhausted), so short
+experiments under-estimate steady-state throughput.
+"""
+from __future__ import annotations
+
+from benchmarks.common import (
+    Result,
+    Scale,
+    drain_loader,
+    make_image_dataset,
+    make_loader,
+    make_store,
+)
+from repro.core.tracing import GET_ITEM, Tracer
+
+NAME = "fade"
+PAPER_REF = "Appendix A.6"
+
+
+def run(scale: Scale) -> Result:
+    tracer = Tracer()
+    store = make_store("s3", scale)
+    ds = make_image_dataset(store, scale, tracer=tracer)
+    loader = make_loader(ds, "threaded", scale, tracer=tracer)
+    drain_loader(loader, epochs=1)
+
+    spans = tracer.spans(GET_ITEM)
+    t0 = min(s.t0 for s in spans)
+    t1 = max(s.t1 for s in spans)
+    wall = t1 - t0
+    bins = 10
+    started = [0] * bins
+    finished = [0] * bins
+    for s in spans:
+        started[min(int((s.t0 - t0) / wall * bins), bins - 1)] += 1
+        finished[min(int((s.t1 - t0) / wall * bins), bins - 1)] += 1
+    rows = [
+        {
+            "decile": i,
+            "started": started[i],
+            "finished": finished[i],
+            "inflight_delta": started[i] - finished[i],
+        }
+        for i in range(bins)
+    ]
+    mid_started = sum(started[2:8]) / 6
+    claims = [
+        ("fade-in: more starts than finishes in the first decile",
+         started[0] >= finished[0]),
+        ("fade-out: fewer starts in the last decile than mid-experiment",
+         started[-1] < mid_started),
+        ("steady middle: starts ~ finishes per mid decile",
+         abs(sum(started[3:7]) - sum(finished[3:7])) < 0.5 * sum(started[3:7]) + 1),
+    ]
+    return Result(NAME, PAPER_REF, rows, claims)

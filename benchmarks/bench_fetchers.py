@@ -1,0 +1,60 @@
+"""Fig. 5 — within-batch (fetcher) parallelism.
+
+Loader implementations {vanilla, threaded, asyncio} x storage {s3, scratch},
+data-loading throughput in img/s and Mbit/s (paper Table 5 parameters:
+4 workers, prefetch 4, 16 fetch-workers).
+
+Paper claims validated:
+  * threaded and asyncio give order-of-magnitude throughput gains over
+    vanilla on s3 (paper: 11.44x / 10.77x),
+  * the gain on scratch storage is small (paper: ~1.5x),
+  * threaded ~= asyncio (both hide per-item latency equally well).
+"""
+from __future__ import annotations
+
+from benchmarks.common import (
+    Result,
+    Scale,
+    drain_loader,
+    make_image_dataset,
+    make_loader,
+    make_store,
+    paper_scale,
+)
+
+NAME = "fetchers"
+PAPER_REF = "Fig. 5"
+
+
+def run(scale: Scale) -> Result:
+    scale = paper_scale(scale)  # the paper's ~80 ms S3 GET regime
+    rows = []
+    for storage in ("s3", "scratch"):
+        for impl in ("vanilla", "threaded", "asyncio"):
+            store = make_store(storage, scale)
+            ds = make_image_dataset(store, scale)
+            loader = make_loader(ds, impl, scale)
+            m = drain_loader(loader, epochs=scale.epochs)
+            rows.append({"storage": storage, "impl": impl, **m})
+
+    r = {(row["storage"], row["impl"]): row for row in rows}
+    s3_threaded_x = r[("s3", "threaded")]["img_per_s"] / r[("s3", "vanilla")]["img_per_s"]
+    s3_asyncio_x = r[("s3", "asyncio")]["img_per_s"] / r[("s3", "vanilla")]["img_per_s"]
+    scr_threaded_x = (
+        r[("scratch", "threaded")]["img_per_s"] / r[("scratch", "vanilla")]["img_per_s"]
+    )
+    for row in rows:
+        row["speedup_vs_vanilla"] = round(
+            row["img_per_s"] / r[(row["storage"], "vanilla")]["img_per_s"], 2
+        )
+    claims = [
+        (f"threaded >= 4x vanilla on s3 (got {s3_threaded_x:.1f}x; paper 10.8x)",
+         s3_threaded_x >= 4.0),
+        (f"asyncio >= 4x vanilla on s3 (got {s3_asyncio_x:.1f}x; paper 11.4x)",
+         s3_asyncio_x >= 4.0),
+        (f"scratch gain modest, < s3 gain (got {scr_threaded_x:.1f}x vs {s3_threaded_x:.1f}x)",
+         scr_threaded_x < s3_threaded_x),
+        ("threaded ~= asyncio on s3 (within 35%)",
+         abs(s3_threaded_x - s3_asyncio_x) <= 0.35 * max(s3_threaded_x, s3_asyncio_x)),
+    ]
+    return Result(NAME, PAPER_REF, rows, claims)

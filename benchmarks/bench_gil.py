@@ -1,0 +1,75 @@
+"""Appendix A.4 — the GIL concurrency ceiling.
+
+The paper measured Python threads+multiprocessing at ~252 Mbit/s vs Java at
+~701 Mbit/s on the same S3 downloads.  Without a JVM we reproduce the
+*mechanism*: thread-pool download throughput of (a) pure I/O GETs (the
+simulated network sleep releases the GIL, like boto3 socket reads) scales
+with threads, while (b) GETs + CPU-bound decode (holds the GIL) saturates
+near single-core decode speed regardless of thread count — that saturation
+IS the GIL ceiling; a lower-level (C++/Java) loader escapes it.
+"""
+from __future__ import annotations
+
+import time
+from concurrent.futures import ThreadPoolExecutor
+
+from benchmarks.common import Result, Scale, make_store
+from repro.data.codec import decode_image
+from repro.data.imagenet_synth import item_key
+
+NAME = "gil"
+PAPER_REF = "Appendix A.4"
+
+THREADS = (1, 4, 16, 64)
+
+
+def _sweep(decode: bool, scale: Scale, loads: int) -> list:
+    rows = []
+    for t in THREADS:
+        store = make_store("s3", scale)
+
+        def work(i):
+            raw = store.get(item_key(i % scale.dataset_items))
+            if decode:
+                rec = decode_image(raw)
+                # CPU-bound post-processing holds the GIL for ~ the GET time
+                # (the paper's regime: heavy Python-side decode/augment)
+                for _ in range(48):
+                    _ = (rec.pixels.astype("float32") ** 2).mean()
+            return len(raw)
+
+        t0 = time.monotonic()
+        with ThreadPoolExecutor(t) as ex:
+            sizes = list(ex.map(work, range(loads)))
+        wall = time.monotonic() - t0
+        rows.append(
+            {
+                "mode": "io+decode" if decode else "io_only",
+                "threads": t,
+                "mbit_per_s": round(sum(sizes) * 8 / 1024**2 / wall, 1),
+                "runtime_s": round(wall, 2),
+            }
+        )
+    return rows
+
+
+def run(scale: Scale) -> Result:
+    loads = min(2 * scale.dataset_items, 768)
+    rows = _sweep(False, scale, loads) + _sweep(True, scale, min(loads, 256))
+    io = {r["threads"]: r["mbit_per_s"] for r in rows if r["mode"] == "io_only"}
+    dec = {r["threads"]: r["mbit_per_s"] for r in rows if r["mode"] == "io+decode"}
+    io_scaling = io[64] / io[1]
+    dec_scaling = dec[64] / dec[1]
+    claims = [
+        (f"I/O-only GETs scale with threads ({io_scaling:.1f}x from 1->64)",
+         io_scaling > 6.0),
+        (f"GIL-bound decode path scales much worse ({dec_scaling:.1f}x vs {io_scaling:.1f}x)",
+         dec_scaling < 0.6 * io_scaling),
+        ("ceiling: io+decode @64 threads << io_only @64 threads",
+         dec[64] < 0.75 * io[64]),
+    ]
+    return Result(
+        NAME, PAPER_REF, rows, claims,
+        notes="paper: Python 252 vs Java 701 Mbit/s; the decode-bound plateau "
+        "here is the same GIL ceiling, reproduced without a JVM",
+    )

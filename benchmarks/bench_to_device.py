@@ -1,0 +1,52 @@
+"""Fig. 7 — host-to-device transfer time vs batch size.
+
+``device_put`` + block_until_ready per batch, batch sizes 64..512 (the
+paper's Fig. 7 shows CPU->GPU copy growing with batch size; on TPU the
+analogue is the host->HBM transfer that the prefetch ring overlaps).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import Result, Scale, median
+
+NAME = "to_device"
+PAPER_REF = "Fig. 7"
+
+
+def run(scale: Scale) -> Result:
+    rows = []
+    for bs in (64, 128, 256, 512):
+        # NHWC view transposed to NCHW: non-contiguous, so device_put must
+        # really copy (the CPU backend zero-copy-aliases contiguous numpy
+        # buffers, which would hide the bytes-proportional cost that Fig. 7
+        # measures as the CUDA H2D copy).
+        nhwc = np.random.default_rng(0).random((bs, 96, 96, 3), np.float32)
+        batch = {
+            "image": nhwc.transpose(0, 3, 1, 2),
+            "label": np.zeros((bs,), np.int32),
+        }
+        times = []
+        for _ in range(8):
+            t0 = time.monotonic()
+            dev = jax.tree.map(jax.device_put, batch)
+            jax.tree.map(lambda x: x.block_until_ready(), dev)
+            times.append(time.monotonic() - t0)
+            del dev
+        rows.append(
+            {
+                "batch_size": bs,
+                "median_ms": round(median(times) * 1e3, 3),
+                "mbytes": round(batch["image"].nbytes / 1e6, 1),
+            }
+        )
+    claims = [
+        (
+            "transfer time grows with batch size (512 > 64)",
+            rows[-1]["median_ms"] > rows[0]["median_ms"],
+        ),
+    ]
+    return Result(NAME, PAPER_REF, rows, claims)

@@ -1,0 +1,258 @@
+"""Shared benchmark harness.
+
+Every ``bench_*`` module maps to one paper table/figure and exposes::
+
+    NAME      — short id
+    PAPER_REF — which table/figure it reproduces
+    def run(scale: Scale) -> Result
+
+``Result.rows`` is a list of flat dicts (one per measured cell) and
+``Result.claims`` a list of (description, bool) paper-claim validations.
+``run.py`` renders tables, writes ``reports/bench/<name>.json`` and prints a
+claim summary.  Benchmarks are CPU-only: remote storage is the calibrated
+:class:`SimulatedS3Store`; "scratch" is the in-memory/local path.
+"""
+from __future__ import annotations
+
+import json
+import os
+import statistics
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.config import LoaderConfig, StoreConfig
+from repro.core.loader import ConcurrentDataLoader
+from repro.core.tracing import GET_BATCH, GET_ITEM, Tracer
+from repro.data.dataset import ImageDataset
+from repro.data.imagenet_synth import build_synthetic_imagenet
+from repro.data.store import (
+    CachedStore,
+    InMemoryStore,
+    ObjectStore,
+    SimulatedS3Store,
+)
+
+# --------------------------------------------------------------------------
+# scale presets
+# --------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Scale:
+    """Benchmark scale knobs.  ``quick`` keeps the full suite ~15 min on CI;
+    ``full`` stretches datasets/epochs for tighter statistics."""
+
+    name: str = "quick"
+    dataset_items: int = 384
+    batch_size: int = 32
+    epochs: int = 2
+    avg_kb: float = 48.0
+    # calibrated network model (see DESIGN.md §2): ~20 ms median GET,
+    # per-connection 50 MB/s, 1.2 GB/s NIC
+    latency_mean_s: float = 0.02
+    latency_sigma: float = 0.5
+    bandwidth_per_conn: float = 50e6
+    nic_bandwidth: float = 1.2e9
+    max_connections: int = 256
+    repeats: int = 1
+
+
+QUICK = Scale()
+FULL = Scale(
+    name="full", dataset_items=1024, epochs=3, repeats=3,
+)
+
+
+def paper_scale(scale: Scale, items: int = 256) -> Scale:
+    """Table-3 calibration: the paper's ~80 ms median S3 GET (the regime
+    where a V100 step is ~100x faster than a batch load), smaller dataset so
+    the vanilla-s3 cells stay tractable on CI."""
+    import dataclasses
+
+    return dataclasses.replace(
+        scale, latency_mean_s=0.08, dataset_items=min(scale.dataset_items, items)
+    )
+
+
+@dataclass
+class Result:
+    name: str
+    paper_ref: str
+    rows: List[Dict[str, Any]] = field(default_factory=list)
+    claims: List[Tuple[str, bool]] = field(default_factory=list)
+    notes: str = ""
+    wall_s: float = 0.0
+
+
+# --------------------------------------------------------------------------
+# dataset / store builders
+# --------------------------------------------------------------------------
+
+_IMAGE_CACHE: Dict[Tuple[int, float], InMemoryStore] = {}
+
+
+def base_image_store(scale: Scale, num_items: Optional[int] = None) -> InMemoryStore:
+    """Deterministic synthetic-ImageNet blob store (shared across benches)."""
+    n = num_items or scale.dataset_items
+    key = (n, scale.avg_kb)
+    if key not in _IMAGE_CACHE:
+        _IMAGE_CACHE[key] = build_synthetic_imagenet(
+            InMemoryStore(), num_items=n, avg_kb=scale.avg_kb
+        )
+    return _IMAGE_CACHE[key]
+
+
+def make_store(
+    kind: str,
+    scale: Scale,
+    *,
+    num_items: Optional[int] = None,
+    cache_bytes: int = 0,
+    seed: int = 0,
+) -> ObjectStore:
+    """kind: 'scratch' (in-memory local) | 's3' (simulated remote)."""
+    base = base_image_store(scale, num_items)
+    store: ObjectStore = base
+    if kind == "s3":
+        store = SimulatedS3Store(
+            base,
+            latency_mean_s=scale.latency_mean_s,
+            latency_sigma=scale.latency_sigma,
+            bandwidth_per_conn=scale.bandwidth_per_conn,
+            nic_bandwidth=scale.nic_bandwidth,
+            max_connections=scale.max_connections,
+            seed=seed,
+        )
+    if cache_bytes:
+        store = CachedStore(store, cache_bytes)
+    return store
+
+
+# paper-calibrated simulated decode: ~6 ms per 115 kB ImageNet JPEG
+DECODE_S_PER_MB = 0.052
+
+
+def make_image_dataset(
+    store: ObjectStore,
+    scale: Scale,
+    *,
+    num_items: Optional[int] = None,
+    out_size: int = 96,
+    tracer: Optional[Tracer] = None,
+) -> ImageDataset:
+    return ImageDataset(
+        store,
+        num_items or scale.dataset_items,
+        out_size=out_size,
+        tracer=tracer or Tracer(),
+        sim_decode_s_per_mb=DECODE_S_PER_MB,
+    )
+
+
+def make_loader(
+    dataset: ImageDataset,
+    impl: str,
+    scale: Scale,
+    *,
+    tracer: Optional[Tracer] = None,
+    **overrides: Any,
+) -> ConcurrentDataLoader:
+    cfg = LoaderConfig(
+        impl=impl,
+        batch_size=overrides.pop("batch_size", scale.batch_size),
+        num_workers=overrides.pop("num_workers", 4),
+        prefetch_factor=overrides.pop("prefetch_factor", 4),
+        num_fetch_workers=overrides.pop("num_fetch_workers", 16),
+        **overrides,
+    )
+    return ConcurrentDataLoader(dataset, cfg, tracer=tracer or Tracer())
+
+
+# --------------------------------------------------------------------------
+# measurement helpers
+# --------------------------------------------------------------------------
+
+
+def drain_loader(loader: ConcurrentDataLoader, epochs: int = 1) -> Dict[str, float]:
+    """Consume every batch; return wall time + item/byte throughput
+    (the paper's img/s and Mbit/s units)."""
+    t0 = time.monotonic()
+    items = 0
+    nbytes = 0
+    for epoch in range(epochs):
+        if epoch:
+            loader.set_epoch(epoch)
+        for batch in loader:
+            items += len(batch["label"])
+            nbytes += int(batch["nbytes"].sum())
+    wall = time.monotonic() - t0
+    return {
+        "runtime_s": round(wall, 3),
+        "img_per_s": round(items / wall, 2),
+        "mbit_per_s": round(nbytes * 8 / 1024**2 / wall, 2),
+        "items": items,
+    }
+
+
+def median(xs: Sequence[float]) -> float:
+    return statistics.median(xs) if xs else float("nan")
+
+
+def pctl(xs: Sequence[float], q: float) -> float:
+    if not xs:
+        return float("nan")
+    s = sorted(xs)
+    return s[min(int(q * len(s)), len(s) - 1)]
+
+
+# --------------------------------------------------------------------------
+# table rendering / persistence
+# --------------------------------------------------------------------------
+
+
+def render_table(rows: List[Dict[str, Any]]) -> str:
+    if not rows:
+        return "(no rows)"
+    cols = list(rows[0].keys())
+    widths = {
+        c: max(len(str(c)), *(len(_fmt(r.get(c))) for r in rows)) for c in cols
+    }
+    head = " | ".join(str(c).ljust(widths[c]) for c in cols)
+    sep = "-+-".join("-" * widths[c] for c in cols)
+    body = "\n".join(
+        " | ".join(_fmt(r.get(c)).ljust(widths[c]) for c in cols) for r in rows
+    )
+    return f"{head}\n{sep}\n{body}"
+
+
+def _fmt(v: Any) -> str:
+    if isinstance(v, float):
+        if v != v:  # nan
+            return "nan"
+        if abs(v) >= 1000 or (abs(v) < 0.01 and v != 0):
+            return f"{v:.3g}"
+        return f"{v:.3f}".rstrip("0").rstrip(".")
+    return str(v)
+
+
+def save_result(result: Result, out_dir: str = "reports/bench") -> str:
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"{result.name}.json")
+    with open(path, "w") as f:
+        json.dump(
+            {
+                "name": result.name,
+                "paper_ref": result.paper_ref,
+                "rows": result.rows,
+                "claims": [{"claim": c, "ok": bool(ok)} for c, ok in result.claims],
+                "notes": result.notes,
+                "wall_s": result.wall_s,
+            },
+            f,
+            indent=1,
+            default=str,
+        )
+    return path

@@ -1,0 +1,93 @@
+"""Quickstart — the paper's experiment in two minutes.
+
+Trains the paper's model family (a reduced ResNet) on a synthetic-ImageNet
+object store twice: once with the stock ("vanilla") loader and once with the
+ConcurrentDataloader's threaded fetchers, both against simulated S3 storage.
+Prints the Table-3 / Fig-13 style comparison: the within-batch parallelism
+recovers most of the throughput that per-item network latency destroys.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import time
+
+import jax.random as jr
+
+from repro.config import LoaderConfig, ModelConfig, StoreConfig, TrainConfig
+from repro.core.loader import ConcurrentDataLoader
+from repro.core.tracing import Tracer
+from repro.core.utilization import accelerator_stats
+from repro.data.dataset import ImageDataset
+from repro.data.imagenet_synth import build_synthetic_imagenet
+from repro.data.store import SimulatedS3Store
+from repro.train.steps import init_resnet_train_state, make_resnet_train_step
+from repro.train.trainer import raw_train_loop
+
+MODEL = ModelConfig(
+    name="resnet-quickstart", family="resnet",
+    resnet_blocks=(1, 1), resnet_width=8, num_classes=1000, image_size=64,
+)
+ITEMS, BATCH, EPOCHS = 192, 32, 2
+
+_TCFG = TrainConfig(optimizer="sgd", learning_rate=0.1)
+_STEP = None
+
+
+def jitted_step():
+    """Compile once so XLA compile time doesn't pollute the comparison."""
+    global _STEP
+    if _STEP is None:
+        import jax
+        import numpy as np
+
+        _STEP = jax.jit(make_resnet_train_step(MODEL, _TCFG), donate_argnums=(0,))
+        dummy = {
+            "image": np.zeros((BATCH, 3, 64, 64), np.float32),
+            "label": np.zeros((BATCH,), np.int32),
+            "nbytes": np.zeros((BATCH,), np.int64),
+        }
+        _STEP(init_resnet_train_state(MODEL, _TCFG, jr.PRNGKey(1)), dummy)
+    return _STEP
+
+
+def run(impl: str) -> dict:
+    tracer = Tracer()
+    store = SimulatedS3Store(
+        build_synthetic_imagenet(num_items=ITEMS, avg_kb=48.0),
+        latency_mean_s=0.08,  # the paper's high-latency S3 regime
+    )
+    dataset = ImageDataset(store, ITEMS, out_size=64, tracer=tracer,
+                           sim_decode_s_per_mb=0.052)
+    loader = ConcurrentDataLoader(
+        dataset,
+        LoaderConfig(impl=impl, batch_size=BATCH, num_workers=4,
+                     num_fetch_workers=16),
+        tracer=tracer,
+    )
+    state = init_resnet_train_state(MODEL, _TCFG, jr.PRNGKey(0))
+    step = jitted_step()
+    t0 = time.monotonic()
+    res = raw_train_loop(step, state, loader, epochs=EPOCHS, tracer=tracer,
+                         jit=False)
+    util = accelerator_stats(tracer, t0, time.monotonic())
+    return {
+        "impl": impl,
+        "runtime_s": round(res.wall_s, 2),
+        "img_per_s": round(res.steps * BATCH / res.wall_s, 1),
+        "accel_idle_pct": round(util.util_zero_pct, 1),
+        "loss": round(res.last_metrics["loss"], 4),
+    }
+
+
+def main():
+    print(f"training {MODEL.name} on simulated S3 ({ITEMS} images x {EPOCHS} epochs)\n")
+    rows = [run("vanilla"), run("threaded")]
+    for r in rows:
+        print("  " + "  ".join(f"{k}={v}" for k, v in r.items()))
+    speedup = rows[1]["img_per_s"] / rows[0]["img_per_s"]
+    print(f"\nwithin-batch parallelism speedup on S3: {speedup:.1f}x "
+          f"(paper: ~10x; losses identical -> loaders are bit-compatible)")
+    assert abs(rows[0]["loss"] - rows[1]["loss"]) < 1e-6
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Serve a small LM with continuous batching.
+
+Submits a burst of prompts to the ServeEngine (slot-pooled KV cache,
+per-slot prefill, pooled decode steps, slots refilled as requests finish)
+and reports latency/throughput per request.
+
+    PYTHONPATH=src python examples/serve_lm.py [--arch granite-8b] [--requests 12]
+"""
+import argparse
+
+import jax.random as jr
+import numpy as np
+
+from repro.config import get_arch
+from repro.serve.engine import ServeEngine
+from repro.train.steps import init_params_for
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-8b")
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=24)
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch, smoke=True)
+    params = init_params_for(cfg, jr.PRNGKey(0))
+    engine = ServeEngine(cfg, params, num_slots=args.slots, max_len=128)
+
+    rng = np.random.default_rng(0)
+    for i in range(args.requests):
+        prompt = rng.integers(1, cfg.vocab_size, size=int(rng.integers(4, 17)))
+        engine.submit(prompt, max_new_tokens=args.max_new)
+
+    done = engine.run_until_drained()
+    print(f"arch={cfg.name} slots={args.slots} requests={len(done)} "
+          f"ticks={engine.ticks} tokens={engine.tokens_generated}")
+    for r in sorted(done, key=lambda r: r.uid)[:6]:
+        ttft = (r.t_first_token - r.t_submit) * 1e3
+        total = (r.t_done - r.t_submit) * 1e3
+        print(f"  req {r.uid}: prompt {len(r.prompt):2d} toks -> "
+              f"{len(r.output):2d} new, ttft {ttft:6.1f} ms, total {total:7.1f} ms")
+    assert all(len(r.output) > 0 for r in done)
+    print("continuous batching kept all slots busy; all requests completed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,293 @@
+"""Frozen-dataclass configuration system + registry.
+
+Every run is described by a :class:`RunConfig` tree.  Configs are immutable;
+``replace()`` (re-exported from dataclasses) derives variants.  Architecture
+configs live in ``repro.configs`` and register themselves in ``ARCH_REGISTRY``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field, replace  # noqa: F401  (replace re-exported)
+from typing import Any, Callable, Mapping, Optional, Sequence, Tuple
+
+# ---------------------------------------------------------------------------
+# Model configuration
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class AttentionConfig:
+    """Attention flavour. kind: mha | gqa | mla | none (attention-free)."""
+
+    kind: str = "gqa"
+    num_heads: int = 8
+    num_kv_heads: int = 8
+    head_dim: int = 128
+    # MLA (multi-head latent attention, MiniCPM3/DeepSeek style)
+    q_lora_rank: int = 0
+    kv_lora_rank: int = 0
+    qk_nope_head_dim: int = 0
+    qk_rope_head_dim: int = 0
+    v_head_dim: int = 0
+    causal: bool = True
+    rope: bool = True
+    rope_theta: float = 10_000.0
+
+    @property
+    def q_heads_per_kv(self) -> int:
+        return self.num_heads // max(self.num_kv_heads, 1)
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    """Token-choice top-k mixture of experts."""
+
+    num_experts: int = 8
+    top_k: int = 2
+    expert_d_ff: int = 512
+    num_shared_experts: int = 0
+    shared_d_ff: int = 0
+    router_jitter: float = 0.0
+    load_balance_coef: float = 0.01
+    # dispatch implementation: "einsum" (dense one-hot (g,E,C) dispatch
+    # tensors — simple, but dispatch FLOPs/memory scale with E*C*d and can
+    # dwarf the expert FFN for many-small-expert configs) or "gather"
+    # (scatter/gather routing — O(g*K*d), the optimized path; see §Perf).
+    dispatch: str = "einsum"
+    # token-group size for routing; dispatch memory ~ group*E*capacity (einsum)
+    # or group*top_k*d (gather).  Sized per-arch so groups fit VMEM-scale.
+    group_size: int = 4096
+    # pad the stacked expert weights to this count (0 = no padding) so the
+    # expert dim divides the TP/EP mesh axis: 40 or 60 experts cannot shard
+    # over a 16-wide axis and would silently replicate (16x compute waste);
+    # padded experts receive no tokens and exist only for divisibility.
+    pad_experts_to: int = 0
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    """Mamba-1 selective scan (for jamba) — d_inner = expand * d_model."""
+
+    d_state: int = 16
+    d_conv: int = 4
+    expand: int = 2
+    dt_rank: int = 0  # 0 -> ceil(d_model / 16)
+
+
+@dataclass(frozen=True)
+class RWKVConfig:
+    """RWKV-6 'Finch' data-dependent decay."""
+
+    head_dim: int = 64
+    decay_lora: int = 64
+    token_shift: bool = True
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str = "model"
+    family: str = "decoder"  # decoder | encdec | resnet | rwkv | hybrid
+    num_layers: int = 4
+    d_model: int = 256
+    d_ff: int = 1024
+    vocab_size: int = 32_000
+    attention: Optional[AttentionConfig] = None
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    rwkv: Optional[RWKVConfig] = None
+    mlp: str = "swiglu"  # swiglu | relu2 | gelu
+    norm: str = "rmsnorm"  # rmsnorm | layernorm
+    # hybrid (jamba): per-layer mixer pattern, period repeats over num_layers.
+    # entries: "attn" | "mamba"; moe_period: every k-th layer uses MoE MLP.
+    hybrid_attn_period: int = 0  # 0 = not hybrid; jamba: 8 with attn at index 3
+    hybrid_attn_index: int = 3
+    moe_every_k: int = 0  # 0 = never; jamba: 2
+    # enc-dec
+    num_encoder_layers: int = 0
+    encoder_seq_len: int = 0  # whisper: 1500 frames
+    # vlm stub
+    num_patch_tokens: int = 0  # internvl: 1024 patch embeddings
+    frontend_dim: int = 0  # dim of precomputed frontend embeddings (0 = d_model)
+    # resnet
+    resnet_blocks: Tuple[int, ...] = ()
+    resnet_width: int = 64
+    num_classes: int = 1000
+    image_size: int = 224
+    tie_embeddings: bool = False
+    dtype: str = "bfloat16"
+    param_dtype: str = "float32"
+    remat: bool = True
+    scan_layers: bool = True
+    # which attention implementation the model uses ("ref" | "pallas")
+    attention_impl: str = "ref"
+
+    @property
+    def head_dim(self) -> int:
+        a = self.attention
+        if a is None:
+            return 0
+        if a.kind == "mla":
+            return a.qk_nope_head_dim + a.qk_rope_head_dim
+        return a.head_dim
+
+    def param_count(self) -> int:
+        """Analytic parameter count (used for 6ND model-flops accounting)."""
+        from repro.models.counting import count_params  # lazy, avoids cycle
+
+        return count_params(self)
+
+
+# ---------------------------------------------------------------------------
+# Input shapes (assigned per-arch shape set)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+TRAIN_4K = ShapeConfig("train_4k", 4_096, 256, "train")
+PREFILL_32K = ShapeConfig("prefill_32k", 32_768, 32, "prefill")
+DECODE_32K = ShapeConfig("decode_32k", 32_768, 128, "decode")
+LONG_500K = ShapeConfig("long_500k", 524_288, 1, "decode")
+
+SHAPES: Mapping[str, ShapeConfig] = {
+    s.name: s for s in (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)
+}
+
+# ---------------------------------------------------------------------------
+# Data pipeline configuration (the paper's knobs, Table 4/5)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class StoreConfig:
+    kind: str = "s3sim"  # memory | localfs | s3sim | synth
+    root: str = ""  # for localfs
+    # SimulatedS3 latency model (lognormal) — defaults calibrated so that the
+    # paper's phenomenology reproduces at benchmark scale (see DESIGN.md §2).
+    latency_mean_s: float = 0.08
+    latency_sigma: float = 0.5
+    bandwidth_per_conn: float = 25e6  # bytes/s per connection
+    nic_bandwidth: float = 1.2e9  # bytes/s aggregate
+    max_connections: int = 256
+    failure_rate: float = 0.0
+    # caching layer (paper §2.4; Varnish analogue)
+    cache_bytes: int = 0  # 0 = no cache
+    cache_dir: str = ""  # optional on-disk cache
+
+
+@dataclass(frozen=True)
+class LoaderConfig:
+    impl: str = "threaded"  # vanilla | threaded | asyncio
+    batch_size: int = 256
+    num_workers: int = 4
+    prefetch_factor: int = 4
+    num_fetch_workers: int = 16
+    batch_pool: int = 0  # >0 enables batch disassembly (threaded impl only)
+    lazy_init: bool = True
+    pin_device: bool = False  # device prefetch ring (batch_to_device overlap)
+    device_prefetch: int = 2
+    drop_last: bool = True
+    shuffle: bool = True
+    seed: int = 0
+    # straggler mitigation: hedge a fetch when it exceeds p95 * hedge_factor
+    hedge_requests: bool = False
+    hedge_factor: float = 3.0
+    hedge_min_s: float = 0.05
+    timeout_s: float = 120.0
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    optimizer: str = "adamw"  # adamw | adafactor | sgd
+    learning_rate: float = 1e-3
+    weight_decay: float = 1e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    schedule: str = "cosine"  # cosine | constant | linear
+    total_steps: int = 1000
+    microbatches: int = 1  # grad-accumulation via lax.scan
+    grad_compression: str = "none"  # none | bf16 | int8_ef
+    checkpoint_every: int = 200
+    keep_checkpoints: int = 3
+    log_every_n_steps: int = 10
+    label_smoothing: float = 0.0
+
+
+@dataclass(frozen=True)
+class MeshConfig:
+    shape: Tuple[int, ...] = (16, 16)
+    axes: Tuple[str, ...] = ("data", "model")
+
+    @property
+    def num_devices(self) -> int:
+        n = 1
+        for s in self.shape:
+            n *= s
+        return n
+
+
+SINGLE_POD_MESH = MeshConfig((16, 16), ("data", "model"))
+MULTI_POD_MESH = MeshConfig((2, 16, 16), ("pod", "data", "model"))
+
+
+@dataclass(frozen=True)
+class RunConfig:
+    model: ModelConfig
+    shape: ShapeConfig = TRAIN_4K
+    loader: LoaderConfig = LoaderConfig()
+    store: StoreConfig = StoreConfig()
+    train: TrainConfig = TrainConfig()
+    mesh: MeshConfig = SINGLE_POD_MESH
+
+
+# ---------------------------------------------------------------------------
+# Architecture registry
+# ---------------------------------------------------------------------------
+
+ARCH_REGISTRY: dict[str, Callable[[], ModelConfig]] = {}
+SMOKE_REGISTRY: dict[str, Callable[[], ModelConfig]] = {}
+
+
+def register_arch(name: str, full: Callable[[], ModelConfig], smoke: Callable[[], ModelConfig]) -> None:
+    ARCH_REGISTRY[name] = full
+    SMOKE_REGISTRY[name] = smoke
+
+
+def get_arch(name: str, smoke: bool = False) -> ModelConfig:
+    import repro.configs  # noqa: F401  triggers registration
+
+    reg = SMOKE_REGISTRY if smoke else ARCH_REGISTRY
+    if name not in reg:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(reg)}")
+    return reg[name]()
+
+
+def list_archs() -> list[str]:
+    import repro.configs  # noqa: F401
+
+    return sorted(ARCH_REGISTRY)
+
+
+def arch_shapes(cfg: ModelConfig) -> list[ShapeConfig]:
+    """Which of the four assigned shapes apply to this architecture.
+
+    long_500k needs sub-quadratic attention: run for SSM/hybrid archs
+    (rwkv6, jamba), skip for pure full-attention archs (noted in DESIGN.md).
+    resnet uses its own image shapes and is the paper's own model, not one of
+    the 40 assigned cells.
+    """
+    if cfg.family == "resnet":
+        return [TRAIN_4K]
+    shapes = [TRAIN_4K, PREFILL_32K, DECODE_32K]
+    if cfg.family in ("rwkv", "hybrid"):
+        shapes.append(LONG_500K)
+    return shapes

@@ -1,0 +1,1 @@
+"""Core: the paper's concurrent data-loading contribution."""

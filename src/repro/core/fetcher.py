@@ -1,0 +1,213 @@
+"""Fetcher layer — the paper's §2.2 contribution.
+
+The stock loader fetches the items of a batch *sequentially*
+(:class:`SequentialFetcher` = ``_MapDatasetFetcher``).  We add the two
+concurrent variants from the paper:
+
+* :class:`ThreadPoolFetcher`  (= ``_ThreadedMapDatasetFetcher``) — a
+  per-worker ``ThreadPoolExecutor`` with ``num_fetch_workers`` threads.
+* :class:`AsyncioFetcher`     (= ``_AsyncMapDatasetFetcher``) — a per-worker
+  event loop running ``num_fetch_workers``-bounded concurrent tasks against
+  the dataset's async path.
+
+Beyond the paper (fault tolerance at the data layer): transparent retry of
+transient store errors and *hedged requests* — when a fetch exceeds a
+p95-tracked deadline a duplicate is issued and the first response wins
+(straggler mitigation for 1000-node deployments where tail GETs stall a
+whole global batch).
+"""
+from __future__ import annotations
+
+import asyncio
+import threading
+from collections import deque
+from concurrent.futures import FIRST_COMPLETED, ThreadPoolExecutor, wait
+from typing import Any, Dict, List, Optional, Sequence
+
+from repro.data.dataset import Item, MapDataset
+from repro.data.store import TransientStoreError
+
+MAX_RETRIES = 3
+
+
+class FetchError(RuntimeError):
+    pass
+
+
+class HedgeTracker:
+    """Tracks recent fetch durations; deadline = max(min_s, p95 * factor)."""
+
+    def __init__(self, factor: float = 3.0, min_s: float = 0.05, window: int = 256) -> None:
+        self.factor = factor
+        self.min_s = min_s
+        self._durs: deque = deque(maxlen=window)
+        self._lock = threading.Lock()
+        self.hedges_issued = 0
+        self.hedges_won = 0
+
+    def observe(self, dur: float) -> None:
+        with self._lock:
+            self._durs.append(dur)
+
+    def deadline(self) -> float:
+        with self._lock:
+            if len(self._durs) < 8:
+                return max(self.min_s, 1.0)
+            xs = sorted(self._durs)
+            p95 = xs[min(len(xs) - 1, int(0.95 * len(xs)))]
+        return max(self.min_s, p95 * self.factor)
+
+
+def _fetch_one_with_retry(dataset: MapDataset, index: int) -> Item:
+    err: Optional[Exception] = None
+    for _ in range(MAX_RETRIES):
+        try:
+            return dataset[index]
+        except TransientStoreError as e:  # injected/transient — retry
+            err = e
+    raise FetchError(f"item {index} failed after {MAX_RETRIES} retries") from err
+
+
+class Fetcher:
+    """fetch(dataset, indices) -> items in the requested order."""
+
+    name = "base"
+
+    def fetch(self, dataset: MapDataset, indices: Sequence[int]) -> List[Item]:
+        raise NotImplementedError
+
+    def close(self) -> None:
+        pass
+
+
+class SequentialFetcher(Fetcher):
+    """The vanilla PyTorch behaviour: items of a batch fetched one by one."""
+
+    name = "sequential"
+
+    def fetch(self, dataset: MapDataset, indices: Sequence[int]) -> List[Item]:
+        return [_fetch_one_with_retry(dataset, i) for i in indices]
+
+
+class ThreadPoolFetcher(Fetcher):
+    """Within-batch parallelism via a thread pool (+ optional hedging)."""
+
+    name = "threaded"
+
+    def __init__(
+        self,
+        num_fetch_workers: int = 16,
+        hedge: Optional[HedgeTracker] = None,
+    ) -> None:
+        self.num_fetch_workers = num_fetch_workers
+        self.hedge = hedge
+        self._pool = ThreadPoolExecutor(
+            max_workers=num_fetch_workers, thread_name_prefix="fetcher"
+        )
+
+    def _fetch_one(self, dataset: MapDataset, index: int) -> Item:
+        if self.hedge is None:
+            return _fetch_one_with_retry(dataset, index)
+        import time
+
+        t0 = time.monotonic()
+        primary = self._pool.submit(_fetch_one_with_retry, dataset, index)
+        done, _ = wait([primary], timeout=self.hedge.deadline())
+        if done:
+            self.hedge.observe(time.monotonic() - t0)
+            return primary.result()
+        # straggler: issue a duplicate request, first response wins
+        self.hedge.hedges_issued += 1
+        secondary = self._pool.submit(_fetch_one_with_retry, dataset, index)
+        done, _ = wait([primary, secondary], return_when=FIRST_COMPLETED)
+        winner = done.pop()
+        if winner is secondary:
+            self.hedge.hedges_won += 1
+        self.hedge.observe(time.monotonic() - t0)
+        return winner.result()
+
+    def fetch(self, dataset: MapDataset, indices: Sequence[int]) -> List[Item]:
+        if self.hedge is not None:
+            # hedged: submit wrappers directly on the caller thread so the
+            # pool has headroom for duplicates.
+            futures = [self._pool.submit(_fetch_one_with_retry, dataset, i) for i in indices]
+            return self._gather_hedged(dataset, indices, futures)
+        futures = [self._pool.submit(_fetch_one_with_retry, dataset, i) for i in indices]
+        return [f.result() for f in futures]
+
+    def _gather_hedged(self, dataset, indices, futures) -> List[Item]:
+        import time
+
+        out: List[Optional[Item]] = [None] * len(indices)
+        for pos, (i, fut) in enumerate(zip(indices, futures)):
+            t0 = time.monotonic()
+            done, _ = wait([fut], timeout=self.hedge.deadline())
+            if not done:
+                self.hedge.hedges_issued += 1
+                dup = self._pool.submit(_fetch_one_with_retry, dataset, i)
+                done, _ = wait([fut, dup], return_when=FIRST_COMPLETED)
+                winner = done.pop()
+                if winner is dup:
+                    self.hedge.hedges_won += 1
+                out[pos] = winner.result()
+            else:
+                out[pos] = fut.result()
+            self.hedge.observe(time.monotonic() - t0)
+        return out  # type: ignore[return-value]
+
+    def close(self) -> None:
+        self._pool.shutdown(wait=False, cancel_futures=True)
+
+
+class AsyncioFetcher(Fetcher):
+    """Within-batch concurrency on a single thread via asyncio."""
+
+    name = "asyncio"
+
+    def __init__(self, num_fetch_workers: int = 16) -> None:
+        self.num_fetch_workers = num_fetch_workers
+        self._loop = asyncio.new_event_loop()
+        self._thread = threading.Thread(
+            target=self._loop.run_forever, name="asyncio-fetcher", daemon=True
+        )
+        self._thread.start()
+
+    async def _afetch_one(self, dataset: MapDataset, index: int,
+                          sem: asyncio.Semaphore) -> Item:
+        err: Optional[Exception] = None
+        async with sem:
+            for _ in range(MAX_RETRIES):
+                try:
+                    return await dataset.aget_item(index)
+                except TransientStoreError as e:
+                    err = e
+        raise FetchError(f"item {index} failed after {MAX_RETRIES} retries") from err
+
+    async def _afetch(self, dataset: MapDataset, indices: Sequence[int]) -> List[Item]:
+        sem = asyncio.Semaphore(self.num_fetch_workers)
+        tasks = [
+            asyncio.ensure_future(self._afetch_one(dataset, i, sem)) for i in indices
+        ]
+        # results arrive out of order; gather restores the requested order
+        return list(await asyncio.gather(*tasks))
+
+    def fetch(self, dataset: MapDataset, indices: Sequence[int]) -> List[Item]:
+        fut = asyncio.run_coroutine_threadsafe(self._afetch(dataset, indices), self._loop)
+        return fut.result()
+
+    def close(self) -> None:
+        self._loop.call_soon_threadsafe(self._loop.stop)
+        self._thread.join(timeout=5)
+        if not self._loop.is_running():
+            self._loop.close()
+
+
+def make_fetcher(impl: str, num_fetch_workers: int,
+                 hedge: Optional[HedgeTracker] = None) -> Fetcher:
+    if impl == "vanilla":
+        return SequentialFetcher()
+    if impl == "threaded":
+        return ThreadPoolFetcher(num_fetch_workers, hedge=hedge)
+    if impl == "asyncio":
+        return AsyncioFetcher(num_fetch_workers)
+    raise ValueError(f"unknown fetcher impl {impl!r}")

@@ -1,0 +1,87 @@
+"""Device prefetch ring — the TPU analogue of pinned memory + async H2D.
+
+Wraps a host-batch iterator; a background thread `jax.device_put`s the next
+``depth`` batches (optionally with a NamedSharding so each host only
+materializes its addressable shards) while the current step runs.  Records
+``batch_to_device`` spans (paper Fig. 1/2 magenta lane).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Any, Iterator, Optional
+
+import jax
+
+from repro.core.tracing import BATCH_TO_DEVICE, NULL_TRACER, Tracer
+
+
+class _End:
+    pass
+
+
+class _Err:
+    def __init__(self, exc: BaseException) -> None:
+        self.exc = exc
+
+
+class DevicePrefetchRing:
+    def __init__(
+        self,
+        it: Iterator[Any],
+        *,
+        depth: int = 2,
+        sharding: Optional[jax.sharding.Sharding] = None,
+        tracer: Tracer = NULL_TRACER,
+    ) -> None:
+        self.it = it
+        self.depth = max(1, depth)
+        self.sharding = sharding
+        self.tracer = tracer
+        self._q: "queue.Queue" = queue.Queue(maxsize=self.depth)
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._run, name="device-prefetch", daemon=True)
+        self._thread.start()
+
+    def _put_device(self, batch: Any) -> Any:
+        with self.tracer.span(BATCH_TO_DEVICE):
+            if self.sharding is not None:
+                dev = jax.tree.map(lambda x: jax.device_put(x, self.sharding), batch)
+            else:
+                dev = jax.tree.map(jax.device_put, batch)
+            # block until the transfer lands so the span is honest
+            jax.tree.map(
+                lambda x: x.block_until_ready() if hasattr(x, "block_until_ready") else x,
+                dev,
+            )
+            return dev
+
+    def _run(self) -> None:
+        try:
+            for batch in self.it:
+                if self._stop.is_set():
+                    return
+                dev = self._put_device(batch)
+                while not self._stop.is_set():
+                    try:
+                        self._q.put(dev, timeout=0.1)
+                        break
+                    except queue.Full:
+                        continue
+            self._q.put(_End())
+        except BaseException as e:  # propagate
+            self._q.put(_Err(e))
+
+    def __iter__(self) -> "DevicePrefetchRing":
+        return self
+
+    def __next__(self) -> Any:
+        item = self._q.get()
+        if isinstance(item, _End):
+            raise StopIteration
+        if isinstance(item, _Err):
+            raise item.exc
+        return item
+
+    def close(self) -> None:
+        self._stop.set()

@@ -1,0 +1,204 @@
+"""Dataset layer (paper Fig. 1 bottom lane): maps an index to one training
+item fetched from an ObjectStore, then decodes + augments it.
+
+``sim_decode_s_per_mb`` models the libjpeg decode cost (GIL-releasing C
+work) with a byte-proportional sleep, the same simulation philosophy as
+SimulatedS3Store models the network: the paper's ~6 ms/115 kB ImageNet JPEG
+decode is ~52 ms/MB.  It is what makes local ("scratch") items cost
+milliseconds and what within-batch parallelism can overlap on scratch
+(paper Fig. 14's 3x scratch batch-load reduction).  Default 0 (off).
+
+The Dataset is deliberately isolated from the loader (paper §3.2) — it can be
+driven directly (``get_random_item``) for the Fig. 12 pool-size sweep.  Both a
+sync ``__getitem__`` and an async ``aget_item`` are provided so the Asyncio
+fetcher can issue truly concurrent GETs.
+"""
+from __future__ import annotations
+
+import hashlib
+import time
+from typing import Any, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.tracing import GET_ITEM, NULL_TRACER, Tracer
+from repro.data import codec
+from repro.data.augment import imagenet_transform
+from repro.data.imagenet_synth import item_key
+from repro.data.store import ObjectStore
+
+Item = Dict[str, np.ndarray]
+
+
+class MapDataset:
+    """Minimal map-style dataset protocol."""
+
+    def __len__(self) -> int:
+        raise NotImplementedError
+
+    def __getitem__(self, index: int) -> Item:
+        raise NotImplementedError
+
+    async def aget_item(self, index: int) -> Item:
+        """Async variant; default falls back to the sync path."""
+        return self[index]
+
+    def set_epoch(self, epoch: int) -> None:
+        """Hook for per-epoch augmentation determinism."""
+
+
+def _aug_rng(seed: int, epoch: int, index: int) -> np.random.Generator:
+    h = hashlib.blake2b(f"aug:{seed}:{epoch}:{index}".encode(), digest_size=8).digest()
+    return np.random.default_rng(int.from_bytes(h, "little"))
+
+
+class ImageDataset(MapDataset):
+    """ImageNet-style dataset over an ObjectStore (paper's setup)."""
+
+    def __init__(
+        self,
+        store: ObjectStore,
+        num_items: int,
+        prefix: str = "imagenet/train/",
+        out_size: int = 224,
+        augment: bool = True,
+        seed: int = 0,
+        tracer: Tracer = NULL_TRACER,
+        sim_decode_s_per_mb: float = 0.0,
+    ) -> None:
+        self.store = store
+        self.num_items = num_items
+        self.prefix = prefix
+        self.out_size = out_size
+        self.augment = augment
+        self.seed = seed
+        self.tracer = tracer
+        self.sim_decode_s_per_mb = sim_decode_s_per_mb
+        self._epoch = 0
+
+    def set_epoch(self, epoch: int) -> None:
+        self._epoch = epoch
+
+    def __len__(self) -> int:
+        return self.num_items
+
+    def _decode(self, raw: bytes, index: int) -> Item:
+        if self.sim_decode_s_per_mb:
+            # emulated C-decoder cost: sleeps release the GIL like libjpeg
+            time.sleep(self.sim_decode_s_per_mb * len(raw) / 1e6)
+        rec = codec.decode_image(raw)
+        if self.augment:
+            rng = _aug_rng(self.seed, self._epoch, index)
+            img = imagenet_transform(rec.pixels, rng, self.out_size)
+        else:
+            side = self.out_size
+            px = rec.pixels[:side, :side]
+            pad_h, pad_w = side - px.shape[0], side - px.shape[1]
+            if pad_h > 0 or pad_w > 0:
+                px = np.pad(px, ((0, max(pad_h, 0)), (0, max(pad_w, 0)), (0, 0)))
+            img = np.ascontiguousarray(px.transpose(2, 0, 1)).astype(np.float32) / 255.0
+        return {
+            "image": img,
+            "label": np.int32(rec.label),
+            "nbytes": np.int64(len(raw)),
+        }
+
+    def __getitem__(self, index: int) -> Item:
+        key = item_key(index, self.prefix)
+        with self.tracer.span(GET_ITEM, index=index):
+            raw = self.store.get(key)
+            return self._decode(raw, index)
+
+    async def aget_item(self, index: int) -> Item:
+        key = item_key(index, self.prefix)
+        with self.tracer.span(GET_ITEM, index=index):
+            raw = await self.store.aget(key)
+            return self._decode(raw, index)
+
+    def get_random_item(self, rng: np.random.Generator) -> Item:
+        """Paper §3.2 Dataset-layer benchmark access pattern."""
+        return self[int(rng.integers(0, self.num_items))]
+
+
+class TokenDataset(MapDataset):
+    """Packed-sequence LM dataset: one object = one packed token sequence."""
+
+    def __init__(
+        self,
+        store: ObjectStore,
+        num_items: int,
+        seq_len: int,
+        prefix: str = "tokens/train/",
+        tracer: Tracer = NULL_TRACER,
+    ) -> None:
+        self.store = store
+        self.num_items = num_items
+        self.seq_len = seq_len
+        self.prefix = prefix
+        self.tracer = tracer
+
+    def key(self, index: int) -> str:
+        return f"{self.prefix}{index:08d}.rtok"
+
+    def __len__(self) -> int:
+        return self.num_items
+
+    def _decode(self, raw: bytes) -> Item:
+        toks = codec.decode_tokens(raw)
+        assert toks.shape[0] >= self.seq_len + 1, "sequence too short"
+        return {
+            "tokens": toks[: self.seq_len].astype(np.int32),
+            "targets": toks[1 : self.seq_len + 1].astype(np.int32),
+            "nbytes": np.int64(len(raw)),
+        }
+
+    def __getitem__(self, index: int) -> Item:
+        with self.tracer.span(GET_ITEM, index=index):
+            return self._decode(self.store.get(self.key(index)))
+
+    async def aget_item(self, index: int) -> Item:
+        with self.tracer.span(GET_ITEM, index=index):
+            return self._decode(await self.store.aget(self.key(index)))
+
+
+class SyntheticTokenDataset(MapDataset):
+    """Deterministic on-the-fly token sequences (no store; for model tests)."""
+
+    def __init__(self, num_items: int, seq_len: int, vocab_size: int, seed: int = 0) -> None:
+        self.num_items = num_items
+        self.seq_len = seq_len
+        self.vocab_size = vocab_size
+        self.seed = seed
+
+    def __len__(self) -> int:
+        return self.num_items
+
+    def __getitem__(self, index: int) -> Item:
+        rng = np.random.default_rng(self.seed * 1_000_003 + index)
+        toks = rng.integers(0, self.vocab_size, size=self.seq_len + 1, dtype=np.int32)
+        return {"tokens": toks[:-1], "targets": toks[1:], "nbytes": np.int64(toks.nbytes)}
+
+
+def build_token_store(
+    store: ObjectStore,
+    num_items: int,
+    seq_len: int,
+    vocab_size: int,
+    prefix: str = "tokens/train/",
+    seed: int = 0,
+) -> None:
+    """Materialize packed token sequences into a store."""
+    for i in range(num_items):
+        rng = np.random.default_rng(seed * 1_000_003 + i)
+        toks = rng.integers(0, vocab_size, size=seq_len + 1, dtype=np.int32)
+        store.put(f"{prefix}{i:08d}.rtok", codec.encode_tokens(toks))
+
+
+def collate(items: Sequence[Item]) -> Item:
+    """Stack a list of items into a batch (numpy; device_put happens later)."""
+    assert items, "empty batch"
+    out: Item = {}
+    for k in items[0]:
+        vals = [it[k] for it in items]
+        out[k] = np.stack(vals) if np.ndim(vals[0]) else np.asarray(vals)
+    return out

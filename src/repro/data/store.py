@@ -1,0 +1,425 @@
+"""Object-store abstraction: the paper's storage axis (scratch vs S3).
+
+``ObjectStore`` is the minimal S3-like interface (GET/PUT/LIST).  Concrete
+backends:
+
+* :class:`InMemoryStore`       — dict-backed "scratch" (fast local path).
+* :class:`LocalFSStore`        — directory of files ("scratch" on real disks).
+* :class:`SimulatedS3Store`    — wraps any store with a calibrated network
+  model: per-GET lognormal latency, per-connection bandwidth, an aggregate
+  NIC cap and a bounded connection pool.  Reproduces the latency-vs-
+  concurrency phenomenology of real S3 on CPU-only CI.  A real S3 backend
+  (boto3) would subclass ``ObjectStore`` with the same interface.
+* :class:`CachedStore`         — bounded LRU byte cache (Varnish analogue,
+  paper §2.4) with hit/miss statistics.
+* :class:`DiskCacheStore`      — optional on-disk cache tier.
+
+Both sync ``get`` and async ``aget`` are provided; the simulated network
+sleeps with ``time.sleep`` (releases the GIL — I/O-like) or ``asyncio.sleep``.
+"""
+from __future__ import annotations
+
+import asyncio
+import hashlib
+import os
+import random
+import threading
+import time
+from abc import ABC, abstractmethod
+from collections import OrderedDict
+from dataclasses import dataclass
+from typing import Dict, Iterable, List, Optional
+
+from repro.config import StoreConfig
+
+
+class StoreError(RuntimeError):
+    pass
+
+
+class KeyNotFound(StoreError):
+    pass
+
+
+class TransientStoreError(StoreError):
+    """Retryable failure (injected by the failure model)."""
+
+
+class ObjectStore(ABC):
+    """S3-like blob interface."""
+
+    @abstractmethod
+    def get(self, key: str) -> bytes: ...
+
+    @abstractmethod
+    def put(self, key: str, data: bytes) -> None: ...
+
+    @abstractmethod
+    def list_keys(self, prefix: str = "") -> List[str]: ...
+
+    def size(self, key: str) -> int:
+        return len(self.get(key))
+
+    async def aget(self, key: str) -> bytes:
+        """Async GET; default delegates to a thread so sync stores still work."""
+        return await asyncio.get_running_loop().run_in_executor(None, self.get, key)
+
+    def close(self) -> None:
+        pass
+
+
+class InMemoryStore(ObjectStore):
+    def __init__(self) -> None:
+        self._data: Dict[str, bytes] = {}
+        self._lock = threading.Lock()
+
+    def get(self, key: str) -> bytes:
+        with self._lock:
+            try:
+                return self._data[key]
+            except KeyError:
+                raise KeyNotFound(key) from None
+
+    def put(self, key: str, data: bytes) -> None:
+        with self._lock:
+            self._data[key] = bytes(data)
+
+    def list_keys(self, prefix: str = "") -> List[str]:
+        with self._lock:
+            return sorted(k for k in self._data if k.startswith(prefix))
+
+    def size(self, key: str) -> int:
+        with self._lock:
+            try:
+                return len(self._data[key])
+            except KeyError:
+                raise KeyNotFound(key) from None
+
+
+class LocalFSStore(ObjectStore):
+    """Directory-of-files store ("scratch" local drives in the paper)."""
+
+    def __init__(self, root: str) -> None:
+        self.root = root
+        os.makedirs(root, exist_ok=True)
+
+    def _path(self, key: str) -> str:
+        safe = key.replace("/", "__")
+        return os.path.join(self.root, safe)
+
+    def get(self, key: str) -> bytes:
+        try:
+            with open(self._path(key), "rb") as f:
+                return f.read()
+        except FileNotFoundError:
+            raise KeyNotFound(key) from None
+
+    def put(self, key: str, data: bytes) -> None:
+        tmp = self._path(key) + ".tmp"
+        with open(tmp, "wb") as f:
+            f.write(data)
+        os.replace(tmp, self._path(key))
+
+    def list_keys(self, prefix: str = "") -> List[str]:
+        safe_prefix = prefix.replace("/", "__")
+        return sorted(
+            k.replace("__", "/")
+            for k in os.listdir(self.root)
+            if k.startswith(safe_prefix) and not k.endswith(".tmp")
+        )
+
+    def size(self, key: str) -> int:
+        try:
+            return os.path.getsize(self._path(key))
+        except FileNotFoundError:
+            raise KeyNotFound(key) from None
+
+
+# ---------------------------------------------------------------------------
+# Simulated S3
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class StoreStats:
+    gets: int = 0
+    bytes_read: int = 0
+    failures: int = 0
+    total_wait_s: float = 0.0
+
+    def snapshot(self) -> "StoreStats":
+        return StoreStats(self.gets, self.bytes_read, self.failures, self.total_wait_s)
+
+
+class SimulatedS3Store(ObjectStore):
+    """Network model around a backing store.
+
+    GET time = connection-pool wait + lognormal latency + size / bandwidth,
+    where bandwidth = min(per-connection bw, NIC bw / concurrent transfers).
+    Deterministic per (seed, key, attempt) so experiments are reproducible.
+    """
+
+    def __init__(
+        self,
+        base: ObjectStore,
+        latency_mean_s: float = 0.08,
+        latency_sigma: float = 0.5,
+        bandwidth_per_conn: float = 25e6,
+        nic_bandwidth: float = 1.2e9,
+        max_connections: int = 256,
+        failure_rate: float = 0.0,
+        seed: int = 0,
+        time_scale: float = 1.0,
+    ) -> None:
+        self.base = base
+        self.latency_mean_s = latency_mean_s
+        self.latency_sigma = latency_sigma
+        self.bandwidth_per_conn = bandwidth_per_conn
+        self.nic_bandwidth = nic_bandwidth
+        self.max_connections = max_connections
+        self.failure_rate = failure_rate
+        self.seed = seed
+        self.time_scale = time_scale
+        self._sem = threading.BoundedSemaphore(max_connections)
+        self._async_sems: Dict[int, asyncio.Semaphore] = {}
+        self._active = 0
+        self._active_lock = threading.Lock()
+        self._stats = StoreStats()
+        self._stats_lock = threading.Lock()
+        self._attempt: Dict[str, int] = {}
+        self._attempt_lock = threading.Lock()
+
+    # -- deterministic stochastic model -------------------------------------
+    def _next_attempt(self, key: str) -> int:
+        with self._attempt_lock:
+            n = self._attempt.get(key, 0)
+            self._attempt[key] = n + 1
+            return n
+
+    def _rng(self, key: str, attempt: int) -> random.Random:
+        h = hashlib.blake2b(
+            f"{self.seed}:{key}:{attempt}".encode(), digest_size=8
+        ).digest()
+        return random.Random(int.from_bytes(h, "little"))
+
+    def _sample(self, key: str, size: int) -> tuple[float, bool]:
+        """Return (service time seconds, fail?) for one GET."""
+        attempt = self._next_attempt(key)
+        rng = self._rng(key, attempt)
+        fail = rng.random() < self.failure_rate
+        lat = rng.lognormvariate(0.0, self.latency_sigma) * self.latency_mean_s
+        with self._active_lock:
+            active = max(self._active, 1)
+        bw = min(self.bandwidth_per_conn, self.nic_bandwidth / active)
+        xfer = size / bw
+        return (lat + xfer) * self.time_scale, fail
+
+    def _enter(self) -> None:
+        with self._active_lock:
+            self._active += 1
+
+    def _exit(self) -> None:
+        with self._active_lock:
+            self._active -= 1
+
+    def _bump(self, size: int, wait: float, failed: bool) -> None:
+        with self._stats_lock:
+            self._stats.gets += 1
+            self._stats.total_wait_s += wait
+            if failed:
+                self._stats.failures += 1
+            else:
+                self._stats.bytes_read += size
+
+    # -- sync path -----------------------------------------------------------
+    def get(self, key: str) -> bytes:
+        with self._sem:  # connection pool
+            self._enter()
+            try:
+                data = self.base.get(key)
+                dt, fail = self._sample(key, len(data))
+                time.sleep(dt)
+                self._bump(len(data), dt, fail)
+                if fail:
+                    raise TransientStoreError(f"simulated GET failure for {key}")
+                return data
+            finally:
+                self._exit()
+
+    # -- async path ----------------------------------------------------------
+    def _loop_sem(self) -> asyncio.Semaphore:
+        loop = asyncio.get_running_loop()
+        key = id(loop)
+        if key not in self._async_sems:
+            self._async_sems[key] = asyncio.Semaphore(self.max_connections)
+        return self._async_sems[key]
+
+    async def aget(self, key: str) -> bytes:
+        async with self._loop_sem():
+            self._enter()
+            try:
+                data = self.base.get(key)  # backing read is in-memory/fast
+                dt, fail = self._sample(key, len(data))
+                await asyncio.sleep(dt)
+                self._bump(len(data), dt, fail)
+                if fail:
+                    raise TransientStoreError(f"simulated GET failure for {key}")
+                return data
+            finally:
+                self._exit()
+
+    def put(self, key: str, data: bytes) -> None:
+        self.base.put(key, data)
+
+    def list_keys(self, prefix: str = "") -> List[str]:
+        return self.base.list_keys(prefix)
+
+    def size(self, key: str) -> int:
+        return self.base.size(key)
+
+    @property
+    def stats(self) -> StoreStats:
+        with self._stats_lock:
+            return self._stats.snapshot()
+
+
+# ---------------------------------------------------------------------------
+# Caches
+# ---------------------------------------------------------------------------
+
+
+class CachedStore(ObjectStore):
+    """Bounded LRU byte cache in front of a slower store (Varnish analogue)."""
+
+    def __init__(self, base: ObjectStore, capacity_bytes: int) -> None:
+        self.base = base
+        self.capacity = capacity_bytes
+        self._lru: "OrderedDict[str, bytes]" = OrderedDict()
+        self._used = 0
+        self._lock = threading.Lock()
+        self.hits = 0
+        self.misses = 0
+
+    def _cache_get(self, key: str) -> Optional[bytes]:
+        with self._lock:
+            if key in self._lru:
+                self._lru.move_to_end(key)
+                self.hits += 1
+                return self._lru[key]
+            self.misses += 1
+            return None
+
+    def _cache_put(self, key: str, data: bytes) -> None:
+        if len(data) > self.capacity:
+            return
+        with self._lock:
+            if key in self._lru:
+                return
+            self._lru[key] = data
+            self._used += len(data)
+            while self._used > self.capacity:
+                _, ev = self._lru.popitem(last=False)
+                self._used -= len(ev)
+
+    def get(self, key: str) -> bytes:
+        data = self._cache_get(key)
+        if data is not None:
+            return data
+        data = self.base.get(key)
+        self._cache_put(key, data)
+        return data
+
+    async def aget(self, key: str) -> bytes:
+        data = self._cache_get(key)
+        if data is not None:
+            return data
+        data = await self.base.aget(key)
+        self._cache_put(key, data)
+        return data
+
+    def put(self, key: str, data: bytes) -> None:
+        self.base.put(key, data)
+
+    def list_keys(self, prefix: str = "") -> List[str]:
+        return self.base.list_keys(prefix)
+
+    def size(self, key: str) -> int:
+        return self.base.size(key)
+
+    @property
+    def hit_rate(self) -> float:
+        tot = self.hits + self.misses
+        return self.hits / tot if tot else 0.0
+
+
+class DiskCacheStore(ObjectStore):
+    """On-disk cache tier (unbounded; the bench bounds the dataset instead)."""
+
+    def __init__(self, base: ObjectStore, cache_dir: str) -> None:
+        self.base = base
+        self.dir = cache_dir
+        os.makedirs(cache_dir, exist_ok=True)
+        self.hits = 0
+        self.misses = 0
+        self._lock = threading.Lock()
+
+    def _path(self, key: str) -> str:
+        return os.path.join(self.dir, hashlib.sha1(key.encode()).hexdigest())
+
+    def get(self, key: str) -> bytes:
+        p = self._path(key)
+        try:
+            with open(p, "rb") as f:
+                data = f.read()
+            with self._lock:
+                self.hits += 1
+            return data
+        except FileNotFoundError:
+            pass
+        with self._lock:
+            self.misses += 1
+        data = self.base.get(key)
+        tmp = p + f".tmp{threading.get_ident()}"
+        with open(tmp, "wb") as f:
+            f.write(data)
+        os.replace(tmp, p)
+        return data
+
+    def put(self, key: str, data: bytes) -> None:
+        self.base.put(key, data)
+
+    def list_keys(self, prefix: str = "") -> List[str]:
+        return self.base.list_keys(prefix)
+
+
+# ---------------------------------------------------------------------------
+# Factory
+# ---------------------------------------------------------------------------
+
+
+def build_store(cfg: StoreConfig, base: Optional[ObjectStore] = None,
+                time_scale: float = 1.0, seed: int = 0) -> ObjectStore:
+    """Assemble the store stack described by a StoreConfig."""
+    if base is None:
+        if cfg.kind == "localfs":
+            base = LocalFSStore(cfg.root)
+        else:
+            base = InMemoryStore()
+    store: ObjectStore = base
+    if cfg.kind == "s3sim":
+        store = SimulatedS3Store(
+            store,
+            latency_mean_s=cfg.latency_mean_s,
+            latency_sigma=cfg.latency_sigma,
+            bandwidth_per_conn=cfg.bandwidth_per_conn,
+            nic_bandwidth=cfg.nic_bandwidth,
+            max_connections=cfg.max_connections,
+            failure_rate=cfg.failure_rate,
+            seed=seed,
+            time_scale=time_scale,
+        )
+    if cfg.cache_dir:
+        store = DiskCacheStore(store, cfg.cache_dir)
+    if cfg.cache_bytes:
+        store = CachedStore(store, cfg.cache_bytes)
+    return store

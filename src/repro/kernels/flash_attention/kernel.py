@@ -1,0 +1,121 @@
+"""Blocked causal attention (flash-style) Pallas TPU kernel.
+
+TPU adaptation of the GPU flash algorithm: instead of a warp-level softmax
+with shared-memory tiles, we use the canonical TPU formulation — a 3-D grid
+``(batch*heads, q_blocks, kv_blocks)`` where the innermost kv dimension is a
+*sequential* revisit of the same output block.  Online-softmax statistics
+(m, l) and the fp32 accumulator live in VMEM scratch between kv iterations;
+``@pl.when(kv==0)`` initializes, ``@pl.when(kv==last)`` finalizes and writes
+the output tile.  Block shapes (BLOCK_Q x D, BLOCK_K x D) are MXU-aligned
+(multiples of 128 in the lane dim via D; 128 rows feed the 128x128 MXU).
+
+Memory: O(S) per core (one q tile + one kv tile + accumulator) — this is
+what makes prefill_32k lowerable where dense S^2 scores would need 4 GiB.
+Causality skips fully-masked kv blocks via ``pl.when`` (upper-triangle tiles
+cost a predicate, not a matmul).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BLOCK_Q = 128
+BLOCK_K = 128
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  causal: bool, sm_scale: float, block_q: int, block_k: int,
+                  kv_blocks: int, q_offset: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_pos = qi * block_q + jax.lax.iota(jnp.int32, block_q) + q_offset  # global q rows
+    k_pos = ki * block_k + jax.lax.iota(jnp.int32, block_k)
+
+    # skip tiles strictly above the causal diagonal
+    run = True
+    if causal:
+        run = (ki * block_k) <= (qi * block_q + block_q - 1 + q_offset)
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0].astype(jnp.float32)  # (bq, D)
+        k = k_ref[0].astype(jnp.float32)  # (bk, D)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * sm_scale  # (bq, bk)
+        if causal:
+            mask = k_pos[None, :] <= q_pos[:, None]
+            s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_new
+
+    @pl.when(ki == kv_blocks - 1)
+    def _final():
+        l = jnp.maximum(l_ref[...], 1e-20)
+        o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_bh(
+    q: jnp.ndarray,  # (BH, S, D)
+    k: jnp.ndarray,  # (BH, T, D)
+    v: jnp.ndarray,  # (BH, T, D)
+    *,
+    causal: bool = True,
+    block_q: int = BLOCK_Q,
+    block_k: int = BLOCK_K,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    BH, S, D = q.shape
+    T = k.shape[1]
+    block_q = min(block_q, S)
+    block_k = min(block_k, T)
+    assert S % block_q == 0 and T % block_k == 0
+    grid = (BH, S // block_q, T // block_k)
+    sm_scale = 1.0 / math.sqrt(D)
+    kernel = functools.partial(
+        _flash_kernel,
+        causal=causal,
+        sm_scale=sm_scale,
+        block_q=block_q,
+        block_k=block_k,
+        kv_blocks=T // block_k,
+        q_offset=T - S if causal else 0,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, D), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, D), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, D), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, D), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, D), jnp.float32),  # fp32 accumulator
+            pltpu.VMEM((block_q,), jnp.float32),  # running max m
+            pltpu.VMEM((block_q,), jnp.float32),  # running denom l
+        ],
+        interpret=interpret,
+    )(q, k, v)

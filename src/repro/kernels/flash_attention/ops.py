@@ -1,0 +1,49 @@
+"""Jit-able wrapper: (B,H,S,D) layout, GQA head expansion, seq padding."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import BLOCK_K, BLOCK_Q, flash_attention_bh
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "interpret", "block_q", "block_k")
+)
+def flash_attention(
+    q: jnp.ndarray,  # (B, Hq, S, D)
+    k: jnp.ndarray,  # (B, Hkv, T, D)
+    v: jnp.ndarray,  # (B, Hkv, T, D)
+    causal: bool = True,
+    interpret: bool = False,
+    block_q: int = BLOCK_Q,
+    block_k: int = BLOCK_K,
+) -> jnp.ndarray:
+    B, Hq, S, D = q.shape
+    Hkv = k.shape[1]
+    if Hkv != Hq:  # GQA: expand kv heads to query heads
+        G = Hq // Hkv
+        k = jnp.repeat(k, G, axis=1)
+        v = jnp.repeat(v, G, axis=1)
+    bq = min(block_q, S)
+    bk = min(block_k, k.shape[2])
+    pad_q = (-S) % bq
+    pad_k = (-k.shape[2]) % bk
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        # pad keys at the FRONT would break causal offset; pad at the end and
+        # rely on causal masking (padded keys are in the future of all real q)
+        assert causal or pad_k == 0, "non-causal padding unsupported"
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    qf = q.reshape(B * Hq, S + pad_q, D)
+    kf = k.reshape(B * Hq, k.shape[2], D)
+    vf = v.reshape(B * Hq, v.shape[2], D)
+    out = flash_attention_bh(
+        qf, kf, vf, causal=causal, block_q=bq, block_k=bk, interpret=interpret
+    )
+    out = out.reshape(B, Hq, S + pad_q, D)
+    return out[:, :, :S]

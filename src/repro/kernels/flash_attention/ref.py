@@ -1,0 +1,21 @@
+"""Pure-jnp oracle: dense softmax attention (O(S^2) memory)."""
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(
+    q: jnp.ndarray,  # (B, H, S, D)
+    k: jnp.ndarray,  # (B, H, T, D)
+    v: jnp.ndarray,  # (B, H, T, D)
+    causal: bool = True,
+) -> jnp.ndarray:
+    D = q.shape[-1]
+    s = jnp.einsum("bhsd,bhtd->bhst", q, k).astype(jnp.float32) / math.sqrt(D)
+    if causal:
+        S, T = q.shape[2], k.shape[2]
+        mask = jnp.arange(T)[None, :] <= (jnp.arange(S)[:, None] + (T - S))
+        s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhst,bhtd->bhsd", p, v)

@@ -1,0 +1,46 @@
+"""Fused device-side ingest Pallas TPU kernel.
+
+The DALI-style fix the paper cites (Zolnouri et al.): move the CPU-bound
+tail of the augmentation pipeline (dequantize + normalize + layout) onto the
+accelerator.  The host ships raw uint8 HWC (4x fewer PCIe/ICI bytes than
+f32), the kernel fuses u8->f32 dequant, per-channel affine normalize and the
+HWC->CHW layout flip in one VMEM pass per image block.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ingest_kernel(img_ref, mean_ref, std_ref, o_ref):
+    x = img_ref[0].astype(jnp.float32) / 255.0  # (H, W, C)
+    mean = mean_ref[...].astype(jnp.float32)
+    std = std_ref[...].astype(jnp.float32)
+    y = (x - mean[None, None, :]) / std[None, None, :]
+    o_ref[0] = y.transpose(2, 0, 1).astype(o_ref.dtype)  # (C, H, W)
+
+
+def ingest_norm_batched(
+    img_u8: jnp.ndarray,  # (B, H, W, C) uint8
+    mean: jnp.ndarray,
+    std: jnp.ndarray,
+    *,
+    out_dtype=jnp.float32,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    B, H, W, C = img_u8.shape
+    return pl.pallas_call(
+        _ingest_kernel,
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, H, W, C), lambda b: (b, 0, 0, 0)),
+            pl.BlockSpec((C,), lambda b: (0,)),
+            pl.BlockSpec((C,), lambda b: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, C, H, W), lambda b: (b, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, C, H, W), out_dtype),
+        interpret=interpret,
+    )(img_u8, mean, std)

@@ -1,0 +1,14 @@
+"""Jit-able wrapper for fused ingest."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ingest_norm.kernel import ingest_norm_batched
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ingest_norm(img_u8, mean, std, interpret: bool = False):
+    return ingest_norm_batched(img_u8, mean, std, interpret=interpret)

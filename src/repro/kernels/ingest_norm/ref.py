@@ -1,0 +1,14 @@
+"""Pure-jnp oracle: uint8 HWC -> normalized float CHW (the paper's
+`transform` tail: to-tensor + normalize), fused device-side."""
+import jax.numpy as jnp
+
+
+def ingest_norm_ref(
+    img_u8: jnp.ndarray,  # (B, H, W, C) uint8
+    mean: jnp.ndarray,  # (C,) in [0,1] units
+    std: jnp.ndarray,  # (C,)
+    out_dtype=jnp.float32,
+) -> jnp.ndarray:
+    x = img_u8.astype(jnp.float32) / 255.0
+    x = (x - mean.astype(jnp.float32)) / std.astype(jnp.float32)
+    return x.transpose(0, 3, 1, 2).astype(out_dtype)  # (B, C, H, W)

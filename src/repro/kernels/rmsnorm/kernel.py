@@ -1,0 +1,49 @@
+"""Fused RMSNorm Pallas TPU kernel.
+
+Tiling: rows are processed in VMEM blocks of (BLOCK_ROWS, d) — one pass,
+fused mean-square + rsqrt + scale (vs. 3 HBM round-trips unfused).  d stays
+whole in the lane dimension (d is a multiple of 128 for every assigned
+arch), BLOCK_ROWS rides the sublane dimension.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_ROWS = 256
+
+
+def _rmsnorm_kernel(x_ref, scale_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)  # (block_rows, d)
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(ms + eps) * scale_ref[...].astype(jnp.float32)
+    o_ref[...] = y.astype(o_ref.dtype)
+
+
+def rmsnorm_2d(
+    x: jnp.ndarray,
+    scale: jnp.ndarray,
+    *,
+    eps: float = 1e-6,
+    block_rows: int = BLOCK_ROWS,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """x: (n, d) with n % block_rows == 0 handled by padding in ops.py."""
+    n, d = x.shape
+    block_rows = min(block_rows, n)
+    assert n % block_rows == 0
+    grid = (n // block_rows,)
+    return pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d), x.dtype),
+        interpret=interpret,
+    )(x, scale)

@@ -1,0 +1,33 @@
+"""Jit-able wrapper: arbitrary leading dims, row padding, interpret toggle."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rmsnorm.kernel import BLOCK_ROWS, rmsnorm_2d
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "interpret", "block_rows"))
+def rmsnorm(
+    x: jnp.ndarray,
+    scale: jnp.ndarray,
+    eps: float = 1e-6,
+    interpret: bool = False,
+    block_rows: int = BLOCK_ROWS,
+) -> jnp.ndarray:
+    shape = x.shape
+    d = shape[-1]
+    n = 1
+    for s in shape[:-1]:
+        n *= s
+    flat = x.reshape(n, d)
+    block = min(block_rows, n)
+    pad = (-n) % block
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad, d), flat.dtype)])
+    out = rmsnorm_2d(flat, scale, eps=eps, block_rows=block, interpret=interpret)
+    if pad:
+        out = out[:n]
+    return out.reshape(shape)

@@ -1,0 +1,115 @@
+"""Chunked RWKV-6 WKV Pallas TPU kernel.
+
+GPU RWKV kernels are per-token CUDA loops (one thread per channel).  The TPU
+adaptation reformulates the recurrence into *chunked matrix form* so the MXU
+does the work (see models/rwkv6.wkv_scan_chunked):
+
+    intra-chunk:  y += tril_strict(r~ k~^T) v  + diag bonus
+    inter-chunk:  y += r~ . S_carry
+    state:        S <- diag(P_tot) S + (k * P_tot/P_incl)^T v
+
+Grid ``(BH, n_chunks)``: TPU grids iterate the trailing dim sequentially, so
+the (D, D) fp32 state lives in VMEM scratch and is carried across chunk
+iterations of the same head — no HBM round-trip for the state.  Chunk length
+rides the sublane dim; D (=64 for rwkv6-7b, padded to 128 lanes by Mosaic)
+the lane dim.  fp32 throughout (decay ratios are exp-of-cumsum).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+CHUNK = 32
+
+
+def _wkv_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, o_ref, sT_ref, s_ref, *,
+                chunk: int, n_chunks: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    r = r_ref[0].astype(jnp.float32)  # (c, D)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    w = w_ref[0].astype(jnp.float32)
+    u = u_ref[0].astype(jnp.float32)  # (D,) broadcast per head
+    s = s_ref[...]
+
+    logw = jnp.log(jnp.maximum(w, 1e-12))
+    p_incl = jnp.exp(jnp.cumsum(logw, axis=0))  # (c, D) prod_{s<=t}
+    p_excl = p_incl / w
+    p_tot = p_incl[-1]
+
+    r_t = r * p_excl
+    k_s = k / p_incl
+    att = jax.lax.dot_general(
+        r_t, k_s, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (c, c)
+    ti = jax.lax.iota(jnp.int32, chunk)
+    tri = ti[:, None] > ti[None, :]  # strictly lower triangular
+    att = jnp.where(tri, att, 0.0)
+    diag = jnp.sum(r * (u[None, :] * k), axis=-1)  # (c,)
+    y = jax.lax.dot_general(
+        att, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    y = y + diag[:, None] * v
+    y = y + jax.lax.dot_general(
+        r_t, s, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    o_ref[0] = y.astype(o_ref.dtype)
+
+    kw = k * (p_tot[None, :] / p_incl)
+    s_new = p_tot[:, None] * s + jax.lax.dot_general(
+        kw, v, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    s_ref[...] = s_new
+
+    @pl.when(ci == n_chunks - 1)
+    def _final():
+        sT_ref[0] = s_new
+
+
+def wkv_chunked(
+    r: jnp.ndarray,  # (BH, S, D) fp32
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    w: jnp.ndarray,
+    u: jnp.ndarray,  # (BH, D)
+    *,
+    chunk: int = CHUNK,
+    interpret: bool = False,
+):
+    BH, S, D = r.shape
+    chunk = min(chunk, S)
+    assert S % chunk == 0
+    n_chunks = S // chunk
+    grid = (BH, n_chunks)
+    kernel = functools.partial(_wkv_kernel, chunk=chunk, n_chunks=n_chunks)
+    y, sT = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, D), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, D), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, D), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, D), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, D), lambda b, c: (b, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, D), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, D, D), lambda b, c: (b, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, S, D), jnp.float32),
+            jax.ShapeDtypeStruct((BH, D, D), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((D, D), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u)
+    return y, sT

@@ -1,0 +1,50 @@
+"""Jit-able wrapper matching the model-layer calling convention
+(B, S, H, D) + u (H, D) + s0 (B, H, D, D)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rwkv6_wkv.kernel import CHUNK, wkv_chunked
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv(
+    r: jnp.ndarray,  # (B, S, H, D)
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    w: jnp.ndarray,
+    u: jnp.ndarray,  # (H, D)
+    s0: jnp.ndarray,  # (B, H, D, D) — kernel assumes zero init; nonzero s0
+    # is folded in via a rank-1 correction outside the kernel.
+    chunk: int = CHUNK,
+    interpret: bool = False,
+):
+    B, S, H, D = r.shape
+    to_bh = lambda a: a.transpose(0, 2, 1, 3).reshape(B * H, S, D).astype(jnp.float32)
+    rb, kb, vb, wb = map(to_bh, (r, k, v, w))
+    ub = jnp.broadcast_to(u.astype(jnp.float32)[None], (B, H, D)).reshape(B * H, D)
+    pad = (-S) % min(chunk, S) if S else 0
+    if pad:
+        z = lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0)))
+        rb, kb, vb = z(rb), z(kb), z(vb)
+        wb = jnp.pad(wb, ((0, 0), (0, pad), (0, 0)), constant_values=1.0)
+    y, sT = wkv_chunked(rb, kb, vb, wb, ub, chunk=min(chunk, S + pad), interpret=interpret)
+    y = y[:, :S].reshape(B, H, S, D).transpose(0, 2, 1, 3)
+    sT = sT.reshape(B, H, D, D)
+    # fold a nonzero initial state in analytically:
+    #   y += (r * P_excl) . s0 ; sT += diag(P_tot) s0
+    nonzero = jnp.any(s0 != 0)
+
+    def fold(_):
+        logw = jnp.log(jnp.maximum(w.astype(jnp.float32), 1e-12))
+        p_incl = jnp.exp(jnp.cumsum(logw, axis=1))  # (B,S,H,D)
+        p_excl = p_incl / w.astype(jnp.float32)
+        y2 = y + jnp.einsum("bshk,bhkv->bshv", r.astype(jnp.float32) * p_excl, s0)
+        sT2 = sT + p_incl[:, -1].transpose(0, 1, 2)[..., None] * s0
+        return y2, sT2
+
+    y, sT = jax.lax.cond(nonzero, fold, lambda _: (y, sT), operand=None)
+    return y, sT

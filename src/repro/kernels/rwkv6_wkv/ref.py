@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the RWKV-6 WKV recurrence (sequential scan).
+
+    y_t = r_t . S_{t-1} + (r_t . (u*k_t)) v_t
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+"""
+import jax
+import jax.numpy as jnp
+
+
+def wkv_ref(r, k, v, w, u, s0):
+    """r,k,v,w: (BH, S, D) fp32; u: (BH, D); s0: (BH, D, D).
+    Returns y (BH, S, D), sT (BH, D, D)."""
+
+    def step(s, inp):
+        r_t, k_t, v_t, w_t = inp  # (BH, D)
+        bonus = jnp.einsum("bk,bk->b", r_t, u * k_t)
+        y = jnp.einsum("bk,bkv->bv", r_t, s) + bonus[:, None] * v_t
+        s = w_t[..., None] * s + jnp.einsum("bk,bv->bkv", k_t, v_t)
+        return s, y
+
+    xs = tuple(a.swapaxes(0, 1) for a in (r, k, v, w))
+    sT, ys = jax.lax.scan(step, s0, xs)
+    return ys.swapaxes(0, 1), sT

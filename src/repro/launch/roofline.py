@@ -1,0 +1,178 @@
+"""Roofline analysis from the compiled dry-run artifact.
+
+Three terms per (arch x shape x mesh), in seconds:
+
+    compute    = HLO_FLOPs_per_device / peak_FLOP/s            (197 TF bf16)
+    memory     = HLO_bytes_per_device / HBM_bw                 (819 GB/s)
+    collective = collective_wire_bytes_per_device / ICI_bw     (~50 GB/s/link)
+
+``cost_analysis()`` provides per-device FLOPs/bytes (the compiled module is
+the SPMD per-device program).  Collective bytes are NOT in cost_analysis —
+we parse the optimized HLO text and sum operand sizes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute, converted to
+wire bytes with ring-algorithm factors over the participant-group size.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from repro.launch.mesh import V5E_HBM_BW, V5E_ICI_BW, V5E_PEAK_FLOPS
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s+((?:\([^)]*\)|\S+))\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(",
+)
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """'bf16[4,128,256]' -> byte count.  Tuple shapes sum their elements."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dtype, dims = m.group(1), m.group(2)
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:  # iota format [num_groups,group_size]
+        return int(m.group(2))
+    return 1
+
+
+@dataclass
+class CollectiveStats:
+    # per-op-kind: (count, result_bytes_sum, wire_bytes_sum)
+    by_kind: Dict[str, List[float]] = field(default_factory=dict)
+
+    @property
+    def wire_bytes(self) -> float:
+        return sum(v[2] for v in self.by_kind.values())
+
+    @property
+    def count(self) -> int:
+        return int(sum(v[0] for v in self.by_kind.values()))
+
+    def summary(self) -> Dict[str, Dict[str, float]]:
+        return {
+            k: {"count": v[0], "result_bytes": v[1], "wire_bytes": v[2]}
+            for k, v in sorted(self.by_kind.items())
+        }
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Sum wire bytes per device for every collective in the HLO.
+
+    Ring-algorithm wire-byte factors over group size g (full-tensor size N):
+      all-gather:          N * (g-1)/g     (result is the gathered tensor)
+      reduce-scatter:      N * (g-1)/g     (operand is the full tensor)
+      all-reduce:          2N * (g-1)/g    (RS + AG)
+      all-to-all:          N * (g-1)/g
+      collective-permute:  N
+    """
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if m is None:
+            continue
+        result_shape, kind = m.group(1), m.group(2)
+        nbytes = _shape_bytes(result_shape)
+        g = _group_size(line)
+        if g <= 1 and kind != "collective-permute":
+            continue  # degenerate (single participant): no wire traffic
+        frac = (g - 1) / g if g > 1 else 1.0
+        if kind == "all-gather":
+            wire = nbytes * frac
+        elif kind == "reduce-scatter":
+            # result is the scattered shard; full tensor = result * g
+            wire = nbytes * g * frac
+        elif kind == "all-reduce":
+            wire = 2.0 * nbytes * frac
+        elif kind == "all-to-all":
+            wire = nbytes * frac
+        else:  # collective-permute
+            wire = float(nbytes)
+        ent = stats.by_kind.setdefault(kind, [0, 0.0, 0.0])
+        ent[0] += 1
+        ent[1] += nbytes
+        ent[2] += wire
+    return stats
+
+
+@dataclass
+class Roofline:
+    flops_per_device: float
+    hbm_bytes_per_device: float
+    wire_bytes_per_device: float
+    model_flops_total: float
+    num_devices: int
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_device / V5E_PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes_per_device / V5E_HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.wire_bytes_per_device / V5E_ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_time(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_fraction(self) -> float:
+        """MODEL_FLOPS / (HLO_FLOPs x devices): >1 is impossible; ≪1 means
+        remat/redundant compute dominates the compiled program."""
+        total_hlo = self.flops_per_device * self.num_devices
+        return self.model_flops_total / total_hlo if total_hlo else float("nan")
+
+    @property
+    def mfu_upper_bound(self) -> float:
+        """Roofline MFU: useful model flops / (devices x peak x bound_time)."""
+        denom = self.num_devices * V5E_PEAK_FLOPS * self.bound_time
+        return self.model_flops_total / denom if denom else float("nan")
+
+    def row(self) -> Dict[str, float]:
+        return {
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "dominant": self.dominant,
+            "useful_flops_fraction": self.useful_flops_fraction,
+            "roofline_mfu": self.mfu_upper_bound,
+        }

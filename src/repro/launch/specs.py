@@ -1,0 +1,178 @@
+"""ShapeDtypeStruct stand-ins for every (arch x shape) cell — weak-type
+correct, shardable, zero allocation.  ``input_specs`` returns the model
+inputs; ``state_specs``/``cache_specs`` the train state / KV cache, with
+NamedShardings attached from the partition rules.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import jax.random as jr
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.config import ModelConfig, ShapeConfig, TrainConfig
+from repro.models import encdec, transformer
+from repro.models.sharding import batch_sharding, partition_params
+from repro.train.steps import init_train_state
+
+
+def _shard_batch_tree(tree: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(
+            s.shape, s.dtype, sharding=batch_sharding(mesh, s.shape)
+        ),
+        tree,
+    )
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh) -> Dict[str, Any]:
+    """Model inputs for this cell as sharded ShapeDtypeStructs."""
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "decode":
+        toks = {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32)}
+        return _shard_batch_tree(toks, mesh)
+    specs: Dict[str, Any] = {
+        "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+    }
+    if shape.kind == "train":
+        specs["targets"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    if cfg.family == "encdec":
+        t_enc = cfg.encoder_seq_len or 1500
+        fd = cfg.frontend_dim or cfg.d_model
+        specs["frames"] = jax.ShapeDtypeStruct((B, t_enc, fd), jnp.bfloat16)
+    if cfg.num_patch_tokens:
+        specs["patch_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.num_patch_tokens, cfg.frontend_dim), jnp.bfloat16
+        )
+    return _shard_batch_tree(specs, mesh)
+
+
+def state_specs(cfg: ModelConfig, tcfg: TrainConfig, mesh: Mesh) -> Any:
+    """Train state as sharded ShapeDtypeStructs (params FSDP x TP; optimizer
+    state inherits its parameter's sharding; step replicated)."""
+    shapes = jax.eval_shape(lambda k: init_train_state(cfg, tcfg, k), jr.PRNGKey(0))
+
+    params_sh = partition_params(shapes["params"], mesh)
+
+    def opt_sharding(opt_shapes):
+        # mu/nu/v mirror the param tree structure per optimizer family;
+        # match by path suffix against the param shardings where shapes align.
+        flat_p, _ = jax.tree_util.tree_flatten_with_path(shapes["params"])
+        by_shape: Dict[Tuple, Any] = {}
+        for kp, leaf in flat_p:
+            sh = _lookup(params_sh, kp)
+            by_shape.setdefault(tuple(leaf.shape), sh)
+
+        def leaf_sharding(s):
+            sh = by_shape.get(tuple(s.shape))
+            return sh if sh is not None else NamedSharding(mesh, P())
+
+        return jax.tree.map(leaf_sharding, opt_shapes)
+
+    def _lookup(tree, kp):
+        node = tree
+        for k in kp:
+            key = getattr(k, "key", getattr(k, "idx", None))
+            node = node[key]
+        return node
+
+    out = {
+        "params": jax.tree.map(
+            lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+            shapes["params"],
+            params_sh,
+        ),
+        "opt": jax.tree.map(
+            lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+            shapes["opt"],
+            opt_sharding(shapes["opt"]),
+        ),
+        "step": jax.ShapeDtypeStruct((), jnp.int32, sharding=NamedSharding(mesh, P())),
+    }
+    if "ef" in shapes:
+        out["ef"] = jax.tree.map(
+            lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+            shapes["ef"],
+            partition_params(shapes["ef"], mesh),
+        )
+    return out
+
+
+def param_specs_only(cfg: ModelConfig, mesh: Mesh, dtype: Optional[str] = "bfloat16") -> Any:
+    """Serving params (bf16 by default) as sharded structs."""
+    scfg = dataclasses.replace(cfg, param_dtype=dtype or cfg.param_dtype)
+    if cfg.family == "encdec":
+        shapes = jax.eval_shape(lambda k: encdec.init_encdec(k, scfg), jr.PRNGKey(0))
+    else:
+        shapes = jax.eval_shape(lambda k: transformer.init_lm(k, scfg), jr.PRNGKey(0))
+    sh = partition_params(shapes, mesh)
+    return jax.tree.map(
+        lambda s, h: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=h), shapes, sh
+    )
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh) -> Any:
+    """KV/state cache for decode cells, sharded: batch over DP, heads /
+    latent / channel dims over the model axis (divisibility fallback)."""
+    B = shape.global_batch
+    max_len = shape.seq_len
+    if cfg.family == "encdec":
+        shapes = jax.eval_shape(lambda: encdec.init_dec_cache(cfg, B, max_len))
+    else:
+        shapes = jax.eval_shape(lambda: transformer.init_cache(cfg, B, max_len))
+
+    from repro.models.sharding import dp_axes, _axis_size
+
+    dp = dp_axes(mesh)
+    dp_ax = dp if len(dp) > 1 else (dp[0] if dp else None)
+    tp_size = mesh.shape.get("model", 1)
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+
+    t_enc = cfg.encoder_seq_len or 1500
+
+    # context-parallel cache layout: when the kv-head count cannot shard
+    # over the model axis (seq-sharded attention / absorbed MLA decode),
+    # shard the cache's SEQUENCE dim over "model" instead — attention then
+    # reads its local T-slice with no per-step resharding collectives.
+    a = cfg.attention
+    seq_cp = bool(a) and (
+        a.kind == "mla" or (a.num_kv_heads % max(tp_size, 1) != 0)
+    )
+
+    def leaf(kp, s):
+        dims = list(s.shape)
+        spec = [None] * len(dims)
+        # batch axis: first dim of size B (dim 0 is the stacked-layer dim)
+        b_idx = None
+        for i, d in enumerate(dims):
+            if d == B and i > 0:
+                b_idx = i
+                break
+        if b_idx is not None and dp_ax is not None and B % max(dp_size, 1) == 0:
+            spec[b_idx] = dp_ax
+        if seq_cp:
+            for i in range(1 if len(dims) > 2 else 0, len(dims)):
+                if i != b_idx and dims[i] in (max_len, t_enc) and dims[i] % tp_size == 0:
+                    spec[i] = "model"
+                    return jax.ShapeDtypeStruct(
+                        s.shape, s.dtype, sharding=NamedSharding(mesh, P(*spec))
+                    )
+        # model axis: first feature dim (not layers / batch / sequence)
+        for i in range(len(dims)):
+            if i == 0 and len(dims) > 2:
+                continue  # stacked-layer dim: scan slices it; never shard
+            if i == b_idx or dims[i] in (max_len, t_enc):
+                continue  # sequence dims stay whole (attention reads them)
+            if spec[i] is None and dims[i] % tp_size == 0 and dims[i] >= tp_size:
+                spec[i] = "model"
+                break
+        return jax.ShapeDtypeStruct(
+            s.shape, s.dtype, sharding=NamedSharding(mesh, P(*spec))
+        )
+
+    return jax.tree_util.tree_map_with_path(leaf, shapes)

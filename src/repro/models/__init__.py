@@ -1,0 +1,1 @@
+"""Model zoo: pure-JAX composable definitions for all assigned architectures."""

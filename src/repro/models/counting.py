@@ -1,0 +1,70 @@
+"""Parameter counting via ``jax.eval_shape`` (exact, zero allocation).
+
+``count_params``        — total trainable parameters.
+``count_active_params`` — MoE-aware: routed expert tensors scaled by
+                          top_k / num_experts (for 6*N_active*D flops).
+"""
+from __future__ import annotations
+
+import math
+from functools import lru_cache
+from typing import Any
+
+import jax
+import numpy as np
+
+from repro.config import ModelConfig
+
+
+def _param_shapes(cfg: ModelConfig) -> Any:
+    import jax.random as jr
+
+    if cfg.family == "resnet":
+        from repro.models.resnet import init_resnet
+
+        return jax.eval_shape(lambda k: init_resnet(k, cfg)[0], jr.PRNGKey(0))
+    if cfg.family == "encdec":
+        from repro.models.encdec import init_encdec
+
+        return jax.eval_shape(lambda k: init_encdec(k, cfg), jr.PRNGKey(0))
+    from repro.models.transformer import init_lm
+
+    return jax.eval_shape(lambda k: init_lm(k, cfg), jr.PRNGKey(0))
+
+
+@lru_cache(maxsize=64)
+def _counts(cfg: ModelConfig) -> tuple:
+    shapes = _param_shapes(cfg)
+    total = 0
+    active = 0.0
+    frac = 1.0
+    if cfg.moe is not None:
+        frac = cfg.moe.top_k / cfg.moe.num_experts
+
+    def visit(kp, leaf):
+        nonlocal total, active
+        n = int(np.prod(leaf.shape)) if leaf.shape else 1
+        total += n
+        path = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in kp)
+        if "moe/w_" in path:
+            active += n * frac
+        else:
+            active += n
+
+    jax.tree_util.tree_map_with_path(visit, shapes)
+    return total, int(active)
+
+
+def count_params(cfg: ModelConfig) -> int:
+    return _counts(cfg)[0]
+
+
+def count_active_params(cfg: ModelConfig) -> int:
+    return _counts(cfg)[1]
+
+
+def model_flops(cfg: ModelConfig, tokens: int, kind: str = "train") -> float:
+    """6*N*D (train) or 2*N*D (inference fwd) with MoE-active N."""
+    n = count_active_params(cfg)
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * n * tokens

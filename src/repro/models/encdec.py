@@ -1,0 +1,234 @@
+"""Whisper-style encoder-decoder backbone.
+
+The conv audio frontend is a STUB per the assignment: inputs are precomputed
+frame embeddings (B, 1500, d_model) from ``input_specs()``.  Encoder =
+bidirectional self-attention stack; decoder = causal self-attention +
+cross-attention + GELU MLP.  Sinusoidal positions (whisper uses
+sinusoidal/learned; no RoPE).
+
+Cross-attention K/V are computed once from the encoder output at prefill and
+cached — decode steps never touch the encoder again.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.layers import (
+    Params,
+    _sdpa,
+    apply_embedding,
+    apply_lm_head,
+    apply_mlp,
+    apply_norm,
+    cdtype,
+    cross_entropy_loss,
+    dense_init,
+    init_attention,
+    init_embedding,
+    init_lm_head,
+    init_mlp,
+    init_norm,
+    pdtype,
+    sinusoidal_embedding,
+)
+from repro.models.sharding import constrain
+
+
+def _init_cross_attn(key, cfg: ModelConfig) -> Params:
+    return init_attention(key, cfg)  # same shapes as self-attention
+
+
+def _init_enc_layer(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 2)
+    return {
+        "ln1": init_norm(cfg),
+        "attn": init_attention(ks[0], cfg),
+        "ln2": init_norm(cfg),
+        "mlp": init_mlp(ks[1], cfg),
+    }
+
+
+def _init_dec_layer(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 3)
+    return {
+        "ln1": init_norm(cfg),
+        "self_attn": init_attention(ks[0], cfg),
+        "ln2": init_norm(cfg),
+        "cross_attn": _init_cross_attn(ks[1], cfg),
+        "ln3": init_norm(cfg),
+        "mlp": init_mlp(ks[2], cfg),
+    }
+
+
+def init_encdec(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 5)
+    n_enc = cfg.num_encoder_layers or cfg.num_layers
+    enc_keys = jax.random.split(ks[0], n_enc)
+    dec_keys = jax.random.split(ks[1], cfg.num_layers)
+    params: Params = {
+        "embed": init_embedding(ks[2], cfg),
+        "enc_layers": jax.vmap(lambda k: _init_enc_layer(k, cfg))(enc_keys),
+        "enc_norm": init_norm(cfg),
+        "dec_layers": jax.vmap(lambda k: _init_dec_layer(k, cfg))(dec_keys),
+        "final_norm": init_norm(cfg),
+        "lm_head": init_lm_head(ks[3], cfg),
+    }
+    if cfg.frontend_dim and cfg.frontend_dim != cfg.d_model:
+        params["frontend_proj"] = {
+            "w": dense_init(ks[4], cfg.frontend_dim, (cfg.d_model,), pdtype(cfg))
+        }
+    return params
+
+
+def _self_attn(p, h, cfg, positions, causal, cache=None, cache_pos=None):
+    from repro.models.layers import apply_attention
+
+    return apply_attention(
+        p, h, cfg, positions=positions, causal=causal, cache=cache, cache_pos=cache_pos
+    )
+
+
+def _cross_attn(p: Params, h: jnp.ndarray, kv: Params, cfg: ModelConfig) -> jnp.ndarray:
+    """Decoder query against precomputed encoder K/V."""
+    a = cfg.attention
+    B, S, _ = h.shape
+    q = jnp.einsum("bsd,dhk->bshk", h, p["wq"].astype(h.dtype))
+    G = a.q_heads_per_kv
+    qg = q.reshape(B, S, a.num_kv_heads, G, a.head_dim)
+    out = _sdpa(qg, kv["k"].astype(h.dtype), kv["v"].astype(h.dtype),
+                causal=False, q_offset=0)
+    out = out.reshape(B, S, a.num_heads, a.head_dim)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(h.dtype))
+
+
+def encode(params: Params, frames: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """frames: (B, T_enc, frontend_dim) precomputed (frontend stub)."""
+    x = frames.astype(cdtype(cfg))
+    if "frontend_proj" in params:
+        x = jnp.einsum("bte,ed->btd", x, params["frontend_proj"]["w"].astype(x.dtype))
+    x = x + sinusoidal_embedding(x.shape[1], cfg.d_model).astype(x.dtype)[None]
+    x = constrain(x, "dp", None, None)
+    positions = jnp.arange(x.shape[1])
+
+    def body(xc, lp):
+        h = apply_norm(lp["ln1"], xc, cfg)
+        out, _ = _self_attn(lp["attn"], h, cfg, positions, causal=False)
+        xc = xc + out
+        h = apply_norm(lp["ln2"], xc, cfg)
+        return xc + apply_mlp(lp["mlp"], h, cfg), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return apply_norm(params["enc_norm"], x, cfg)
+
+
+def _cross_kv(lp: Params, enc: jnp.ndarray, cfg: ModelConfig) -> Params:
+    k = jnp.einsum("btd,dhk->bthk", enc, lp["cross_attn"]["wk"].astype(enc.dtype))
+    v = jnp.einsum("btd,dhk->bthk", enc, lp["cross_attn"]["wv"].astype(enc.dtype))
+    return {"k": k, "v": v}
+
+
+def _decoder(params, x, cfg, positions, cross_kv, cache=None, cache_pos=None):
+    """cross_kv: stacked (L, B, T_enc, Hkv, hd) pair; cache: self-attn KV."""
+
+    def body(carry, xs):
+        xc = carry
+        lp, ckv, lc = xs
+        h = apply_norm(lp["ln1"], xc, cfg)
+        out, new_lc = _self_attn(lp["self_attn"], h, cfg, positions, True, lc, cache_pos)
+        xc = xc + out
+        h = apply_norm(lp["ln2"], xc, cfg)
+        xc = xc + _cross_attn(lp["cross_attn"], h, ckv, cfg)
+        h = apply_norm(lp["ln3"], xc, cfg)
+        xc = xc + apply_mlp(lp["mlp"], h, cfg)
+        return xc, new_lc
+
+    if cfg.remat:
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, new_cache = jax.lax.scan(body, x, (params["dec_layers"], cross_kv, cache))
+    return x, new_cache
+
+
+def forward_train(
+    params: Params, batch: Dict[str, jnp.ndarray], cfg: ModelConfig
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    enc = encode(params, batch["frames"], cfg)
+    cross_kv = jax.vmap(lambda lp: _cross_kv(lp, enc, cfg))(params["dec_layers"])
+    x = apply_embedding(params["embed"], batch["tokens"], cfg)
+    S = x.shape[1]
+    x = x + sinusoidal_embedding(S, cfg.d_model).astype(x.dtype)[None]
+    x = constrain(x, "dp", None, None)
+    x, _ = _decoder(params, x, cfg, jnp.arange(S), cross_kv)
+    x = apply_norm(params["final_norm"], x, cfg)
+    logits = apply_lm_head(params["lm_head"], x, cfg)
+    return cross_entropy_loss(logits, batch["targets"]), jnp.zeros((), jnp.float32)
+
+
+def init_dec_cache(cfg: ModelConfig, batch: int, max_len: int) -> Params:
+    a = cfg.attention
+    L = cfg.num_layers
+    t_enc = cfg.encoder_seq_len or 1500
+    return {
+        "k": jnp.zeros((L, batch, max_len, a.num_kv_heads, a.head_dim), cdtype(cfg)),
+        "v": jnp.zeros((L, batch, max_len, a.num_kv_heads, a.head_dim), cdtype(cfg)),
+        "cross_k": jnp.zeros((L, batch, t_enc, a.num_kv_heads, a.head_dim), cdtype(cfg)),
+        "cross_v": jnp.zeros((L, batch, t_enc, a.num_kv_heads, a.head_dim), cdtype(cfg)),
+    }
+
+
+def prefill(
+    params: Params, batch: Dict[str, jnp.ndarray], cfg: ModelConfig, cache: Params
+) -> Tuple[jnp.ndarray, Params]:
+    enc = encode(params, batch["frames"], cfg)
+    cross_kv = jax.vmap(lambda lp: _cross_kv(lp, enc, cfg))(params["dec_layers"])
+    x = apply_embedding(params["embed"], batch["tokens"], cfg)
+    S = x.shape[1]
+    x = x + sinusoidal_embedding(S, cfg.d_model).astype(x.dtype)[None]
+    self_cache = {"k": cache["k"], "v": cache["v"]}
+    x, new_self = _decoder(
+        params, x, cfg, jnp.arange(S), cross_kv,
+        cache=self_cache, cache_pos=jnp.zeros((), jnp.int32),
+    )
+    x = apply_norm(params["final_norm"], x[:, -1:], cfg)
+    logits = apply_lm_head(params["lm_head"], x, cfg)
+    new_cache = {
+        "k": new_self["k"], "v": new_self["v"],
+        "cross_k": cross_kv["k"].astype(cdtype(cfg)),
+        "cross_v": cross_kv["v"].astype(cdtype(cfg)),
+    }
+    return logits[:, 0], new_cache
+
+
+def decode_step(
+    params: Params, cache: Params, tokens: jnp.ndarray, pos, cfg: ModelConfig
+) -> Tuple[jnp.ndarray, Params]:
+    x = apply_embedding(params["embed"], tokens, cfg)
+    # sinusoidal position of the current step
+    pe = sinusoidal_embedding(1, cfg.d_model)  # placeholder row
+    full_pe = sinusoidal_embedding_at(pos, cfg.d_model)
+    x = x + full_pe.astype(x.dtype)[None, None]
+    positions = pos + jnp.arange(1)
+    cross_kv = {"k": cache["cross_k"], "v": cache["cross_v"]}
+    self_cache = {"k": cache["k"], "v": cache["v"]}
+    x, new_self = _decoder(params, x, cfg, positions, cross_kv,
+                           cache=self_cache, cache_pos=pos)
+    x = apply_norm(params["final_norm"], x, cfg)
+    logits = apply_lm_head(params["lm_head"], x, cfg)
+    return logits[:, 0], dict(cache, k=new_self["k"], v=new_self["v"])
+
+
+def sinusoidal_embedding_at(pos, dim: int) -> jnp.ndarray:
+    import math
+
+    half = jnp.arange(0, dim, 2, dtype=jnp.float32)
+    div = jnp.exp(half * (-math.log(10000.0) / dim))
+    ang = pos.astype(jnp.float32) * div
+    emb = jnp.zeros((dim,), jnp.float32)
+    emb = emb.at[0::2].set(jnp.sin(ang))
+    emb = emb.at[1::2].set(jnp.cos(ang))
+    return emb

@@ -1,0 +1,132 @@
+"""ResNet-18 (the paper's own benchmark model) in pure JAX, NCHW.
+
+BatchNorm carries running statistics in a separate ``state`` pytree:
+``apply(params, state, x, train=True)`` -> (logits, new_state).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.layers import Params
+
+BN_MOMENTUM = 0.9
+
+
+def _conv_init(key, kh, kw, cin, cout):
+    fan_in = kh * kw * cin
+    return jax.random.normal(key, (kh, kw, cin, cout), jnp.float32) * jnp.sqrt(2.0 / fan_in)
+
+
+def _bn_params(c):
+    return {"scale": jnp.ones((c,), jnp.float32), "bias": jnp.zeros((c,), jnp.float32)}
+
+
+def _bn_state(c):
+    return {"mean": jnp.zeros((c,), jnp.float32), "var": jnp.ones((c,), jnp.float32)}
+
+
+def _conv(x, w, stride=1):
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME", dimension_numbers=("NCHW", "HWIO", "NCHW")
+    )
+
+
+def _bn(x, p, s, train: bool):
+    if train:
+        mean = x.mean((0, 2, 3))
+        var = x.var((0, 2, 3))
+        new_s = {
+            "mean": BN_MOMENTUM * s["mean"] + (1 - BN_MOMENTUM) * mean,
+            "var": BN_MOMENTUM * s["var"] + (1 - BN_MOMENTUM) * var,
+        }
+    else:
+        mean, var = s["mean"], s["var"]
+        new_s = s
+    inv = jax.lax.rsqrt(var + 1e-5)
+    y = (x - mean[None, :, None, None]) * inv[None, :, None, None]
+    return y * p["scale"][None, :, None, None] + p["bias"][None, :, None, None], new_s
+
+
+def init_resnet(key, cfg: ModelConfig) -> Tuple[Params, Params]:
+    blocks = cfg.resnet_blocks or (2, 2, 2, 2)
+    w = cfg.resnet_width
+    ks = iter(jax.random.split(key, 64))
+    params: Params = {"stem": {"conv/w": _conv_init(next(ks), 7, 7, 3, w), "bn": _bn_params(w)}}
+    state: Params = {"stem": {"bn": _bn_state(w)}}
+    cin = w
+    for si, n in enumerate(blocks):
+        cout = w * (2**si)
+        stage_p, stage_s = [], []
+        for bi in range(n):
+            stride = 2 if (si > 0 and bi == 0) else 1
+            bp = {
+                "conv1/w": _conv_init(next(ks), 3, 3, cin, cout),
+                "bn1": _bn_params(cout),
+                "conv2/w": _conv_init(next(ks), 3, 3, cout, cout),
+                "bn2": _bn_params(cout),
+            }
+            bs = {"bn1": _bn_state(cout), "bn2": _bn_state(cout)}
+            if stride != 1 or cin != cout:
+                bp["proj/w"] = _conv_init(next(ks), 1, 1, cin, cout)
+                bp["bn_proj"] = _bn_params(cout)
+                bs["bn_proj"] = _bn_state(cout)
+            stage_p.append(bp)
+            stage_s.append(bs)
+            cin = cout
+        params[f"stage{si}"] = stage_p
+        state[f"stage{si}"] = stage_s
+    params["fc"] = {
+        "w": jax.random.normal(next(ks), (cin, cfg.num_classes), jnp.float32) * 0.01,
+        "b": jnp.zeros((cfg.num_classes,), jnp.float32),
+    }
+    return params, state
+
+
+def apply_resnet(
+    params: Params, state: Params, x: jnp.ndarray, cfg: ModelConfig, train: bool = True
+) -> Tuple[jnp.ndarray, Params]:
+    """x: (B, 3, H, W) float32."""
+    blocks = cfg.resnet_blocks or (2, 2, 2, 2)
+    new_state: Params = {"stem": {}}
+    h = _conv(x, params["stem"]["conv/w"], stride=2)
+    h, new_state["stem"]["bn"] = _bn(h, params["stem"]["bn"], state["stem"]["bn"], train)
+    h = jax.nn.relu(h)
+    h = jax.lax.reduce_window(
+        h, -jnp.inf, jax.lax.max, (1, 1, 3, 3), (1, 1, 2, 2), "SAME"
+    )
+    for si, n in enumerate(blocks):
+        stage_state = []
+        for bi in range(n):
+            bp = params[f"stage{si}"][bi]
+            bs = state[f"stage{si}"][bi]
+            nbs = {}
+            stride = 2 if (si > 0 and bi == 0) else 1
+            resid = h
+            y = _conv(h, bp["conv1/w"], stride)
+            y, nbs["bn1"] = _bn(y, bp["bn1"], bs["bn1"], train)
+            y = jax.nn.relu(y)
+            y = _conv(y, bp["conv2/w"], 1)
+            y, nbs["bn2"] = _bn(y, bp["bn2"], bs["bn2"], train)
+            if "proj/w" in bp:
+                resid = _conv(resid, bp["proj/w"], stride)
+                resid, nbs["bn_proj"] = _bn(resid, bp["bn_proj"], bs["bn_proj"], train)
+            h = jax.nn.relu(y + resid)
+            stage_state.append(nbs)
+        new_state[f"stage{si}"] = stage_state
+    h = h.mean((2, 3))  # global average pool
+    logits = h @ params["fc"]["w"] + params["fc"]["b"]
+    return logits, new_state
+
+
+def resnet_loss(params, state, batch, cfg: ModelConfig, train: bool = True):
+    logits, new_state = apply_resnet(params, state, batch["image"], cfg, train)
+    labels = batch["label"]
+    logz = jax.nn.logsumexp(logits, -1)
+    gold = jnp.take_along_axis(logits, labels[:, None], -1)[:, 0]
+    loss = (logz - gold).mean()
+    acc = (logits.argmax(-1) == labels).mean()
+    return loss, (new_state, acc)

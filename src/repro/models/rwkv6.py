@@ -1,0 +1,213 @@
+"""RWKV-6 "Finch": linear attention with data-dependent decay.
+
+Per head (dim D) with matrix state S (D x D):
+    y_t = r_t . S_{t-1} + (r_t . (u * k_t)) v_t
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+where the decay w_t = exp(-exp(w0 + lora_w(x_t))) is *data dependent* (the
+Finch contribution).  Token shift mixes x_t with x_{t-1} per stream.
+
+Scan strategies:
+* ``seq``   — lax.scan over time (reference; exact; decode path).
+* ``chunk`` — chunked matrix form (intra-chunk matmuls + inter-chunk state),
+  the TPU/MXU-friendly formulation mirrored by the Pallas kernel
+  (kernels/rwkv6_wkv).  fp32 within chunks for the decay ratios.
+
+Channel-mix is the RWKV squared-ReLU FFN.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.layers import Params, dense_init, pdtype
+
+CHUNK = 32
+
+
+def _dims(cfg: ModelConfig) -> Tuple[int, int]:
+    r = cfg.rwkv
+    assert r is not None
+    H = cfg.d_model // r.head_dim
+    return H, r.head_dim
+
+
+def init_rwkv_timemix(key, cfg: ModelConfig) -> Params:
+    d, dt = cfg.d_model, pdtype(cfg)
+    r = cfg.rwkv
+    H, D = _dims(cfg)
+    ks = jax.random.split(key, 10)
+    return {
+        "mu_r": jnp.full((d,), 0.5, dt),
+        "mu_k": jnp.full((d,), 0.5, dt),
+        "mu_v": jnp.full((d,), 0.5, dt),
+        "mu_w": jnp.full((d,), 0.5, dt),
+        "mu_g": jnp.full((d,), 0.5, dt),
+        "w_r": dense_init(ks[0], d, (H, D), dt),
+        "w_k": dense_init(ks[1], d, (H, D), dt),
+        "w_v": dense_init(ks[2], d, (H, D), dt),
+        "w_g": dense_init(ks[3], d, (H, D), dt),
+        "w_o": dense_init(ks[4], d, (d,), dt),
+        # data-dependent decay: w0 + B_w @ tanh(A_w @ x_w)
+        "w0": jnp.full((H, D), -0.6, dt),
+        "lora_a": dense_init(ks[5], d, (r.decay_lora,), dt),
+        "lora_b": dense_init(ks[6], r.decay_lora, (H, D), dt) * 0.1,
+        "u": jax.random.normal(ks[7], (H, D), dt) * 0.1,
+        "ln_scale": jnp.ones((H, D), dt),
+        "ln_bias": jnp.zeros((H, D), dt),
+    }
+
+
+def init_rwkv_channelmix(key, cfg: ModelConfig) -> Params:
+    d, dt = cfg.d_model, pdtype(cfg)
+    ks = jax.random.split(key, 3)
+    return {
+        "mu_k": jnp.full((d,), 0.5, dt),
+        "mu_r": jnp.full((d,), 0.5, dt),
+        "w_k": dense_init(ks[0], d, (cfg.d_ff,), dt),
+        "w_v": dense_init(ks[1], cfg.d_ff, (d,), dt),
+        "w_r": dense_init(ks[2], d, (d,), dt),
+    }
+
+
+def _token_shift(x: jnp.ndarray, prev: Optional[jnp.ndarray]) -> jnp.ndarray:
+    """x_{t-1} stream: zeros (or cache) at t=0."""
+    if prev is None:
+        prev = jnp.zeros_like(x[:, :1])
+    else:
+        prev = prev[:, None].astype(x.dtype)
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def wkv_scan_seq(r, k, v, w, u, s0):
+    """Reference recurrence.  r,k,v,w: (B,S,H,D) fp32; u: (H,D); s0: (B,H,D,D).
+    Returns y (B,S,H,D), sT."""
+
+    def step(s, inp):
+        r_t, k_t, v_t, w_t = inp  # (B,H,D)
+        kv = jnp.einsum("bhk,bhv->bhkv", k_t, v_t)
+        bonus = jnp.einsum("bhk,bhk->bh", r_t, u[None] * k_t)
+        y = jnp.einsum("bhk,bhkv->bhv", r_t, s) + bonus[..., None] * v_t
+        s = w_t[..., None] * s + kv
+        return s, y
+
+    xs = tuple(a.swapaxes(0, 1) for a in (r, k, v, w))
+    sT, ys = jax.lax.scan(step, s0, xs)
+    return ys.swapaxes(0, 1), sT
+
+
+def wkv_scan_chunked(r, k, v, w, u, s0, chunk: int = CHUNK):
+    """Chunked matrix formulation (see module docstring).  Shapes as seq."""
+    B, S, H, D = r.shape
+    pad = (-S) % chunk
+    if pad:
+        zeros = lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v = zeros(r), zeros(k), zeros(v)
+        w = jnp.pad(w, ((0, 0), (0, pad), (0, 0), (0, 0)), constant_values=1.0)
+    Sp = r.shape[1]
+    nC = Sp // chunk
+    resh = lambda a: a.reshape(B, nC, chunk, H, D).swapaxes(0, 1)  # (nC,B,c,H,D)
+    rc, kc, vc, wc = resh(r), resh(k), resh(v), resh(w)
+
+    def chunk_step(s, inp):
+        rc_, kc_, vc_, wc_ = inp  # (B,c,H,D)
+        logw = jnp.log(jnp.maximum(wc_, 1e-12))
+        Pincl = jnp.exp(jnp.cumsum(logw, axis=1))        # prod_{s<=t} w_s
+        Pexcl = Pincl / wc_                               # prod_{s<t} w_s
+        Ptot = Pincl[:, -1]                               # (B,H,D)
+        r_t = rc_ * Pexcl                                 # r~
+        k_s = kc_ / Pincl                                 # k~
+        # intra-chunk: strictly-lower-triangular attention + diagonal bonus
+        att = jnp.einsum("bthd,bshd->bhts", r_t, k_s)     # (B,H,c,c)
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+        att = jnp.where(tri[None, None], att, 0.0)
+        diag = jnp.einsum("bthd,bthd->bth", rc_, u[None, None] * kc_)
+        y = jnp.einsum("bhts,bshd->bthd", att, vc_)
+        y = y + diag[..., None] * vc_
+        # inter-chunk: contribution of the carried state
+        y = y + jnp.einsum("bthk,bhkv->bthv", r_t, s)
+        # state update: S' = diag(Ptot) S + sum_s diag(Ptot/P_s) k_s v_s^T
+        kw = kc_ * (Ptot[:, None] / Pincl)
+        s = Ptot[..., None] * s + jnp.einsum("bshk,bshv->bhkv", kw, vc_)
+        return s, y
+
+    sT, ys = jax.lax.scan(chunk_step, s0, (rc, kc, vc, wc))
+    y = ys.swapaxes(0, 1).reshape(B, Sp, H, D)
+    return y[:, :S], sT
+
+
+def apply_rwkv_timemix(
+    p: Params,
+    x: jnp.ndarray,
+    cfg: ModelConfig,
+    *,
+    cache: Optional[Params] = None,
+    scan_mode: str = "chunk",
+    wkv_impl=None,
+) -> Tuple[jnp.ndarray, Optional[Params]]:
+    B, S, d = x.shape
+    H, D = _dims(cfg)
+    prev = cache["shift_tm"] if cache is not None else None
+    xp = _token_shift(x, prev)
+
+    def mix(mu):
+        return x + (xp - x) * mu.astype(x.dtype)
+
+    xr, xk, xv, xw, xg = (mix(p[f"mu_{c}"]) for c in "rkvwg")
+    proj = lambda z, w_: jnp.einsum("bsd,dhk->bshk", z, w_.astype(x.dtype))
+    r = proj(xr, p["w_r"]).astype(jnp.float32)
+    k = proj(xk, p["w_k"]).astype(jnp.float32)
+    v = proj(xv, p["w_v"]).astype(jnp.float32)
+    g = jax.nn.silu(proj(xg, p["w_g"]))
+    # data-dependent decay (Finch)
+    lora = jnp.einsum(
+        "bsr,rhk->bshk",
+        jnp.tanh(jnp.einsum("bsd,dr->bsr", xw, p["lora_a"].astype(x.dtype))),
+        p["lora_b"].astype(x.dtype),
+    )
+    w = jnp.exp(-jnp.exp((p["w0"].astype(jnp.float32)[None, None] + lora.astype(jnp.float32))))
+
+    s0 = cache["state"] if cache is not None else jnp.zeros((B, H, D, D), jnp.float32)
+    u = p["u"].astype(jnp.float32)
+    if wkv_impl is not None:
+        y, sT = wkv_impl(r, k, v, w, u, s0)
+    elif scan_mode == "chunk" and S > 1:
+        y, sT = wkv_scan_chunked(r, k, v, w, u, s0)
+    else:
+        y, sT = wkv_scan_seq(r, k, v, w, u, s0)
+    # per-head groupnorm
+    mu_ = y.mean(-1, keepdims=True)
+    var = y.var(-1, keepdims=True)
+    y = (y - mu_) * jax.lax.rsqrt(var + 1e-5)
+    y = y * p["ln_scale"].astype(jnp.float32)[None, None] + p["ln_bias"].astype(jnp.float32)[None, None]
+    y = (y.astype(x.dtype) * g).reshape(B, S, d)
+    out = jnp.einsum("bsd,de->bse", y, p["w_o"].astype(x.dtype))
+    new_cache = None
+    if cache is not None:
+        new_cache = {"state": sT, "shift_tm": x[:, -1].astype(jnp.float32)}
+    return out, new_cache
+
+
+def apply_rwkv_channelmix(
+    p: Params, x: jnp.ndarray, cfg: ModelConfig, *, cache: Optional[Params] = None
+) -> Tuple[jnp.ndarray, Optional[Params]]:
+    prev = cache["shift_cm"] if cache is not None else None
+    xp = _token_shift(x, prev)
+    xk = x + (xp - x) * p["mu_k"].astype(x.dtype)
+    xr = x + (xp - x) * p["mu_r"].astype(x.dtype)
+    k = jnp.einsum("bsd,df->bsf", xk, p["w_k"].astype(x.dtype))
+    v = jnp.einsum("bsf,fd->bsd", jnp.square(jax.nn.relu(k)), p["w_v"].astype(x.dtype))
+    rgate = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, p["w_r"].astype(x.dtype)))
+    new_cache = {"shift_cm": x[:, -1].astype(jnp.float32)} if cache is not None else None
+    return rgate * v, new_cache
+
+
+def init_rwkv_cache(cfg: ModelConfig, batch: int) -> Params:
+    H, D = _dims(cfg)
+    return {
+        "state": jnp.zeros((batch, H, D, D), jnp.float32),
+        "shift_tm": jnp.zeros((batch, cfg.d_model), jnp.float32),
+        "shift_cm": jnp.zeros((batch, cfg.d_model), jnp.float32),
+    }

@@ -1,0 +1,220 @@
+"""Partition rules: param-path -> PartitionSpec, plus activation constraints.
+
+Mesh axes: ``pod`` (inter-pod DP), ``data`` (intra-pod DP/FSDP), ``model``
+(TP/EP).  FSDP shards parameters over ("pod","data"); TP shards heads /
+d_ff / vocab / experts over "model".  A dimension that does not divide its
+assigned axis size falls back to replication (e.g. 8 KV heads on a 16-wide
+model axis) — GSPMD handles the replicated collectives.
+
+Activation sharding constraints are applied through a context-var mesh so
+model code stays mesh-agnostic (``use_activation_mesh``).
+"""
+from __future__ import annotations
+
+import re
+from contextlib import contextmanager
+from contextvars import ContextVar
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+FSDP = "__fsdp__"  # placeholder resolved to the mesh's data axes
+TP = "model"
+
+# (regex on /-joined param path) -> spec aligned to the LAST ndim dims.
+# Leading (scan/stack) dims are padded with None.
+_RULES: Tuple[Tuple[str, Tuple[Any, ...]], ...] = (
+    (r"embed/w$", (TP, FSDP)),
+    (r"lm_head/w$", (FSDP, TP)),
+    (r"pos_embed$", (None, None)),
+    # attention (GQA/MHA)
+    (r"w[qkv]$", (FSDP, TP, None)),
+    (r"wo$", (TP, None, FSDP)),
+    # MLA
+    (r"wq_a$", (FSDP, None)),
+    (r"wq_b$", (None, TP, None)),
+    (r"wkv_a$", (FSDP, None)),
+    (r"wk_rope$", (FSDP, None)),
+    (r"wkv_b$", (None, TP, None)),
+    # dense MLP
+    (r"w_gate$", (FSDP, TP)),
+    (r"w_up$", (FSDP, TP)),
+    (r"w_down$", (TP, FSDP)),
+    # MoE (leading E dim)
+    (r"router$", (FSDP, None)),
+    (r"moe/w_gate$", (TP, FSDP, None)),
+    (r"moe/w_up$", (TP, FSDP, None)),
+    (r"moe/w_down$", (TP, None, FSDP)),
+    # mamba
+    (r"in_proj$", (FSDP, TP)),
+    (r"conv_w$", (None, TP)),
+    (r"conv_b$", (TP,)),
+    (r"x_proj$", (TP, None)),
+    (r"dt_proj$", (None, TP)),
+    (r"dt_bias$", (TP,)),
+    (r"A_log$", (TP, None)),
+    (r"(^|/)D$", (TP,)),
+    (r"out_proj$", (TP, FSDP)),
+    # rwkv6
+    (r"w_[rkvg]$", (FSDP, TP, None)),
+    (r"w_o$", (FSDP, TP)),
+    (r"lora_a$", (FSDP, None)),
+    (r"lora_b$", (None, TP, None)),
+    (r"(w0|u|ln_scale|ln_bias)$", (TP, None)),
+    (r"mu_[rkvwgx]$", (None,)),
+    # rwkv channel-mix
+    (r"cm/w_k$", (FSDP, TP)),
+    (r"cm/w_v$", (TP, FSDP)),
+    (r"cm/w_r$", (FSDP, None)),
+    # resnet convs: shard output channels on model
+    (r"conv.*/w$", (None, None, None, TP)),
+    (r"fc/w$", (FSDP, TP)),
+    # norms / scalars / biases
+    (r"(scale|bias|b)$", (None,)),
+)
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        n = 1
+        for a in axis:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[axis]
+
+
+def _resolve(entry, mesh: Mesh):
+    if entry == FSDP:
+        ax = dp_axes(mesh)
+        return ax if len(ax) > 1 else (ax[0] if ax else None)
+    return entry
+
+
+def spec_for_path(path: str, ndim: int, shape: Sequence[int], mesh: Mesh) -> P:
+    """Match rules; align to trailing dims; drop non-divisible axes."""
+    matched: Optional[Tuple[Any, ...]] = None
+    for pat, spec in _RULES:
+        if re.search(pat, path):
+            matched = spec
+            break
+    if matched is None or len(matched) > ndim:
+        return P()
+    full = [None] * (ndim - len(matched)) + [
+        _resolve(e, mesh) for e in matched
+    ]
+    # divisibility fallback
+    out = []
+    for dim, ax in zip(shape, full):
+        if ax is not None and dim % _axis_size(mesh, ax) != 0:
+            ax = None
+        out.append(ax)
+    return P(*out)
+
+
+def _path_str(kp) -> str:
+    parts = []
+    for k in kp:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def partition_params(shapes: Any, mesh: Mesh) -> Any:
+    """Map a pytree of ShapeDtypeStructs/arrays to NamedShardings."""
+
+    def leaf(kp, x):
+        spec = spec_for_path(_path_str(kp), len(x.shape), x.shape, mesh)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(leaf, shapes)
+
+
+def param_specs(shapes: Any, mesh: Mesh) -> Any:
+    def leaf(kp, x):
+        return spec_for_path(_path_str(kp), len(x.shape), x.shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(leaf, shapes)
+
+
+def batch_sharding(mesh: Mesh, shape: Sequence[int]) -> NamedSharding:
+    """Inputs: batch dim sharded over DP axes, rest replicated.  A batch dim
+    that does not divide the DP extent (e.g. long_500k's global_batch=1)
+    falls back to replication, same as the param rules."""
+    ax = dp_axes(mesh)
+    lead = ax if len(ax) > 1 else (ax[0] if ax else None)
+    if lead is not None and (not shape or shape[0] % _axis_size(mesh, lead) != 0):
+        lead = None
+    return NamedSharding(mesh, P(lead, *([None] * (max(len(shape), 1) - 1))))
+
+
+# ---------------------------------------------------------------------------
+# Activation constraints (context-var mesh so model code is mesh-agnostic)
+# ---------------------------------------------------------------------------
+
+_ACT_MESH: ContextVar[Optional[Mesh]] = ContextVar("activation_mesh", default=None)
+# sequence-parallel toggle (beyond-paper perf knob; see EXPERIMENTS §Perf)
+_SEQ_PARALLEL: ContextVar[bool] = ContextVar("seq_parallel", default=False)
+
+
+@contextmanager
+def use_activation_mesh(mesh: Optional[Mesh], seq_parallel: bool = False):
+    tok = _ACT_MESH.set(mesh)
+    tok2 = _SEQ_PARALLEL.set(seq_parallel)
+    try:
+        yield
+    finally:
+        _ACT_MESH.reset(tok)
+        _SEQ_PARALLEL.reset(tok2)
+
+
+def constrain(x: jax.Array, *axes) -> jax.Array:
+    """axes entries: "dp" | "tp" | None (aligned to x dims)."""
+    mesh = _ACT_MESH.get()
+    if mesh is None:
+        return x
+    resolved = []
+    for a, dim in zip(axes, x.shape):
+        if a == "dp":
+            ax = dp_axes(mesh)
+            a = ax if len(ax) > 1 else (ax[0] if ax else None)
+        elif a == "tp":
+            a = TP if TP in mesh.axis_names else None
+        if a is not None and dim % _axis_size(mesh, a) != 0:
+            a = None
+        resolved.append(a)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*resolved))
+    )
+
+
+def seq_parallel_enabled() -> bool:
+    return _SEQ_PARALLEL.get() and _ACT_MESH.get() is not None
+
+
+def dp_extent() -> int:
+    """Total DP extent (pod*data) of the active mesh, 1 if none."""
+    mesh = _ACT_MESH.get()
+    if mesh is None:
+        return 1
+    return _axis_size(mesh, dp_axes(mesh)) if dp_axes(mesh) else 1
+
+
+def tp_divides(n: int) -> bool:
+    """Does dim size n shard evenly over the model axis of the active mesh?
+    True when no mesh is active (nothing to shard against)."""
+    mesh = _ACT_MESH.get()
+    if mesh is None or TP not in mesh.axis_names:
+        return True
+    return n % mesh.shape[TP] == 0

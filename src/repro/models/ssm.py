@@ -1,0 +1,139 @@
+"""Mamba-1 selective SSM block (the jamba mixer).
+
+Recurrence (per channel i, state n):
+    h_t = exp(dt_t * A) * h_{t-1} + dt_t * B_t * x_t
+    y_t = C_t . h_t + D * x_t
+
+Two scan strategies:
+* ``assoc``  — ``jax.lax.associative_scan`` over time (parallel; log-depth;
+  the TPU-friendly choice for train/prefill).
+* ``seq``    — ``lax.scan`` (O(S) depth; reference and decode path).
+
+Decode carries (conv_state, ssm_state) in the cache.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.layers import Params, dense_init, pdtype
+
+
+def _dims(cfg: ModelConfig) -> Tuple[int, int, int, int]:
+    s = cfg.ssm
+    assert s is not None
+    d_inner = s.expand * cfg.d_model
+    dt_rank = s.dt_rank or -(-cfg.d_model // 16)
+    return d_inner, s.d_state, s.d_conv, dt_rank
+
+
+def init_mamba(key, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    d_inner, d_state, d_conv, dt_rank = _dims(cfg)
+    dt = pdtype(cfg)
+    ks = jax.random.split(key, 8)
+    A = jnp.tile(jnp.arange(1, d_state + 1, dtype=jnp.float32)[None], (d_inner, 1))
+    return {
+        "in_proj": dense_init(ks[0], d, (2 * d_inner,), dt),
+        "conv_w": jax.random.normal(ks[1], (d_conv, d_inner), dt) * 0.2,
+        "conv_b": jnp.zeros((d_inner,), dt),
+        "x_proj": dense_init(ks[2], d_inner, (dt_rank + 2 * d_state,), dt),
+        "dt_proj": dense_init(ks[3], dt_rank, (d_inner,), dt),
+        "dt_bias": jnp.zeros((d_inner,), dt),
+        "A_log": jnp.log(A),
+        "D": jnp.ones((d_inner,), dt),
+        "out_proj": dense_init(ks[4], d_inner, (d,), dt),
+    }
+
+
+def _ssm_scan(dA: jnp.ndarray, dBx: jnp.ndarray, C: jnp.ndarray,
+              h0: Optional[jnp.ndarray], mode: str):
+    """dA, dBx: (B, S, d_inner, d_state); C: (B, S, d_state).
+    Returns y (B, S, d_inner) and final state (B, d_inner, d_state)."""
+    if mode == "assoc":
+        if h0 is not None:
+            # fold initial state into the first step: h1 = dA1*h0 + dBx1
+            dBx = dBx.at[:, 0].add(dA[:, 0] * h0)
+
+        def combine(a, b):
+            a1, b1 = a
+            a2, b2 = b
+            return a1 * a2, a2 * b1 + b2
+
+        _, hs = jax.lax.associative_scan(combine, (dA, dBx), axis=1)
+        y = jnp.einsum("bsdn,bsn->bsd", hs, C)
+        return y, hs[:, -1]
+
+    def step(h, inp):
+        dA_t, dBx_t, C_t = inp
+        h = dA_t * h + dBx_t  # (B, d_inner, d_state)
+        y_t = jnp.einsum("bdn,bn->bd", h, C_t)
+        return h, y_t
+
+    B, S = dA.shape[:2]
+    if h0 is None:
+        h0 = jnp.zeros_like(dA[:, 0])
+    hT, ys = jax.lax.scan(
+        step, h0, (dA.swapaxes(0, 1), dBx.swapaxes(0, 1), C.swapaxes(0, 1))
+    )
+    return ys.swapaxes(0, 1), hT
+
+
+def apply_mamba(
+    p: Params,
+    x: jnp.ndarray,
+    cfg: ModelConfig,
+    *,
+    cache: Optional[Params] = None,
+    scan_mode: str = "assoc",
+) -> Tuple[jnp.ndarray, Optional[Params]]:
+    """x: (B, S, d). cache = {"conv": (B, d_conv-1, d_inner), "ssm": (B, d_inner, d_state)}."""
+    B, S, _ = x.shape
+    d_inner, d_state, d_conv, dt_rank = _dims(cfg)
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(x.dtype))
+    xi, z = xz[..., :d_inner], xz[..., d_inner:]
+
+    # causal depthwise conv over time
+    if cache is not None:
+        ctx = jnp.concatenate([cache["conv"].astype(xi.dtype), xi], axis=1)
+        new_conv = ctx[:, -(d_conv - 1):]
+    else:
+        ctx = jnp.pad(xi, ((0, 0), (d_conv - 1, 0), (0, 0)))
+        new_conv = ctx[:, -(d_conv - 1):]
+    w = p["conv_w"].astype(xi.dtype)  # (d_conv, d_inner)
+    xc = sum(
+        ctx[:, i : i + S] * w[i][None, None] for i in range(d_conv)
+    ) + p["conv_b"].astype(xi.dtype)
+    xc = jax.nn.silu(xc)
+
+    proj = jnp.einsum("bsd,de->bse", xc, p["x_proj"].astype(xc.dtype))
+    dt_in = proj[..., :dt_rank]
+    Bmat = proj[..., dt_rank : dt_rank + d_state].astype(jnp.float32)
+    Cmat = proj[..., dt_rank + d_state :].astype(jnp.float32)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,rd->bsd", dt_in, p["dt_proj"].astype(dt_in.dtype)).astype(jnp.float32)
+        + p["dt_bias"].astype(jnp.float32)
+    )  # (B,S,d_inner)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))  # (d_inner, d_state)
+    dA = jnp.exp(dt[..., None] * A[None, None])  # (B,S,d_inner,d_state)
+    dBx = dt[..., None] * Bmat[:, :, None, :] * xc.astype(jnp.float32)[..., None]
+
+    h0 = cache["ssm"] if cache is not None else None
+    mode = "seq" if (cache is not None and S == 1) else scan_mode
+    y, hT = _ssm_scan(dA, dBx, Cmat, h0, mode)
+    y = y.astype(x.dtype) + xc * p["D"].astype(x.dtype)[None, None]
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(x.dtype))
+    new_cache = {"conv": new_conv.astype(jnp.float32), "ssm": hT} if cache is not None else None
+    return out, new_cache
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int) -> Params:
+    d_inner, d_state, d_conv, _ = _dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, d_conv - 1, d_inner), jnp.float32),
+        "ssm": jnp.zeros((batch, d_inner, d_state), jnp.float32),
+    }

@@ -1,0 +1,385 @@
+"""Decoder-only LM assembly (dense / MoE / hybrid / RWKV families).
+
+Layers are executed with ``lax.scan`` over *period blocks*: a homogeneous
+model has period 1 (scan compiles ONE layer body); jamba has period 8
+(7 mamba + 1 attention mixer, alternating dense/MoE FFN).  Param trees are
+stacked over periods, so the compiled HLO is O(period), not O(num_layers).
+
+Three lowered programs per architecture (the assigned input shapes):
+* ``forward_train``  — full-sequence causal forward, returns (loss, aux).
+* ``prefill``        — full sequence, writes the KV/state cache, returns the
+  last-position logits + cache.
+* ``decode_step``    — one token against the cache.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import rwkv6, ssm
+from repro.models.layers import (
+    Params,
+    apply_attention,
+    apply_embedding,
+    apply_lm_head,
+    apply_mla_attention,
+    apply_mlp,
+    apply_norm,
+    cdtype,
+    cross_entropy_loss,
+    init_attention,
+    init_embedding,
+    init_lm_head,
+    init_mlp,
+    init_norm,
+)
+from repro.models.moe import apply_moe, init_moe
+from repro.models.sharding import constrain, seq_parallel_enabled
+
+# ---------------------------------------------------------------------------
+# layer-kind schedule
+# ---------------------------------------------------------------------------
+
+
+def layer_kinds(cfg: ModelConfig) -> List[Tuple[str, str]]:
+    """Per layer: (mixer, ffn) with mixer in {attn, mla, mamba, rwkv} and
+    ffn in {mlp, moe, rwkv_cm}."""
+    out = []
+    for l in range(cfg.num_layers):
+        if cfg.family == "rwkv":
+            out.append(("rwkv", "rwkv_cm"))
+            continue
+        if cfg.hybrid_attn_period:
+            mixer = "attn" if l % cfg.hybrid_attn_period == cfg.hybrid_attn_index else "mamba"
+        elif cfg.attention and cfg.attention.kind == "mla":
+            mixer = "mla"
+        else:
+            mixer = "attn"
+        if cfg.moe is not None:
+            if cfg.moe_every_k:
+                ffn = "moe" if l % cfg.moe_every_k == 1 else "mlp"
+            else:
+                ffn = "moe"
+        else:
+            ffn = "mlp"
+        out.append((mixer, ffn))
+    return out
+
+
+def period(cfg: ModelConfig) -> int:
+    kinds = layer_kinds(cfg)
+    for p in range(1, len(kinds) + 1):
+        if len(kinds) % p == 0 and all(
+            kinds[i] == kinds[i % p] for i in range(len(kinds))
+        ):
+            return p
+    return len(kinds)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _init_sublayer(key, cfg: ModelConfig, kind: Tuple[str, str]) -> Params:
+    mixer, ffn = kind
+    ks = jax.random.split(key, 4)
+    p: Params = {"ln1": init_norm(cfg), "ln2": init_norm(cfg)}
+    if mixer in ("attn", "mla"):
+        p["attn"] = init_attention(ks[0], cfg)
+    elif mixer == "mamba":
+        p["mamba"] = ssm.init_mamba(ks[0], cfg)
+    elif mixer == "rwkv":
+        p["tm"] = rwkv6.init_rwkv_timemix(ks[0], cfg)
+    if ffn == "mlp":
+        p["mlp"] = init_mlp(ks[1], cfg)
+    elif ffn == "moe":
+        p["moe"] = init_moe(ks[1], cfg)
+    elif ffn == "rwkv_cm":
+        p["cm"] = rwkv6.init_rwkv_channelmix(ks[1], cfg)
+    return p
+
+
+def init_lm(key, cfg: ModelConfig) -> Params:
+    kinds = layer_kinds(cfg)
+    P_ = period(cfg)
+    n_blocks = cfg.num_layers // P_
+    ks = jax.random.split(key, 4)
+    params: Params = {"embed": init_embedding(ks[0], cfg)}
+
+    def init_block(bkey):
+        sub = jax.random.split(bkey, P_)
+        return {f"sub{j}": _init_sublayer(sub[j], cfg, kinds[j]) for j in range(P_)}
+
+    block_keys = jax.random.split(ks[1], n_blocks)
+    if cfg.scan_layers and n_blocks > 1:
+        params["blocks"] = jax.vmap(init_block)(block_keys)
+    else:
+        params["blocks"] = init_block(block_keys[0]) if n_blocks == 1 else jax.vmap(init_block)(block_keys)
+    params["final_norm"] = init_norm(cfg)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = init_lm_head(ks[2], cfg)
+    if cfg.num_patch_tokens and cfg.frontend_dim:
+        from repro.models.layers import dense_init, pdtype
+
+        params["patch_proj"] = {
+            "w": dense_init(ks[3], cfg.frontend_dim, (cfg.d_model,), pdtype(cfg))
+        }
+    return params
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+
+def _sublayer_cache(cfg: ModelConfig, kind: Tuple[str, str], batch: int, max_len: int) -> Params:
+    mixer, _ = kind
+    a = cfg.attention
+    if mixer == "attn":
+        return {
+            "k": jnp.zeros((batch, max_len, a.num_kv_heads, a.head_dim), cdtype(cfg)),
+            "v": jnp.zeros((batch, max_len, a.num_kv_heads, a.head_dim), cdtype(cfg)),
+        }
+    if mixer == "mla":
+        return {
+            "c_kv": jnp.zeros((batch, max_len, a.kv_lora_rank), cdtype(cfg)),
+            "k_rope": jnp.zeros((batch, max_len, a.qk_rope_head_dim), cdtype(cfg)),
+        }
+    if mixer == "mamba":
+        return ssm.init_mamba_cache(cfg, batch)
+    if mixer == "rwkv":
+        return rwkv6.init_rwkv_cache(cfg, batch)
+    raise ValueError(kind)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Params:
+    kinds = layer_kinds(cfg)
+    P_ = period(cfg)
+    n_blocks = cfg.num_layers // P_
+
+    def one_block(_):
+        return {
+            f"sub{j}": _sublayer_cache(cfg, kinds[j], batch, max_len)
+            for j in range(P_)
+        }
+
+    if cfg.scan_layers and n_blocks > 1:
+        return jax.vmap(one_block)(jnp.arange(n_blocks))
+    return one_block(0)
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+
+def _apply_sublayer(
+    p: Params,
+    x: jnp.ndarray,
+    cfg: ModelConfig,
+    kind: Tuple[str, str],
+    *,
+    positions,
+    cache: Optional[Params],
+    cache_pos,
+) -> Tuple[jnp.ndarray, Optional[Params], jnp.ndarray]:
+    mixer, ffn = kind
+    aux = jnp.zeros((), jnp.float32)
+    h = apply_norm(p["ln1"], x, cfg)
+    if seq_parallel_enabled():
+        h = constrain(h, "dp", "tp", None)
+    new_cache = cache
+    if mixer == "attn":
+        out, new_cache = apply_attention(
+            p["attn"], h, cfg, positions=positions, causal=True,
+            cache=cache, cache_pos=cache_pos,
+        )
+    elif mixer == "mla":
+        out, new_cache = apply_mla_attention(
+            p["attn"], h, cfg, positions=positions, causal=True,
+            cache=cache, cache_pos=cache_pos,
+        )
+    elif mixer == "mamba":
+        out, new_cache = ssm.apply_mamba(p["mamba"], h, cfg, cache=cache)
+    elif mixer == "rwkv":
+        out, tm_cache = rwkv6.apply_rwkv_timemix(
+            p["tm"], h, cfg, cache=cache,
+            scan_mode="chunk" if h.shape[1] > 1 else "seq",
+        )
+        if tm_cache is not None:
+            new_cache = dict(cache, **tm_cache)
+    else:
+        raise ValueError(mixer)
+    x = x + out
+    h = apply_norm(p["ln2"], x, cfg)
+    if ffn == "mlp":
+        out = apply_mlp(p["mlp"], h, cfg)
+    elif ffn == "moe":
+        out, aux = apply_moe(p["moe"], h, cfg)
+    elif ffn == "rwkv_cm":
+        out, cm_cache = rwkv6.apply_rwkv_channelmix(p["cm"], h, cfg, cache=new_cache)
+        if cm_cache is not None:
+            new_cache = dict(new_cache, **cm_cache)
+    x = x + out
+    return x, new_cache, aux
+
+
+def _apply_blocks(
+    params: Params,
+    x: jnp.ndarray,
+    cfg: ModelConfig,
+    *,
+    positions,
+    cache: Optional[Params],
+    cache_pos,
+) -> Tuple[jnp.ndarray, Optional[Params], jnp.ndarray]:
+    kinds = layer_kinds(cfg)
+    P_ = period(cfg)
+    n_blocks = cfg.num_layers // P_
+
+    def block_fn(carry, xs):
+        xc, aux = carry
+        bp, bc = xs
+        if seq_parallel_enabled():
+            # Megatron-style sequence parallelism: the residual carry (and
+            # hence the per-layer remat save) is sharded over the model axis
+            # along the sequence dim; GSPMD inserts all-gather at the
+            # attention boundary and reduce-scatter after.
+            xc = constrain(xc, "dp", "tp", None)
+        new_bc = {} if bc is not None else None
+        for j in range(P_):
+            sub_cache = bc[f"sub{j}"] if bc is not None else None
+            xc, nc, a = _apply_sublayer(
+                bp[f"sub{j}"], xc, cfg, kinds[j],
+                positions=positions, cache=sub_cache, cache_pos=cache_pos,
+            )
+            if new_bc is not None:
+                new_bc[f"sub{j}"] = nc
+            aux = aux + a
+        return (xc, aux), new_bc
+
+    if cfg.remat:
+        block_fn = jax.checkpoint(
+            block_fn, policy=jax.checkpoint_policies.nothing_saveable
+        )
+
+    aux0 = jnp.zeros((), jnp.float32)
+    if cfg.scan_layers and n_blocks > 1:
+        (x, aux), new_cache = jax.lax.scan(
+            block_fn, (x, aux0), (params["blocks"], cache)
+        )
+    else:
+        (x, aux), new_cache = block_fn((x, aux0), (params["blocks"], cache))
+    return x, new_cache, aux
+
+
+def _embed_inputs(params: Params, batch: Dict[str, jnp.ndarray], cfg: ModelConfig) -> jnp.ndarray:
+    x = apply_embedding(params["embed"], batch["tokens"], cfg)
+    if cfg.num_patch_tokens and "patch_embeds" in batch:
+        patches = jnp.einsum(
+            "bpe,ed->bpd",
+            batch["patch_embeds"].astype(x.dtype),
+            params["patch_proj"]["w"].astype(x.dtype),
+        )
+        x = jnp.concatenate([patches, x[:, cfg.num_patch_tokens :]], axis=1)
+    return constrain(x, "dp", None, None)
+
+
+def forward_train(
+    params: Params, batch: Dict[str, jnp.ndarray], cfg: ModelConfig
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (loss, aux_loss)."""
+    x = _embed_inputs(params, batch, cfg)
+    S = x.shape[1]
+    positions = jnp.arange(S)
+    x, _, aux = _apply_blocks(params, x, cfg, positions=positions, cache=None, cache_pos=None)
+    x = apply_norm(params["final_norm"], x, cfg)
+    logits = apply_lm_head(params.get("lm_head"), x, cfg, embed=params["embed"])
+    logits = constrain(logits, "dp", None, "tp")
+    targets = batch["targets"]
+    if cfg.num_patch_tokens:
+        # mask the stubbed patch positions out of the LM loss
+        mask = jnp.arange(targets.shape[1]) >= cfg.num_patch_tokens
+        lf = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        gold = jnp.take_along_axis(lf, targets[..., None], axis=-1)[..., 0]
+        loss = -(gold * mask[None]).sum() / jnp.maximum(mask.sum() * targets.shape[0], 1)
+    else:
+        loss = cross_entropy_loss(logits, targets)
+    return loss, aux
+
+
+PREFILL_CHUNK = 8_192  # sequence-chunked prefill above this length
+
+
+def prefill(
+    params: Params, batch: Dict[str, jnp.ndarray], cfg: ModelConfig, cache: Params
+) -> Tuple[jnp.ndarray, Params]:
+    """Writes positions [0, S) into the cache; returns last-token logits.
+
+    Long prompts run CHUNKED (vLLM-style): a lax.scan over PREFILL_CHUNK
+    token slices, each attending over the cache written so far — bounds
+    prefill activation memory to O(chunk) instead of O(S).  Attention-family
+    models only; recurrent families (mamba/rwkv hybrids) already have O(1)
+    per-token state and keep the single-pass path."""
+    S = batch["tokens"].shape[1]
+    chunkable = (
+        cfg.family == "decoder"
+        and not cfg.hybrid_attn_period
+        and not cfg.num_patch_tokens  # VLM stub concat spans the prefix
+        and S > PREFILL_CHUNK
+        and S % PREFILL_CHUNK == 0
+    )
+    if not chunkable:
+        x = _embed_inputs(params, batch, cfg)
+        positions = jnp.arange(S)
+        x, cache, _ = _apply_blocks(
+            params, x, cfg, positions=positions, cache=cache,
+            cache_pos=jnp.zeros((), jnp.int32),
+        )
+        x_last = apply_norm(params["final_norm"], x[:, -1:], cfg)
+        logits = apply_lm_head(params.get("lm_head"), x_last, cfg, embed=params["embed"])
+        return logits[:, 0], cache
+
+    C = PREFILL_CHUNK
+    n = S // C
+    toks = batch["tokens"].reshape(-1, n, C).transpose(1, 0, 2)  # (n, B, C)
+
+    def body(cache, inp):
+        i, tok_chunk = inp
+        x = apply_embedding(params["embed"], tok_chunk, cfg)
+        x = constrain(x, "dp", None, None)
+        positions = i * C + jnp.arange(C)
+        x, cache, _ = _apply_blocks(
+            params, x, cfg, positions=positions, cache=cache, cache_pos=i * C
+        )
+        return cache, x[:, -1:]
+
+    cache, lasts = jax.lax.scan(body, cache, (jnp.arange(n), toks))
+    x_last = apply_norm(params["final_norm"], lasts[-1], cfg)
+    logits = apply_lm_head(params.get("lm_head"), x_last, cfg, embed=params["embed"])
+    return logits[:, 0], cache
+
+
+def decode_step(
+    params: Params,
+    cache: Params,
+    tokens: jnp.ndarray,  # (B, 1)
+    pos,  # current position: scalar int32, or (B,) for per-slot decode
+    cfg: ModelConfig,
+) -> Tuple[jnp.ndarray, Params]:
+    x = apply_embedding(params["embed"], tokens, cfg)
+    if getattr(pos, "ndim", 0) == 1:
+        positions = pos[:, None] + jnp.arange(1)  # (B, 1)
+    else:
+        positions = pos + jnp.arange(1)
+    x, cache, _ = _apply_blocks(
+        params, x, cfg, positions=positions, cache=cache, cache_pos=pos
+    )
+    x = apply_norm(params["final_norm"], x, cfg)
+    logits = apply_lm_head(params.get("lm_head"), x, cfg, embed=params["embed"])
+    return logits[:, 0], cache

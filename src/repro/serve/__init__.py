@@ -1,0 +1,1 @@
+"""Serving substrate: prefill/decode programs + continuous-batching engine."""

@@ -1,0 +1,37 @@
+"""Jitted serving programs: prefill / decode per architecture family."""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import encdec, transformer
+
+
+def make_serve_fns(cfg: ModelConfig) -> Dict[str, Callable]:
+    """Returns dict(init_cache, prefill, decode) for the family."""
+    if cfg.family == "encdec":
+        return {
+            "init_cache": lambda batch, max_len: encdec.init_dec_cache(cfg, batch, max_len),
+            "prefill": lambda params, batch, cache: encdec.prefill(params, batch, cfg, cache),
+            "decode": lambda params, cache, tok, pos: encdec.decode_step(
+                params, cache, tok, pos, cfg
+            ),
+        }
+    return {
+        "init_cache": lambda batch, max_len: transformer.init_cache(cfg, batch, max_len),
+        "prefill": lambda params, batch, cache: transformer.prefill(params, batch, cfg, cache),
+        "decode": lambda params, cache, tok, pos: transformer.decode_step(
+            params, cache, tok, pos, cfg
+        ),
+    }
+
+
+def greedy_sample(logits: jnp.ndarray) -> jnp.ndarray:
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def temperature_sample(logits: jnp.ndarray, key, temperature: float = 1.0) -> jnp.ndarray:
+    return jax.random.categorical(key, logits / max(temperature, 1e-5)).astype(jnp.int32)

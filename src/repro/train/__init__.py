@@ -1,0 +1,1 @@
+"""Training substrate: optimizers, steps, checkpointing, fault tolerance."""

@@ -1,0 +1,61 @@
+"""Gradient compression for the DP all-reduce (distributed-optimization trick).
+
+Models the wire format of the gradient reduction: ``bf16`` halves collective
+bytes; ``int8_ef`` quarters them with per-tensor scaling + error feedback
+(the quantization residual is carried to the next step, so the scheme is
+unbiased in the long run).  The compress/decompress pair wraps the gradients
+inside the jitted train step — on a real mesh XLA reduces the *compressed*
+representation; here correctness properties are what we test.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def init_error_feedback(params: Any) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+
+
+def compress_bf16(grads: Any) -> Any:
+    return jax.tree.map(lambda g: g.astype(jnp.bfloat16), grads)
+
+
+def decompress_bf16(grads: Any) -> Any:
+    return jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+
+
+def compress_int8(g: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    scale = jnp.maximum(jnp.abs(g).max(), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decompress_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def apply_compression(
+    grads: Any, ef: Optional[Any], mode: str
+) -> Tuple[Any, Optional[Any]]:
+    """Returns (effective grads after the simulated wire round-trip, new ef)."""
+    if mode == "none":
+        return grads, ef
+    if mode == "bf16":
+        return decompress_bf16(compress_bf16(grads)), ef
+    if mode == "int8_ef":
+        assert ef is not None, "int8_ef requires error-feedback state"
+
+        def one(g, e):
+            g = g.astype(jnp.float32) + e
+            q, s = compress_int8(g)
+            deq = decompress_int8(q, s)
+            return deq, g - deq
+
+        flat_g, tdef = jax.tree.flatten(grads)
+        flat_e = jax.tree.leaves(ef)
+        outs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+        return tdef.unflatten([o[0] for o in outs]), tdef.unflatten([o[1] for o in outs])
+    raise ValueError(f"unknown compression mode {mode!r}")

@@ -1,0 +1,70 @@
+"""Fault-tolerance runtime pieces (1000+-node posture).
+
+* :class:`HeartbeatMonitor` — tracks liveness of participants; a host whose
+  heartbeat is older than ``timeout`` is declared dead.  On a real cluster
+  each host POSTs to the coordinator; here it is driven in-process (tested).
+* :func:`elastic_plan` — pure function (num_items, alive_hosts) -> shard map;
+  on membership change every survivor recomputes its slice with no
+  coordination and no data loss (paired with ``sampler.shard_plan``).
+* :class:`RestartPolicy` — crash/restore loop helper: restore latest
+  checkpoint, fast-forward the loader, resume (used by launch/train.py).
+
+Straggler mitigation at the *data layer* (hedged GETs) lives in
+``core.fetcher``; at the *step* layer stragglers are absorbed by the bounded
+prefetch queue.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence
+
+from repro.core.sampler import shard_plan
+
+
+class HeartbeatMonitor:
+    def __init__(self, hosts: Sequence[int], timeout_s: float = 30.0) -> None:
+        self.timeout_s = timeout_s
+        self._last: Dict[int, float] = {h: time.monotonic() for h in hosts}
+
+    def beat(self, host: int, now: Optional[float] = None) -> None:
+        self._last[host] = time.monotonic() if now is None else now
+
+    def alive(self, now: Optional[float] = None) -> List[int]:
+        now = time.monotonic() if now is None else now
+        return sorted(h for h, t in self._last.items() if now - t <= self.timeout_s)
+
+    def dead(self, now: Optional[float] = None) -> List[int]:
+        now = time.monotonic() if now is None else now
+        return sorted(h for h, t in self._last.items() if now - t > self.timeout_s)
+
+
+def elastic_plan(global_batch: Sequence[int], alive_hosts: Sequence[int]) -> Dict[int, List[int]]:
+    """Re-partition a global batch over the currently-alive hosts.
+
+    Rank r of host h = index of h in the sorted alive list: the plan is a
+    pure function of (batch, membership) — every survivor computes the same
+    answer independently.
+    """
+    alive = sorted(alive_hosts)
+    n = len(alive)
+    return {h: shard_plan(global_batch, r, n) for r, h in enumerate(alive)}
+
+
+@dataclass
+class RestartPolicy:
+    """Resume-from-latest with bounded retries (driver-side crash loop)."""
+
+    max_restarts: int = 3
+    backoff_s: float = 1.0
+    restarts: int = 0
+
+    def should_restart(self) -> bool:
+        return self.restarts < self.max_restarts
+
+    def on_failure(self) -> float:
+        """Returns the backoff to sleep; raises if the budget is exhausted."""
+        self.restarts += 1
+        if self.restarts > self.max_restarts:
+            raise RuntimeError(f"exceeded {self.max_restarts} restarts")
+        return self.backoff_s * (2 ** (self.restarts - 1))

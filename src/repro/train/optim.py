@@ -1,0 +1,183 @@
+"""Optimizers (AdamW / Adafactor / SGD-momentum) + LR schedules.
+
+Optax-style pure functions but dependency-free.  Adafactor (factored second
+moments, no momentum) is the fit-enabler for the 340B config: ~4 bytes/param
+of optimizer state instead of AdamW's 8.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import TrainConfig
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, jnp.ndarray], Tuple[Any, Any]]
+    # update(grads, opt_state, params, step) -> (new_params, new_opt_state)
+
+
+def make_schedule(cfg: TrainConfig) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    base, warm, total = cfg.learning_rate, cfg.warmup_steps, cfg.total_steps
+
+    def sched(step):
+        step = step.astype(jnp.float32)
+        warm_lr = base * jnp.minimum(1.0, (step + 1) / max(warm, 1))
+        if cfg.schedule == "constant":
+            return warm_lr
+        frac = jnp.clip((step - warm) / max(total - warm, 1), 0.0, 1.0)
+        if cfg.schedule == "linear":
+            return warm_lr * (1.0 - frac)
+        return warm_lr * 0.5 * (1.0 + jnp.cos(jnp.pi * frac))  # cosine
+
+    return sched
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), norm
+
+
+def make_adamw(cfg: TrainConfig) -> Optimizer:
+    sched = make_schedule(cfg)
+    b1, b2, eps, wd = cfg.beta1, cfg.beta2, cfg.eps, cfg.weight_decay
+
+    def init(params):
+        zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+        return {"mu": jax.tree.map(zeros, params), "nu": jax.tree.map(zeros, params)}
+
+    def update(grads, state, params, step):
+        if cfg.grad_clip:
+            grads, _ = clip_by_global_norm(grads, cfg.grad_clip)
+        lr = sched(step)
+        t = step.astype(jnp.float32) + 1.0
+        bc1 = 1.0 - b1**t
+        bc2 = 1.0 - b2**t
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            mhat = m / bc1
+            vhat = v / bc2
+            step_ = mhat / (jnp.sqrt(vhat) + eps) + wd * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * step_).astype(p.dtype), m, v
+
+        flat_g, tdef = jax.tree.flatten(grads)
+        flat_m = jax.tree.leaves(state["mu"])
+        flat_v = jax.tree.leaves(state["nu"])
+        flat_p = jax.tree.leaves(params)
+        out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+        new_p = tdef.unflatten([o[0] for o in out])
+        new_m = tdef.unflatten([o[1] for o in out])
+        new_v = tdef.unflatten([o[2] for o in out])
+        return new_p, {"mu": new_m, "nu": new_v}
+
+    return Optimizer(init, update)
+
+
+def make_adafactor(cfg: TrainConfig) -> Optimizer:
+    """Factored Adafactor (Shazeer & Stern): row/col second moments for >=2D
+    tensors (factored over the last two dims), full for 1D.  No momentum."""
+    sched = make_schedule(cfg)
+    eps1, eps2 = 1e-30, 1e-3
+    wd = cfg.weight_decay
+
+    def init(params):
+        def st(p):
+            if p.ndim >= 2:
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros_like(p, dtype=jnp.float32)}
+
+        return {"v": jax.tree.map(st, params, is_leaf=lambda x: hasattr(x, "ndim"))}
+
+    def update(grads, state, params, step):
+        if cfg.grad_clip:
+            grads, _ = clip_by_global_norm(grads, cfg.grad_clip)
+        lr = sched(step)
+        t = step.astype(jnp.float32) + 1.0
+        beta2 = 1.0 - t ** (-0.8)
+
+        def upd(g, v, p):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps1
+            if p.ndim >= 2:
+                vr = beta2 * v["vr"] + (1 - beta2) * g2.mean(-1)
+                vc = beta2 * v["vc"] + (1 - beta2) * g2.mean(-2)
+                denom = vr[..., None] * vc[..., None, :] / jnp.maximum(
+                    vr.mean(-1, keepdims=True)[..., None], eps1
+                )
+                u = g * jax.lax.rsqrt(jnp.maximum(denom, eps1))
+                nv = {"vr": vr, "vc": vc}
+            else:
+                nv_ = beta2 * v["v"] + (1 - beta2) * g2
+                u = g * jax.lax.rsqrt(jnp.maximum(nv_, eps1))
+                nv = {"v": nv_}
+            # update clipping (RMS <= 1)
+            rms = jnp.sqrt(jnp.mean(u * u))
+            u = u / jnp.maximum(1.0, rms)
+            pf = p.astype(jnp.float32)
+            scale = jnp.maximum(jnp.sqrt(jnp.mean(pf * pf)), eps2)
+            newp = pf - lr * scale * u - lr * wd * pf
+            return newp.astype(p.dtype), nv
+
+        flat_g, tdef = jax.tree.flatten(grads)
+        flat_p = jax.tree.leaves(params)
+        flat_v = tdef.flatten_up_to(state["v"])
+        out = [upd(g, v, p) for g, v, p in zip(flat_g, flat_v, flat_p)]
+        return tdef.unflatten([o[0] for o in out]), {
+            "v": tdef.unflatten([o[1] for o in out])
+        }
+
+    return Optimizer(init, update)
+
+
+def make_sgd(cfg: TrainConfig) -> Optimizer:
+    sched = make_schedule(cfg)
+    momentum = cfg.beta1
+
+    def init(params):
+        return {"m": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)}
+
+    def update(grads, state, params, step):
+        if cfg.grad_clip:
+            grads, _ = clip_by_global_norm(grads, cfg.grad_clip)
+        lr = sched(step)
+
+        def upd(g, m, p):
+            g = g.astype(jnp.float32) + cfg.weight_decay * p.astype(jnp.float32)
+            m = momentum * m + g
+            return (p.astype(jnp.float32) - lr * m).astype(p.dtype), m
+
+        flat_g, tdef = jax.tree.flatten(grads)
+        out = [
+            upd(g, m, p)
+            for g, m, p in zip(flat_g, jax.tree.leaves(state["m"]), jax.tree.leaves(params))
+        ]
+        return tdef.unflatten([o[0] for o in out]), {"m": tdef.unflatten([o[1] for o in out])}
+
+    return Optimizer(init, update)
+
+
+def make_optimizer(cfg: TrainConfig) -> Optimizer:
+    if cfg.optimizer == "adamw":
+        return make_adamw(cfg)
+    if cfg.optimizer == "adafactor":
+        return make_adafactor(cfg)
+    if cfg.optimizer == "sgd":
+        return make_sgd(cfg)
+    raise ValueError(f"unknown optimizer {cfg.optimizer!r}")

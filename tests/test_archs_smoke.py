@@ -1,0 +1,156 @@
+"""Per-architecture smoke tests: reduced config, one fwd/train step on CPU,
+output shapes + no NaNs.  Decoder archs also run prefill + decode."""
+import jax
+import jax.numpy as jnp
+import jax.random as jr
+import numpy as np
+import pytest
+
+from repro.config import TrainConfig, get_arch, list_archs
+from repro.configs import ASSIGNED
+from repro.models import encdec, transformer
+from repro.train.steps import (
+    init_resnet_train_state,
+    init_train_state,
+    make_resnet_train_step,
+    make_train_step,
+)
+
+TCFG = TrainConfig(optimizer="adamw", learning_rate=1e-3, warmup_steps=1)
+B, S = 2, 24
+
+
+def make_batch(cfg, key=0):
+    if cfg.family == "resnet":
+        return {
+            "image": jr.normal(jr.PRNGKey(key), (B, 3, 32, 32)),
+            "label": jr.randint(jr.PRNGKey(key + 1), (B,), 0, cfg.num_classes),
+        }
+    batch = {
+        "tokens": jr.randint(jr.PRNGKey(key), (B, S), 0, cfg.vocab_size),
+        "targets": jr.randint(jr.PRNGKey(key + 1), (B, S), 0, cfg.vocab_size),
+    }
+    if cfg.family == "encdec":
+        batch["frames"] = jr.normal(jr.PRNGKey(key + 2), (B, cfg.encoder_seq_len, cfg.d_model))
+    if cfg.num_patch_tokens:
+        batch["patch_embeds"] = jr.normal(
+            jr.PRNGKey(key + 3), (B, cfg.num_patch_tokens, cfg.frontend_dim)
+        )
+    return batch
+
+
+def test_registry_has_all_assigned():
+    names = list_archs()
+    for a in ASSIGNED:
+        assert a in names
+    assert "resnet18-imagenet" in names
+    assert len(ASSIGNED) == 10
+
+
+@pytest.mark.parametrize("name", [a for a in ASSIGNED] + ["resnet18-imagenet"])
+def test_arch_one_train_step(name):
+    cfg = get_arch(name, smoke=True)
+    if cfg.family == "resnet":
+        state = init_resnet_train_state(cfg, TCFG, jr.PRNGKey(0))
+        step = jax.jit(make_resnet_train_step(cfg, TCFG))
+    else:
+        state = init_train_state(cfg, TCFG, jr.PRNGKey(0))
+        step = jax.jit(make_train_step(cfg, TCFG))
+    batch = make_batch(cfg)
+    state, m = step(state, batch)
+    assert np.isfinite(float(m["loss"])), name
+    assert float(m["grad_norm"]) > 0
+    assert int(state["step"]) == 1
+    # params actually moved
+    l0 = jax.tree.leaves(state["params"])[0]
+    assert np.isfinite(np.asarray(l0)).all()
+
+
+@pytest.mark.parametrize(
+    "name", [a for a in ASSIGNED if a != "resnet18-imagenet"]
+)
+def test_arch_prefill_decode(name):
+    cfg = get_arch(name, smoke=True)
+    if cfg.family == "encdec":
+        params = encdec.init_encdec(jr.PRNGKey(0), cfg)
+        cache = encdec.init_dec_cache(cfg, B, S + 8)
+        batch = make_batch(cfg)
+        logits, cache = jax.jit(lambda p, b, c: encdec.prefill(p, b, cfg, c))(
+            params, batch, cache
+        )
+        logits2, cache = jax.jit(lambda p, c, t, pos: encdec.decode_step(p, c, t, pos, cfg))(
+            params, cache, batch["tokens"][:, -1:], jnp.int32(S)
+        )
+    else:
+        params = transformer.init_lm(jr.PRNGKey(0), cfg)
+        cache = transformer.init_cache(cfg, B, S + 8)
+        batch = make_batch(cfg)
+        logits, cache = jax.jit(lambda p, b, c: transformer.prefill(p, b, cfg, c))(
+            params, batch, cache
+        )
+        logits2, cache = jax.jit(
+            lambda p, c, t, pos: transformer.decode_step(p, c, t, pos, cfg)
+        )(params, cache, batch["tokens"][:, -1:], jnp.int32(S))
+    assert logits.shape == (B, cfg.vocab_size)
+    assert logits2.shape == (B, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits2)).all(), name
+
+
+def test_decode_matches_forward_gqa():
+    """Teacher-forced decode logits == full-forward logits (dense arch)."""
+    cfg = get_arch("granite-8b", smoke=True)
+    params = transformer.init_lm(jr.PRNGKey(0), cfg)
+    toks = jr.randint(jr.PRNGKey(1), (B, 12), 0, cfg.vocab_size)
+    batch = {"tokens": toks, "targets": toks}
+    x = transformer._embed_inputs(params, batch, cfg)
+    pos = jnp.arange(12)
+    h, _, _ = transformer._apply_blocks(params, x, cfg, positions=pos, cache=None, cache_pos=None)
+    h = transformer.apply_norm(params["final_norm"], h, cfg)
+    full_logits = transformer.apply_lm_head(params.get("lm_head"), h, cfg, embed=params["embed"])
+
+    cache = transformer.init_cache(cfg, B, 16)
+    outs = []
+    for t in range(12):
+        lg, cache = transformer.decode_step(params, cache, toks[:, t : t + 1], jnp.int32(t), cfg)
+        outs.append(lg)
+    dec_logits = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(full_logits, dec_logits, rtol=2e-2, atol=2e-2)
+
+
+def test_moe_aux_loss_nonzero():
+    cfg = get_arch("qwen2-moe-a2.7b", smoke=True)
+    params = transformer.init_lm(jr.PRNGKey(0), cfg)
+    batch = make_batch(cfg)
+    loss, aux = jax.jit(lambda p, b: transformer.forward_train(p, b, cfg))(params, batch)
+    assert float(aux) > 0.0
+
+
+def test_param_counts_sane():
+    from repro.models.counting import count_active_params, count_params
+
+    dense = get_arch("granite-8b")
+    n = count_params(dense)
+    assert 7.0e9 < n < 9.5e9, n  # ~8B-class
+    moe = get_arch("qwen2-moe-a2.7b")
+    assert count_active_params(moe) < count_params(moe)
+    nemotron = get_arch("nemotron-4-340b")
+    n340 = count_params(nemotron)
+    assert 3.0e11 < n340 < 3.9e11, n340  # ~340B
+    jamba = get_arch("jamba-v0.1-52b")
+    nj = count_params(jamba)
+    assert 4.0e10 < nj < 6.5e10, nj  # ~52B
+    rwkv = get_arch("rwkv6-7b")
+    nr = count_params(rwkv)
+    assert 5.5e9 < nr < 9.0e9, nr  # ~7B
+    whisper = get_arch("whisper-large-v3")
+    nw = count_params(whisper)
+    assert 1.2e9 < nw < 2.2e9, nw  # ~1.5B
+
+
+def test_hybrid_layer_schedule():
+    cfg = get_arch("jamba-v0.1-52b")
+    kinds = transformer.layer_kinds(cfg)
+    assert len(kinds) == 32
+    assert sum(1 for m, _ in kinds if m == "attn") == 4  # 1:7 interleave
+    assert sum(1 for _, f in kinds if f == "moe") == 16  # every other layer
+    assert kinds[3][0] == "attn"

@@ -1,0 +1,68 @@
+"""Integration test of the dry-run machinery on a small (2,4) mesh.
+
+Runs in a subprocess because XLA_FLAGS must set the fake-device count
+before jax initializes (the big sweep does the same per the brief: smoke
+tests keep 1 device, only the dry-run sees many).
+"""
+import json
+import os
+import subprocess
+import sys
+
+SCRIPT = r'''
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import jax, jax.numpy as jnp
+from repro.config import get_arch, ShapeConfig, TrainConfig
+from repro.launch import specs as S
+from repro.launch.hlo_cost import analyze_hlo
+from repro.launch.mesh import make_mesh
+from repro.models.sharding import use_activation_mesh
+from repro.models import transformer
+from repro.train.steps import make_train_step
+
+cfg = get_arch("granite-moe-3b-a800m", smoke=True)  # exercises MoE + EP pad
+tcfg = TrainConfig(microbatches=2)
+mesh = make_mesh((2, 4), ("data", "model"))
+shape = ShapeConfig("t", 128, 8, "train")
+with use_activation_mesh(mesh):
+    fn = jax.jit(make_train_step(cfg, tcfg), donate_argnums=(0,))
+    compiled = fn.lower(
+        S.state_specs(cfg, tcfg, mesh), S.input_specs(cfg, shape, mesh)
+    ).compile()
+mem = compiled.memory_analysis()
+mc = analyze_hlo(compiled.as_text())
+# decode path incl. cache specs on the small mesh
+dshape = ShapeConfig("d", 64, 8, "decode")
+with use_activation_mesh(mesh):
+    dfn = jax.jit(
+        lambda p, c, t, pos: transformer.decode_step(p, c, t, pos, cfg),
+        donate_argnums=(1,),
+    )
+    dcomp = dfn.lower(
+        S.param_specs_only(cfg, mesh),
+        S.cache_specs(cfg, dshape, mesh),
+        S.input_specs(cfg, dshape, mesh)["tokens"],
+        jnp.int32(63),
+    ).compile()
+print(json.dumps({
+    "train_temp": mem.temp_size_in_bytes,
+    "flops": mc.flops,
+    "wire": mc.wire_bytes,
+    "decode_ok": True,
+}))
+'''
+
+
+def test_dryrun_small_mesh():
+    env = dict(os.environ, PYTHONPATH="src")
+    out = subprocess.run(
+        [sys.executable, "-c", SCRIPT], capture_output=True, text=True,
+        env=env, timeout=600, cwd=os.path.dirname(os.path.dirname(__file__)),
+    )
+    assert out.returncode == 0, out.stderr[-2000:]
+    rec = json.loads(out.stdout.strip().splitlines()[-1])
+    assert rec["decode_ok"]
+    assert rec["flops"] > 0 and rec["wire"] > 0
+    assert rec["train_temp"] > 0

@@ -1,0 +1,82 @@
+"""Chunked (vLLM-style) prefill == single-pass prefill, per family."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+import repro.models.transformer as T
+from repro.config import get_arch
+
+
+@pytest.mark.parametrize("arch", ["granite-8b", "minicpm3-4b"])
+def test_chunked_prefill_matches_single_pass(arch):
+    cfg = get_arch(arch, smoke=True)
+    params = T.init_lm(jax.random.PRNGKey(0), cfg)
+    B, S = 2, 32
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                                          cfg.vocab_size)}
+    logits1, c1 = T.prefill(params, batch, cfg, T.init_cache(cfg, B, S))
+    old = T.PREFILL_CHUNK
+    try:
+        T.PREFILL_CHUNK = 8
+        logits2, c2 = T.prefill(params, batch, cfg, T.init_cache(cfg, B, S))
+    finally:
+        T.PREFILL_CHUNK = old
+    assert float(jnp.abs(logits1.astype(jnp.float32)
+                         - logits2.astype(jnp.float32)).max()) < 0.05
+    for a, b in zip(jax.tree.leaves(c1), jax.tree.leaves(c2)):
+        assert float(jnp.abs(a.astype(jnp.float32)
+                             - b.astype(jnp.float32)).max()) < 0.05
+
+
+def test_chunked_prefill_then_decode_consistent():
+    """Decode after a chunked prefill continues exactly like decode after a
+    single-pass prefill (cache contents equivalent end-to-end)."""
+    cfg = get_arch("granite-8b", smoke=True)
+    params = T.init_lm(jax.random.PRNGKey(0), cfg)
+    B, S, MAX = 2, 16, 24
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab_size)
+    batch = {"tokens": toks}
+
+    def run(chunk):
+        old = T.PREFILL_CHUNK
+        try:
+            T.PREFILL_CHUNK = chunk
+            cache = T.init_cache(cfg, B, MAX)
+            logits, cache = T.prefill(params, batch, cfg, cache)
+            nxt = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+            outs = []
+            for i in range(4):
+                logits, cache = T.decode_step(params, cache, nxt,
+                                              jnp.int32(S + i), cfg)
+                nxt = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+                outs.append(nxt)
+            return jnp.concatenate(outs, 1)
+        finally:
+            T.PREFILL_CHUNK = old
+
+    a = run(10_000)  # single pass
+    b = run(4)       # chunked
+    assert (a == b).all()
+
+
+def test_mla_absorbed_decode_matches_expanded(monkeypatch):
+    """DeepSeek-V2 absorbed-matmul MLA decode == expanded-cache decode
+    (f32; the bf16 delta is contraction-reassociation noise only)."""
+    import dataclasses
+
+    import repro.models.layers as L
+
+    cfg = get_arch("minicpm3-4b", smoke=True)
+    cfg = dataclasses.replace(cfg, dtype="float32")
+    params = T.init_lm(jax.random.PRNGKey(0), cfg)
+    B, S, MAX = 2, 12, 20
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab_size)
+    cache = T.init_cache(cfg, B, MAX)
+    logits, cache = T.prefill(params, {"tokens": toks}, cfg, cache)
+    nxt = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+    l_abs, _ = T.decode_step(params, cache, nxt, jnp.int32(S), cfg)
+
+    # disable absorption (MLA_ABSORB_MAX_S = 0 -> expanded path) and rerun
+    monkeypatch.setattr(L, "MLA_ABSORB_MAX_S", 0)
+    l_exp, _ = T.decode_step(params, cache, nxt, jnp.int32(S), cfg)
+    assert float(jnp.abs(l_abs - l_exp).max()) < 2e-4

@@ -1,0 +1,100 @@
+"""Serving engine: batched decode, continuous batching, greedy parity."""
+import jax
+import jax.numpy as jnp
+import jax.random as jr
+import numpy as np
+import pytest
+
+from repro.config import get_arch
+from repro.models import transformer
+from repro.serve.engine import ServeEngine
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_arch("granite-8b", smoke=True)
+    params = transformer.init_lm(jr.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def reference_greedy(cfg, params, prompt, n_new):
+    """Sequential batch-1 decode, the trusted reference."""
+    cache = transformer.init_cache(cfg, 1, 64)
+    batch = {"tokens": jnp.asarray(prompt, jnp.int32)[None]}
+    logits, cache = transformer.prefill(params, batch, cfg, cache)
+    out = [int(jnp.argmax(logits[0]))]
+    pos = len(prompt)
+    for _ in range(n_new - 1):
+        lg, cache = transformer.decode_step(
+            params, cache, jnp.asarray([[out[-1]]], jnp.int32), jnp.int32(pos), cfg
+        )
+        out.append(int(jnp.argmax(lg[0])))
+        pos += 1
+    return out
+
+
+def test_engine_matches_reference(setup):
+    cfg, params = setup
+    prompts = [[5, 7, 11], [1, 2, 3], [9, 9, 9]]
+    eng = ServeEngine(cfg, params, num_slots=2, max_len=64)
+    for p in prompts:
+        eng.submit(p, max_new_tokens=6)
+    done = eng.run_until_drained()
+    assert len(done) == 3
+    by_uid = {r.uid: r for r in done}
+    for uid, p in zip(sorted(by_uid), prompts):
+        ref = reference_greedy(cfg, params, p, 6)
+        assert by_uid[uid].output == ref, (uid, by_uid[uid].output, ref)
+
+
+def test_continuous_batching_refills_slots(setup):
+    cfg, params = setup
+    eng = ServeEngine(cfg, params, num_slots=2, max_len=64)
+    # 1 long + 3 short: the short ones must rotate through slot(s) while the
+    # long one keeps decoding.
+    eng.submit([1, 2, 3], max_new_tokens=20)
+    for _ in range(3):
+        eng.submit([4, 5, 6], max_new_tokens=3)
+    done = eng.run_until_drained()
+    assert len(done) == 4
+    long_req = next(r for r in done if r.max_new_tokens == 20)
+    assert len(long_req.output) == 20
+    # throughput accounting: prefill emits each request's 1st token, the
+    # engine ticks produce the rest: (20-1) + 3*(3-1)
+    assert eng.tokens_generated == 19 + 3 * 2
+    assert eng.ticks <= 20  # batched + refilled, not sequential (would be ~25)
+
+
+def test_per_slot_positions_are_isolated(setup):
+    """Different prompt lengths per slot must not cross-contaminate."""
+    cfg, params = setup
+    eng = ServeEngine(cfg, params, num_slots=2, max_len=64)
+    pa = [3, 1, 4, 1, 5, 9, 2, 6]  # length 8
+    pb = [2, 7]  # length 2
+    eng.submit(pa, max_new_tokens=4)
+    eng.submit(pb, max_new_tokens=4)
+    done = eng.run_until_drained()
+    by_uid = {r.uid: r for r in done}
+    assert by_uid[1].output == reference_greedy(cfg, params, pa, 4)
+    assert by_uid[2].output == reference_greedy(cfg, params, pb, 4)
+
+
+def test_eos_stops_early(setup):
+    cfg, params = setup
+    ref = reference_greedy(cfg, params, [5, 7, 11], 8)
+    eos = ref[2]  # force an early stop at the 3rd generated token
+    eng = ServeEngine(cfg, params, num_slots=1, max_len=64)
+    eng.submit([5, 7, 11], max_new_tokens=8, eos_id=eos)
+    done = eng.run_until_drained()
+    assert done[0].output == ref[:3]
+
+
+def test_rwkv_family_serving():
+    cfg = get_arch("rwkv6-7b", smoke=True)
+    params = transformer.init_lm(jr.PRNGKey(0), cfg)
+    eng = ServeEngine(cfg, params, num_slots=2, max_len=32)
+    eng.submit([1, 2, 3, 4], max_new_tokens=4)
+    eng.submit([5, 6], max_new_tokens=4)
+    done = eng.run_until_drained()
+    assert len(done) == 2
+    assert all(len(r.output) == 4 for r in done)
