@@ -19,13 +19,12 @@ import os
 import statistics
 import time
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, Iterable, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
-import numpy as np
 
-from repro.config import LoaderConfig, StoreConfig
+from repro.config import LoaderConfig
 from repro.core.loader import ConcurrentDataLoader
-from repro.core.tracing import GET_BATCH, GET_ITEM, Tracer
+from repro.core.tracing import Tracer
 from repro.data.dataset import ImageDataset
 from repro.data.imagenet_synth import build_synthetic_imagenet
 from repro.data.store import (

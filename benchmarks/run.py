@@ -23,6 +23,7 @@ BENCHES = [
     "bench_lazy_init",     # Fig 8
     "bench_cache",         # Fig 9
     "bench_heatmap",       # Figs 10/11
+    "bench_autotune",      # Figs 10/11, online (closed-loop knob control)
     "bench_dataset_pool",  # Fig 12
     "bench_e2e",           # Figs 13/14/15
     "bench_shards",        # A.5
@@ -43,6 +44,12 @@ def main() -> int:
     if args.only:
         want = {w if w.startswith("bench_") else f"bench_{w}"
                 for w in args.only.split(",")}
+        unknown = want - set(BENCHES)
+        if unknown:
+            # a typo'd/renamed bench must not silently pass CI (0/0 claims)
+            print(f"error: unknown benchmark(s) {sorted(unknown)}; "
+                  f"known: {BENCHES}", file=sys.stderr)
+            return 2
         selected = [b for b in BENCHES if b in want]
 
     failures = 0

@@ -6,9 +6,8 @@ configs live in ``repro.configs`` and register themselves in ``ARCH_REGISTRY``.
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass, field, replace  # noqa: F401  (replace re-exported)
-from typing import Any, Callable, Mapping, Optional, Sequence, Tuple
+from typing import Callable, Mapping, Optional, Tuple
 
 # ---------------------------------------------------------------------------
 # Model configuration
@@ -182,6 +181,54 @@ class StoreConfig:
 
 
 @dataclass(frozen=True)
+class AutotuneConfig:
+    """Closed-loop knob control for the loader (online analogue of the
+    Fig. 10/11 grid search).
+
+    A hill-climbing controller with hysteresis observes windowed throughput
+    (``Tracer`` get_batch spans) plus store/fetch signals and adjusts, at a
+    safe between-batch boundary: per-worker fetch concurrency, the prefetch
+    outstanding window, hedging on/off, and (when attached) the device
+    prefetch ring depth.  All knobs are clamped to the bounds below.
+    """
+
+    enabled: bool = False
+    # measurement window: closes after at least `interval_batches` batches
+    # AND `min_window_s` wall time.  The wall-time floor matters: delivery is
+    # bursty (the reorder buffer releases several batches at once), so a
+    # batch-count-only window can span microseconds and measure buffer pops
+    # instead of pipeline production rate.
+    interval_batches: int = 4
+    min_window_s: float = 0.2
+    # measured windows to observe before the first probe (the first window is
+    # warped by the prefetch burst + worker startup)
+    warmup_windows: int = 1
+    # accept a move only if windowed throughput improves by this fraction;
+    # revert if it regresses by more than it (hysteresis dead-band)
+    rel_improvement: float = 0.05
+    # knob bounds (inclusive)
+    min_fetch_workers: int = 1
+    max_fetch_workers: int = 64
+    min_outstanding: int = 1
+    max_outstanding: int = 64
+    min_device_prefetch: int = 1
+    max_device_prefetch: int = 8
+    # multiplicative step for integer knobs (value *= step / value //= step)
+    step_factor: int = 2
+    # allow the controller to trial-toggle hedged requests once concurrency
+    # knobs have plateaued (threaded impl only)
+    tune_hedge: bool = False
+    # consecutive plateau windows before the controller goes quiescent
+    patience: int = 3
+    # exploration heartbeat: while quiescent, re-probe once every this many
+    # windows (0 = off).  Escapes premature parking after early noise
+    # reverts — a collapse-based re-arm alone cannot detect "parked at a
+    # stable but suboptimal point".  A failed heartbeat probe re-quiesces
+    # immediately; an accepted one resumes full climbing.
+    reprobe_windows: int = 8
+
+
+@dataclass(frozen=True)
 class LoaderConfig:
     impl: str = "threaded"  # vanilla | threaded | asyncio
     batch_size: int = 256
@@ -200,6 +247,9 @@ class LoaderConfig:
     hedge_factor: float = 3.0
     hedge_min_s: float = 0.05
     timeout_s: float = 120.0
+    # online knob control (off by default: behaviour is bit-identical to a
+    # statically configured loader when disabled)
+    autotune: AutotuneConfig = AutotuneConfig()
 
 
 @dataclass(frozen=True)

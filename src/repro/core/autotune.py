@@ -1,0 +1,492 @@
+"""Online loader autotuning — closed-loop version of the Fig. 10/11 grid.
+
+The paper finds the best (workers x fetchers x prefetch) point by *offline*
+grid search per storage backend; the optimum moves with storage latency,
+object size and contention, so a production loader has to find it *online*.
+:class:`AutotuneController` is a hill-climbing feedback controller with
+hysteresis that consumes live signals the stack already produces —
+
+* windowed throughput from ``Tracer`` ``get_batch`` spans (the objective),
+* per-stage latency aggregates (:func:`repro.core.tracing.window_summary`)
+  and ``SimulatedS3Store.StoreStats`` deltas (probe-order heuristics and
+  diagnostics),
+
+— and adjusts loader knobs at the safe between-batch boundary:
+
+* per-worker fetch concurrency (``Fetcher.resize``),
+* the prefetch outstanding window (``_LoaderIter.max_outstanding``),
+* hedged requests on/off (``HedgeTracker.enabled``),
+* ``DevicePrefetchRing`` depth (when a ring is attached).
+
+The controller is transport-agnostic: it only sees :class:`Knob` callbacks,
+so unit tests drive it against synthetic throughput profiles and any future
+storage backend gets tuned for free.
+
+Algorithm: coordinate hill climbing with a multiplicative step, a
+hysteresis dead-band, and a *settle window* between move and verdict.
+Every ``interval_batches`` batches one window of throughput is measured.
+After a knob move the next window is discarded (in-flight batches dispatched
+under the old setting drain through it — judging on it mis-attributes their
+throughput to the new setting), and the window after that is compared to the
+pre-probe baseline: *accepted* when it beats the baseline by
+``rel_improvement`` (momentum: the same knob is pushed again immediately),
+*reverted* when it regresses by the same margin (direction flips, then
+settle + fresh baseline before the next probe), and otherwise *held*
+(dead-band — keep the value, move to the next knob).  Concurrency-reducing
+moves need twice the improvement to be accepted: the cost of slightly too
+much concurrency is small, the cost of walking downhill on a noise spike is
+an epoch of starvation.  The controller also remembers the best *settled*
+operating point it has measured; when throughput collapses relative to it
+(a mis-attributed walk or an external stall) the best state is restored
+wholesale instead of retracing the gradient.  After ``patience`` full knob
+cycles without an accepted move the controller restores the best state and
+goes quiescent; a sustained throughput collapse below the best-seen level
+re-arms it (regime change, e.g. storage latency shift).
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass
+from typing import Any, Callable, Deque, Dict, List, Optional
+
+import time
+
+from repro.config import AutotuneConfig
+from repro.core.tracing import (
+    GET_BATCH,
+    GET_ITEM,
+    StageWindow,
+    Tracer,
+    window_summary,
+)
+
+LOAD_BATCH = "load_batch"  # mirror of worker.LOAD_BATCH (import cycle-free)
+
+# re-arm when windowed throughput falls below this fraction of best-seen
+REARM_FRACTION = 0.5
+
+
+@dataclass
+class Knob:
+    """One tunable integer control surface.
+
+    ``set`` must apply the value at a safe boundary and return the value
+    actually applied (clamped by the owner); binary knobs use ``lo=0, hi=1``.
+    """
+
+    name: str
+    get: Callable[[], int]
+    set: Callable[[int], int]
+    lo: int
+    hi: int
+
+    @property
+    def is_binary(self) -> bool:
+        return (self.lo, self.hi) == (0, 1)
+
+
+@dataclass(frozen=True)
+class TuneEvent:
+    """One controller decision (the audit trail tests/benches assert on)."""
+
+    batch: int
+    action: str  # probe | accept | revert | hold | restore | quiesce | rearm
+    knob: str
+    value: int
+    tput: float
+
+
+@dataclass
+class _Probe:
+    knob: Knob
+    old_value: int
+    new_value: int
+    baseline: float
+
+
+class AutotuneController:
+    """Hill-climbing knob controller; drive with :meth:`on_batch`."""
+
+    def __init__(
+        self,
+        cfg: AutotuneConfig,
+        knobs: List[Knob],
+        *,
+        tracer: Optional[Tracer] = None,
+        store_stats_fn: Optional[Callable[[], Any]] = None,
+    ) -> None:
+        self.cfg = cfg
+        self.knobs = list(knobs)
+        self.tracer = tracer
+        self.store_stats_fn = store_stats_fn
+        # bounded: the reprobe heartbeat keeps appending for the loader's
+        # lifetime; consumers only ever need the recent tail
+        self.events: Deque[TuneEvent] = deque(maxlen=4096)
+
+        self._batches = 0
+        self._win_batches = 0
+        self._win_items = 0
+        self._windows_seen = 0
+        self._win_t0: Optional[float] = None
+        self._probe: Optional[_Probe] = None
+        # measurement state machine: baseline -> (probe applied) settle ->
+        # measure -> {accept/hold: settle, revert: settle_revert -> baseline}
+        self._phase = "baseline"
+        self._ki = 0  # round-robin knob cursor
+        self._dir: Dict[str, int] = {k.name: +1 for k in self.knobs}
+        self._stalled_moves = 0  # consecutive non-accepted probes
+        self._quiescent = False
+        self._quiet_windows = 0  # windows spent quiescent (reprobe heartbeat)
+        self._best_tput = 0.0
+        # best *settled* operating point seen: (knob values, its throughput)
+        self._best_state: Dict[str, int] = {}
+        self._best_state_tput = 0.0
+
+    # -- public surface ------------------------------------------------------
+
+    def bind(self, knobs: List[Knob]) -> None:
+        """Re-bind knob callbacks (a new ``_LoaderIter`` each epoch) while
+        keeping learned state: per-knob direction, quiescence, best-seen
+        throughput.  Any in-flight probe is dropped — it refers to the old
+        iterator's control surfaces."""
+        self.knobs = list(knobs)
+        for k in knobs:
+            self._dir.setdefault(k.name, +1)
+        # start the new epoch at the best point measured so far, not at
+        # whatever mid-probe value the last iterator stopped on
+        for k in self.knobs:
+            if k.name in self._best_state:
+                k.set(self._best_state[k.name])
+        self._probe = None
+        self._phase = "baseline"
+        self._win_t0 = None
+        self._win_batches = 0
+        self._win_items = 0
+        self._windows_seen = 0  # re-warm: each iterator has its own burst
+        self._ki = min(self._ki, max(len(self.knobs) - 1, 0))
+
+    def attach_knob(self, knob: Knob) -> None:
+        """Add a knob live (e.g. ring depth once a DevicePrefetchRing exists).
+
+        A knob seen in a previous epoch re-attaches silently: its learned
+        value is re-applied and a quiescent (converged) controller stays
+        quiescent — only a genuinely NEW control surface re-arms probing."""
+        self.knobs.append(knob)
+        seen = knob.name in self._dir
+        self._dir.setdefault(knob.name, +1)
+        if knob.name in self._best_state:
+            knob.set(self._best_state[knob.name])
+        if not seen:
+            self._quiescent = False
+            self._stalled_moves = 0
+
+    def attach_ring(self, ring: Any) -> None:
+        """Convenience: tune an attached :class:`DevicePrefetchRing`."""
+        self.attach_knob(
+            Knob(
+                name="device_prefetch",
+                get=lambda: ring.depth,
+                set=ring.set_depth,
+                lo=self.cfg.min_device_prefetch,
+                hi=min(self.cfg.max_device_prefetch, ring.max_depth),
+            )
+        )
+
+    def on_batch(self, items: int = 1, now: Optional[float] = None) -> None:
+        """Account one delivered batch; maybe close a window and adjust."""
+        t = time.monotonic() if now is None else now
+        if self._win_t0 is None:
+            self._win_t0 = t
+            return  # first batch only anchors the window clock
+        self._batches += 1
+        self._win_batches += 1
+        self._win_items += items
+        if (
+            self._win_batches < self.cfg.interval_batches
+            or t - self._win_t0 < self.cfg.min_window_s
+        ):
+            return
+        dt = max(t - self._win_t0, 1e-9)
+        tput = self._win_items / dt
+        self._win_t0 = t
+        self._win_batches = 0
+        self._win_items = 0
+        self._step(tput)
+
+    def diagnostics(self, window_s: float = 5.0) -> Dict[str, Any]:
+        """Live signal snapshot (stage latencies + store stats delta)."""
+        out: Dict[str, Any] = {
+            "knobs": {k.name: k.get() for k in self.knobs},
+            "best_tput": self._best_tput,
+            "quiescent": self._quiescent,
+        }
+        if self.tracer is not None:
+            now = time.monotonic()
+            stages: Dict[str, StageWindow] = window_summary(
+                self.tracer, [GET_BATCH, GET_ITEM, LOAD_BATCH], now - window_s, now
+            )
+            out["stages"] = {
+                n: {"count": w.count, "mean_s": w.mean_s, "p95_s": w.p95_s}
+                for n, w in stages.items()
+            }
+        if self.store_stats_fn is not None:
+            try:
+                out["store"] = self.store_stats_fn()
+            except Exception:
+                out["store"] = None
+        return out
+
+    # -- controller core -----------------------------------------------------
+
+    def _log(self, action: str, knob: str, value: int, tput: float) -> None:
+        self.events.append(TuneEvent(self._batches, action, knob, value, tput))
+
+    def _step(self, tput: float) -> None:
+        self._windows_seen += 1
+        if self._windows_seen <= self.cfg.warmup_windows:
+            return  # settle: prefetch burst / startup warps early windows
+        if self._phase == "settle":
+            # batches dispatched under the pre-move setting drained through
+            # this window — judging the probe on it mis-attributes them
+            self._phase = "measure"
+            return
+        if self._phase == "settle_revert":
+            self._phase = "baseline"
+            return
+        self._best_tput = max(self._best_tput, tput)
+        self._note_state(tput)
+        if self._phase == "measure" and self._probe is not None:
+            self._judge(tput)
+            return
+        # baseline phase
+        if not self._quiescent and self._restore_if_collapsed(tput):
+            return
+        if self._quiescent:
+            # watch for a regime change (e.g. storage latency shift)
+            if self._best_tput > 0 and tput < REARM_FRACTION * self._best_tput:
+                self._quiescent = False
+                self._stalled_moves = 0
+                # decay (don't erase) the learned optimum: a transient stall
+                # also lands here, and forgetting a good operating point for
+                # one hiccup costs far more than re-verifying it.  Repeated
+                # rearms (a true regime change) decay it out of relevance.
+                self._best_tput = tput
+                self._best_state_tput *= 0.5
+                for name in self._dir:
+                    self._dir[name] = +1
+                self._log("rearm", "-", 0, tput)
+                self._start_probe(tput)
+                return
+            # exploration heartbeat: parked-but-suboptimal is invisible to
+            # the collapse check, so periodically try one move.  Stall count
+            # is set so one failed probe re-quiesces; an accept resets it
+            # and resumes full climbing.
+            self._quiet_windows += 1
+            if (
+                self.cfg.reprobe_windows
+                and self._quiet_windows >= self.cfg.reprobe_windows
+            ):
+                self._quiescent = False
+                self._quiet_windows = 0
+                self._stalled_moves = max(
+                    0, self.cfg.patience * max(len(self.knobs), 1) - 1
+                )
+                for name in self._dir:
+                    self._dir[name] = +1  # heartbeat explores upward
+                self._log("reprobe", "-", 0, tput)
+                self._start_probe(tput)
+            return
+        self._start_probe(tput)
+
+    def _note_state(self, tput: float) -> None:
+        """Remember the best settled operating point (this window's tput is
+        attributed to the CURRENT knob values — settle windows already
+        discarded the drain of the previous setting).  A new state must beat
+        the incumbent by half the accept margin: without hysteresis here, a
+        noise-level 'improvement' measured during a probe that is then
+        reverted would still capture best-state and be resurrected at
+        quiescence."""
+        margin = 1.0 + 0.5 * self.cfg.rel_improvement
+        if not self._best_state or tput > self._best_state_tput * margin:
+            self._best_state_tput = max(self._best_state_tput, tput)
+            self._best_state = {k.name: k.get() for k in self.knobs}
+
+    def _current_state(self) -> Dict[str, int]:
+        return {k.name: k.get() for k in self.knobs}
+
+    def _restore_best(self, tput: float) -> None:
+        for k in self.knobs:
+            if k.name in self._best_state:
+                k.set(self._best_state[k.name])
+        self._log("restore", "-", 0, tput)
+
+    def _restore_if_collapsed(self, tput: float) -> bool:
+        """A settled window far below the best state's throughput means the
+        walk went downhill (mis-attribution) or the world changed; jump back
+        to the best point wholesale instead of retracing the gradient."""
+        if (
+            self._best_state
+            and self._best_state_tput > 0
+            and tput < REARM_FRACTION * self._best_state_tput
+            and self._current_state() != self._best_state
+        ):
+            self._restore_best(tput)
+            self._phase = "settle_revert"  # settle, then fresh baseline
+            return True
+        return False
+
+    def _judge(self, tput: float) -> None:
+        h = self.cfg.rel_improvement
+        p, self._probe = self._probe, None
+        went_down = p.new_value < p.old_value and not p.knob.is_binary
+        if went_down:
+            # concurrency-reducing move: demand stronger evidence
+            h = 2.0 * h
+        if tput >= p.baseline * (1.0 + h):
+            self._log("accept", p.knob.name, p.new_value, tput)
+            self._stalled_moves = 0
+            if went_down or p.knob.is_binary:
+                # down-accept: often a recovery artifact — don't momentum-
+                # walk further down.  Binary accept: momentum would flip the
+                # knob straight back to the just-rejected setting for two
+                # windows.  Either way: keep the value, move to the next knob
+                self._dir[p.knob.name] = +1
+                self._advance()
+                self._start_probe(tput)
+                return
+            # up-accept: keep pushing the same knob upward, with this
+            # settled window as the new baseline
+            self._start_probe(tput, prefer=p.knob)
+            return
+        if tput <= p.baseline * (1.0 - h) or p.knob.is_binary:
+            # regression (or an unconvincing binary flip): roll back, then
+            # settle + re-measure a clean baseline before the next probe
+            p.knob.set(p.old_value)
+            self._log("revert", p.knob.name, p.old_value, tput)
+            if not p.knob.is_binary:
+                # a failed up-probe earns ONE down-trial; a failed down-probe
+                # resets to climbing (never walk downhill repeatedly)
+                self._dir[p.knob.name] = -1 if not went_down else +1
+            self._advance()
+            if self._bump_stall(tput):
+                return
+            self._phase = "settle_revert"
+            return
+        # dead-band: keep the value but stop pushing this knob
+        self._log("hold", p.knob.name, p.new_value, tput)
+        if went_down:
+            self._dir[p.knob.name] = +1
+        self._advance()
+        if self._bump_stall(tput):
+            return
+        self._start_probe(tput)
+
+    def _bump_stall(self, tput: float) -> bool:
+        self._stalled_moves += 1
+        if self._stalled_moves >= self.cfg.patience * max(len(self.knobs), 1):
+            self._quiescent = True
+            self._quiet_windows = 0
+            self._phase = "baseline"
+            # park at the best point we ever measured, not wherever the
+            # walk happened to stop
+            if self._best_state and self._current_state() != self._best_state:
+                self._restore_best(tput)
+            self._log("quiesce", "-", 0, tput)
+            return True
+        return False
+
+    def _advance(self) -> None:
+        if self.knobs:
+            self._ki = (self._ki + 1) % len(self.knobs)
+
+    def _next_value(self, knob: Knob, cur: int) -> Optional[int]:
+        if knob.is_binary:
+            return knob.hi - cur  # flip
+        d = self._dir[knob.name]
+        step = max(self.cfg.step_factor, 2)
+        nxt = cur * step if d > 0 else cur // step
+        nxt = max(knob.lo, min(knob.hi, nxt))
+        return None if nxt == cur else nxt
+
+    def _start_probe(self, baseline: float, prefer: Optional[Knob] = None) -> None:
+        """Apply the next candidate move; scan knobs (preferred one first,
+        then round-robin) until one can move.
+
+        Wall handling is asymmetric: a knob pinned at its LOWER wall with a
+        downward direction flips back up (climbing from the bottom is the
+        desirable move), but a knob at its UPPER wall is simply skipped —
+        flipping there would momentum-probe a 4x concurrency drop right
+        after reaching the top, cratering throughput for two windows."""
+        if not self.knobs:
+            return
+        order: List[Knob] = []
+        if prefer is not None:
+            order.append(prefer)
+            self._ki = self.knobs.index(prefer)
+        for i in range(len(self.knobs)):
+            k = self.knobs[(self._ki + i) % len(self.knobs)]
+            if k is not prefer:
+                order.append(k)
+        for k in order:
+            cur = k.get()
+            nxt = self._next_value(k, cur)
+            if nxt is None and not k.is_binary and self._dir[k.name] < 0:
+                # pinned at the lower wall pointing down: climb instead
+                self._dir[k.name] = +1
+                nxt = self._next_value(k, cur)
+            if nxt is None:
+                continue
+            applied = k.set(nxt)
+            if applied == cur:
+                continue  # owner clamped the move away — not a probe
+            self._probe = _Probe(k, cur, applied, baseline)
+            self._ki = self.knobs.index(k)
+            self._phase = "settle"
+            self._log("probe", k.name, applied, baseline)
+            return
+        # nothing movable anywhere
+        self._quiescent = True
+        self._phase = "baseline"
+
+
+def build_loader_knobs(
+    cfg: AutotuneConfig,
+    *,
+    get_fetch: Callable[[], int],
+    set_fetch: Callable[[int], int],
+    get_outstanding: Callable[[], int],
+    set_outstanding: Callable[[int], int],
+    hedge: Optional[Any] = None,
+    max_fetch_workers: Optional[int] = None,
+    max_outstanding: Optional[int] = None,
+) -> List[Knob]:
+    """Standard knob set for a ``_LoaderIter`` (ring attached separately).
+
+    ``max_*`` widen the configured ceilings when the loader's static config
+    already sits above them (enabling autotune must never cap it)."""
+    knobs = [
+        Knob(
+            name="fetch_workers",
+            get=get_fetch,
+            set=set_fetch,
+            lo=cfg.min_fetch_workers,
+            hi=max(cfg.max_fetch_workers, max_fetch_workers or 0),
+        ),
+        Knob(
+            name="outstanding",
+            get=get_outstanding,
+            set=set_outstanding,
+            lo=cfg.min_outstanding,
+            hi=max(cfg.max_outstanding, max_outstanding or 0),
+        ),
+    ]
+    if cfg.tune_hedge and hedge is not None:
+        def _get_hedge() -> int:
+            return int(hedge.enabled)
+
+        def _set_hedge(v: int) -> int:
+            hedge.enabled = bool(v)
+            return int(hedge.enabled)
+
+        knobs.append(Knob("hedge", _get_hedge, _set_hedge, 0, 1))
+    return knobs

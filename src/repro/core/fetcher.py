@@ -15,14 +15,22 @@ transient store errors and *hedged requests* — when a fetch exceeds a
 p95-tracked deadline a duplicate is issued and the first response wins
 (straggler mitigation for 1000-node deployments where tail GETs stall a
 whole global batch).
+
+Both concurrent fetchers are *resizable* for the online autotuner
+(:mod:`repro.core.autotune`): effective concurrency is bounded by an
+adjustable limit rather than the physical pool size, so ``resize(n)`` takes
+effect at the next item submission without tearing down threads or dropping
+in-flight work — a safe boundary that preserves the reorder-buffer
+delivery guarantee.
 """
 from __future__ import annotations
 
 import asyncio
 import threading
+import time
 from collections import deque
-from concurrent.futures import FIRST_COMPLETED, ThreadPoolExecutor, wait
-from typing import Any, Dict, List, Optional, Sequence
+from concurrent.futures import FIRST_COMPLETED, Future, ThreadPoolExecutor, wait
+from typing import Any, List, Optional, Sequence
 
 from repro.data.dataset import Item, MapDataset
 from repro.data.store import TransientStoreError
@@ -34,8 +42,62 @@ class FetchError(RuntimeError):
     pass
 
 
+class AdjustableSemaphore:
+    """Counting semaphore whose permit limit can be raised/lowered live.
+
+    Raising the limit wakes blocked acquirers immediately; lowering it never
+    interrupts holders — the surplus drains as permits are released.  This is
+    the safe resize boundary used by :class:`ThreadPoolFetcher`.
+    """
+
+    def __init__(self, limit: int) -> None:
+        if limit < 1:
+            raise ValueError("limit must be >= 1")
+        self._limit = limit
+        self._held = 0
+        self._cond = threading.Condition()
+
+    @property
+    def limit(self) -> int:
+        with self._cond:
+            return self._limit
+
+    def set_limit(self, limit: int) -> None:
+        if limit < 1:
+            raise ValueError("limit must be >= 1")
+        with self._cond:
+            grew = limit > self._limit
+            self._limit = limit
+            if grew:
+                self._cond.notify_all()
+
+    def acquire(self, timeout: Optional[float] = None) -> bool:
+        with self._cond:
+            while self._held >= self._limit:
+                if not self._cond.wait(timeout=timeout) and timeout is not None:
+                    return False
+            self._held += 1
+            return True
+
+    def release(self) -> None:
+        with self._cond:
+            self._held -= 1
+            self._cond.notify()
+
+    def __enter__(self) -> "AdjustableSemaphore":
+        self.acquire()
+        return self
+
+    def __exit__(self, *exc: Any) -> None:
+        self.release()
+
+
 class HedgeTracker:
-    """Tracks recent fetch durations; deadline = max(min_s, p95 * factor)."""
+    """Tracks recent fetch durations; deadline = max(min_s, p95 * factor).
+
+    ``enabled`` can be flipped live (autotuner trial knob): a disabled
+    tracker keeps observing durations but fetchers skip the hedging path.
+    """
 
     def __init__(self, factor: float = 3.0, min_s: float = 0.05, window: int = 256) -> None:
         self.factor = factor
@@ -44,6 +106,7 @@ class HedgeTracker:
         self._lock = threading.Lock()
         self.hedges_issued = 0
         self.hedges_won = 0
+        self.enabled = True
 
     def observe(self, dur: float) -> None:
         with self._lock:
@@ -72,9 +135,20 @@ class Fetcher:
     """fetch(dataset, indices) -> items in the requested order."""
 
     name = "base"
+    # set by the owning Worker so blocking waits stay shutdown-responsive
+    stop_event: Optional[threading.Event] = None
 
     def fetch(self, dataset: MapDataset, indices: Sequence[int]) -> List[Item]:
         raise NotImplementedError
+
+    @property
+    def concurrency(self) -> int:
+        return 1
+
+    def resize(self, num_fetch_workers: int) -> int:
+        """Adjust effective concurrency; returns the applied (clamped) value.
+        Base/sequential fetchers are fixed at 1."""
+        return self.concurrency
 
     def close(self) -> None:
         pass
@@ -90,7 +164,14 @@ class SequentialFetcher(Fetcher):
 
 
 class ThreadPoolFetcher(Fetcher):
-    """Within-batch parallelism via a thread pool (+ optional hedging)."""
+    """Within-batch parallelism via a thread pool (+ optional hedging).
+
+    Threads are allocated up to ``hard_cap`` once; *effective* concurrency is
+    gated by an :class:`AdjustableSemaphore` so ``resize`` is cheap and safe
+    mid-epoch.  All work — including the batch-disassembly path in
+    :mod:`repro.core.worker` and hedge duplicates — must enter the pool via
+    :meth:`submit_one` so the gate is never bypassed.
+    """
 
     name = "threaded"
 
@@ -98,51 +179,77 @@ class ThreadPoolFetcher(Fetcher):
         self,
         num_fetch_workers: int = 16,
         hedge: Optional[HedgeTracker] = None,
+        hard_cap: Optional[int] = None,
     ) -> None:
-        self.num_fetch_workers = num_fetch_workers
+        self.hard_cap = max(num_fetch_workers, hard_cap or num_fetch_workers)
         self.hedge = hedge
+        self._gate = AdjustableSemaphore(num_fetch_workers)
+        # +1 headroom thread so a hedge duplicate can run while all gated
+        # slots are busy with stragglers
         self._pool = ThreadPoolExecutor(
-            max_workers=num_fetch_workers, thread_name_prefix="fetcher"
+            max_workers=self.hard_cap + 1, thread_name_prefix="fetcher"
         )
 
-    def _fetch_one(self, dataset: MapDataset, index: int) -> Item:
-        if self.hedge is None:
-            return _fetch_one_with_retry(dataset, index)
-        import time
+    @property
+    def num_fetch_workers(self) -> int:
+        return self._gate.limit
 
+    @property
+    def concurrency(self) -> int:
+        return self._gate.limit
+
+    def resize(self, num_fetch_workers: int) -> int:
+        n = max(1, min(int(num_fetch_workers), self.hard_cap))
+        self._gate.set_limit(n)
+        return n
+
+    def _run_gated(self, dataset: MapDataset, index: int) -> Item:
         t0 = time.monotonic()
-        primary = self._pool.submit(_fetch_one_with_retry, dataset, index)
-        done, _ = wait([primary], timeout=self.hedge.deadline())
-        if done:
-            self.hedge.observe(time.monotonic() - t0)
-            return primary.result()
-        # straggler: issue a duplicate request, first response wins
-        self.hedge.hedges_issued += 1
-        secondary = self._pool.submit(_fetch_one_with_retry, dataset, index)
-        done, _ = wait([primary, secondary], return_when=FIRST_COMPLETED)
-        winner = done.pop()
-        if winner is secondary:
-            self.hedge.hedges_won += 1
-        self.hedge.observe(time.monotonic() - t0)
-        return winner.result()
+        try:
+            return _fetch_one_with_retry(dataset, index)
+        finally:
+            self._gate.release()
+            if self.hedge is not None:
+                # true per-item service duration, recorded in the task itself
+                # (not in the gather loop, whose view is skewed by gate/queue
+                # waits) and recorded even while hedging is disabled, so a
+                # later re-enable never acts on a stale p95 deadline
+                self.hedge.observe(time.monotonic() - t0)
+
+    def submit_one(self, dataset: MapDataset, index: int) -> "Future[Item]":
+        """Submit a single gated item fetch (shared with the worker's
+        batch-disassembly path).
+
+        The permit is acquired BEFORE submission: work beyond the gate limit
+        waits in the caller, not parked inside a pool thread, so the
+        executor only spawns threads for actually-runnable work and the
+        hedge headroom thread can never be starved by gated backlog.  The
+        wait polls the owner's stop event so a stalled store cannot wedge a
+        worker past shutdown."""
+        stop = self.stop_event
+        while not self._gate.acquire(timeout=0.2 if stop is not None else None):
+            if stop is not None and stop.is_set():
+                raise FetchError("fetcher shutting down")
+        return self._pool.submit(self._run_gated, dataset, index)
+
+    def _hedging(self) -> bool:
+        return self.hedge is not None and self.hedge.enabled
 
     def fetch(self, dataset: MapDataset, indices: Sequence[int]) -> List[Item]:
-        if self.hedge is not None:
-            # hedged: submit wrappers directly on the caller thread so the
-            # pool has headroom for duplicates.
-            futures = [self._pool.submit(_fetch_one_with_retry, dataset, i) for i in indices]
+        futures = [self.submit_one(dataset, i) for i in indices]
+        if self._hedging():
             return self._gather_hedged(dataset, indices, futures)
-        futures = [self._pool.submit(_fetch_one_with_retry, dataset, i) for i in indices]
         return [f.result() for f in futures]
 
     def _gather_hedged(self, dataset, indices, futures) -> List[Item]:
-        import time
-
+        # durations feeding the p95 deadline are recorded by _run_gated;
+        # this loop only decides when a wait has become a straggler
         out: List[Optional[Item]] = [None] * len(indices)
         for pos, (i, fut) in enumerate(zip(indices, futures)):
-            t0 = time.monotonic()
             done, _ = wait([fut], timeout=self.hedge.deadline())
             if not done:
+                # straggler: issue an ungated duplicate (headroom thread),
+                # first response wins
                 self.hedge.hedges_issued += 1
                 dup = self._pool.submit(_fetch_one_with_retry, dataset, i)
                 done, _ = wait([fut, dup], return_when=FIRST_COMPLETED)
@@ -152,7 +259,6 @@ class ThreadPoolFetcher(Fetcher):
                 out[pos] = winner.result()
             else:
                 out[pos] = fut.result()
-            self.hedge.observe(time.monotonic() - t0)
         return out  # type: ignore[return-value]
 
     def close(self) -> None:
@@ -160,17 +266,36 @@ class ThreadPoolFetcher(Fetcher):
 
 
 class AsyncioFetcher(Fetcher):
-    """Within-batch concurrency on a single thread via asyncio."""
+    """Within-batch concurrency on a single thread via asyncio.
+
+    The semaphore is created per ``fetch`` call from the current
+    ``num_fetch_workers``, so ``resize`` naturally takes effect at the next
+    batch — already a safe boundary.
+    """
 
     name = "asyncio"
 
-    def __init__(self, num_fetch_workers: int = 16) -> None:
-        self.num_fetch_workers = num_fetch_workers
+    def __init__(self, num_fetch_workers: int = 16, hard_cap: Optional[int] = None) -> None:
+        self.hard_cap = max(num_fetch_workers, hard_cap or num_fetch_workers)
+        self._num_fetch_workers = num_fetch_workers
         self._loop = asyncio.new_event_loop()
         self._thread = threading.Thread(
             target=self._loop.run_forever, name="asyncio-fetcher", daemon=True
         )
         self._thread.start()
+
+    @property
+    def num_fetch_workers(self) -> int:
+        return self._num_fetch_workers
+
+    @property
+    def concurrency(self) -> int:
+        return self._num_fetch_workers
+
+    def resize(self, num_fetch_workers: int) -> int:
+        n = max(1, min(int(num_fetch_workers), self.hard_cap))
+        self._num_fetch_workers = n
+        return n
 
     async def _afetch_one(self, dataset: MapDataset, index: int,
                           sem: asyncio.Semaphore) -> Item:
@@ -184,7 +309,7 @@ class AsyncioFetcher(Fetcher):
         raise FetchError(f"item {index} failed after {MAX_RETRIES} retries") from err
 
     async def _afetch(self, dataset: MapDataset, indices: Sequence[int]) -> List[Item]:
-        sem = asyncio.Semaphore(self.num_fetch_workers)
+        sem = asyncio.Semaphore(self._num_fetch_workers)
         tasks = [
             asyncio.ensure_future(self._afetch_one(dataset, i, sem)) for i in indices
         ]
@@ -203,11 +328,12 @@ class AsyncioFetcher(Fetcher):
 
 
 def make_fetcher(impl: str, num_fetch_workers: int,
-                 hedge: Optional[HedgeTracker] = None) -> Fetcher:
+                 hedge: Optional[HedgeTracker] = None,
+                 hard_cap: Optional[int] = None) -> Fetcher:
     if impl == "vanilla":
         return SequentialFetcher()
     if impl == "threaded":
-        return ThreadPoolFetcher(num_fetch_workers, hedge=hedge)
+        return ThreadPoolFetcher(num_fetch_workers, hedge=hedge, hard_cap=hard_cap)
     if impl == "asyncio":
-        return AsyncioFetcher(num_fetch_workers)
+        return AsyncioFetcher(num_fetch_workers, hard_cap=hard_cap)
     raise ValueError(f"unknown fetcher impl {impl!r}")

@@ -24,9 +24,10 @@ from __future__ import annotations
 import queue
 import threading
 import time
-from typing import Any, Callable, Dict, Iterator, List, Optional, Sequence
+from typing import Any, Callable, Dict, Iterator, List, Optional
 
 from repro.config import LoaderConfig
+from repro.core.autotune import AutotuneController, build_loader_knobs
 from repro.core.fetcher import HedgeTracker, make_fetcher
 from repro.core.sampler import BatchIndices, ShardedBatchSampler
 from repro.core.tracing import GET_BATCH, NULL_TRACER, Tracer
@@ -36,6 +37,17 @@ from repro.data.dataset import MapDataset, collate
 
 class LoaderTimeout(RuntimeError):
     pass
+
+
+def _store_stats_fn(dataset: MapDataset):
+    """Find a ``stats`` provider in the dataset's store stack (e.g.
+    SimulatedS3Store wrapped by caches) — a live signal for the autotuner."""
+    store = getattr(dataset, "store", None)
+    while store is not None:
+        if hasattr(store, "stats"):
+            return lambda s=store: s.stats
+        store = getattr(store, "base", None)
+    return None
 
 
 class ConcurrentDataLoader:
@@ -75,6 +87,20 @@ class ConcurrentDataLoader:
         )
         self._epoch = 0
         self._consumed = 0  # batches actually yielded to the caller this epoch
+        # online knob control (repro.core.autotune): the controller and the
+        # tuned values live on the LOADER so learning persists across epochs;
+        # each _LoaderIter re-binds the knob callbacks to itself.
+        self.autotuner: Optional[AutotuneController] = (
+            AutotuneController(
+                cfg.autotune,
+                [],
+                tracer=tracer,
+                store_stats_fn=_store_stats_fn(dataset),
+            )
+            if cfg.autotune.enabled
+            else None
+        )
+        self._tuned: Dict[str, int] = {}
 
     # -- epoch / resume ------------------------------------------------------
     def set_epoch(self, epoch: int) -> None:
@@ -109,8 +135,33 @@ class _LoaderIter:
         cfg = loader.cfg
         self.cfg = cfg
         self.tracer = loader.tracer
+        at = cfg.autotune
         self.max_outstanding = max(1, cfg.num_workers * cfg.prefetch_factor)
-        self.data_queue: "queue.Queue" = queue.Queue(maxsize=self.max_outstanding)
+        self._fetch_workers = cfg.num_fetch_workers
+        self._fetch_hard_cap: Optional[int] = None
+        # effective knob ceilings: widened to cover the user's explicit
+        # static config — merely turning the tuner ON must never cap the
+        # loader below its autotune=off operating point
+        self._max_outstanding_bound = max(at.max_outstanding, self.max_outstanding)
+        self._max_fetch_bound = max(at.max_fetch_workers, cfg.num_fetch_workers)
+        if at.enabled:
+            # resume from values the controller already learned (prev epoch)
+            self.max_outstanding = min(
+                max(loader._tuned.get("outstanding", self.max_outstanding),
+                    at.min_outstanding),
+                self._max_outstanding_bound,
+            )
+            self._fetch_workers = min(
+                max(loader._tuned.get("fetch_workers", self._fetch_workers),
+                    at.min_fetch_workers),
+                self._max_fetch_bound,
+            )
+            self._fetch_hard_cap = self._max_fetch_bound
+        # queue backpressure: sized for the knob's upper bound when autotuned
+        # (the live window is enforced by _dispatch), exactly max_outstanding
+        # otherwise — bit-identical to the static loader when autotune is off
+        qsize = self._max_outstanding_bound if at.enabled else self.max_outstanding
+        self.data_queue: "queue.Queue" = queue.Queue(maxsize=qsize)
         self.index_queues: List["queue.Queue"] = [
             queue.Queue() for _ in range(cfg.num_workers)
         ]
@@ -126,6 +177,20 @@ class _LoaderIter:
         self._shutdown = False
         self._lock = threading.Lock()
 
+        if loader.autotuner is not None:
+            loader.autotuner.bind(
+                build_loader_knobs(
+                    at,
+                    get_fetch=lambda: self._fetch_workers,
+                    set_fetch=self._set_fetch_workers,
+                    get_outstanding=lambda: self.max_outstanding,
+                    set_outstanding=self._set_outstanding,
+                    hedge=loader.hedge,
+                    max_fetch_workers=self._max_fetch_bound,
+                    max_outstanding=self._max_outstanding_bound,
+                )
+            )
+
         if not cfg.lazy_init:
             # Vanilla blocking behaviour: the constructor sequentially starts
             # every worker and waits for each to come up (paper Fig. 8 left).
@@ -135,10 +200,33 @@ class _LoaderIter:
                 w.ready.wait()
             self._dispatch()
 
+    # -- autotuner control surfaces (applied between batches) ----------------
+    def _set_fetch_workers(self, n: int) -> int:
+        at = self.cfg.autotune
+        n = max(at.min_fetch_workers, min(int(n), self._max_fetch_bound))
+        applied = n
+        for w in self.workers:
+            applied = w.fetcher.resize(n)
+        self._fetch_workers = applied if self.workers else n
+        self.loader._tuned["fetch_workers"] = self._fetch_workers
+        return self._fetch_workers
+
+    def _set_outstanding(self, n: int) -> int:
+        at = self.cfg.autotune
+        n = max(at.min_outstanding, min(int(n), self._max_outstanding_bound))
+        self.max_outstanding = n
+        self.loader._tuned["outstanding"] = n
+        return n
+
     # -- worker management ----------------------------------------------------
     def _make_worker(self, i: int) -> Worker:
         cfg = self.cfg
-        fetcher = make_fetcher(cfg.impl, cfg.num_fetch_workers, hedge=self.loader.hedge)
+        fetcher = make_fetcher(
+            cfg.impl,
+            self._fetch_workers,
+            hedge=self.loader.hedge,
+            hard_cap=self._fetch_hard_cap,
+        )
         w = Worker(
             i,
             self.loader.dataset,
@@ -196,6 +284,13 @@ class _LoaderIter:
         if isinstance(batch, dict) and "nbytes" in batch:
             args["nbytes"] = int(batch["nbytes"].sum())
         self.tracer.record(GET_BATCH, t0, time.monotonic(), **args)
+        auto = self.loader.autotuner
+        if auto is not None and not self._exhausted:
+            # safe boundary: the batch is already delivered; knob moves only
+            # affect how FUTURE work is dispatched, never delivery order.
+            # The end-of-epoch drain (sampler exhausted, window shrinking) is
+            # excluded — its throughput says nothing about the knobs.
+            auto.on_batch()
         return batch
 
     def _next_impl(self) -> Any:

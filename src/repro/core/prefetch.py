@@ -4,6 +4,11 @@ Wraps a host-batch iterator; a background thread `jax.device_put`s the next
 ``depth`` batches (optionally with a NamedSharding so each host only
 materializes its addressable shards) while the current step runs.  Records
 ``batch_to_device`` spans (paper Fig. 1/2 magenta lane).
+
+``depth`` is adjustable live (:meth:`set_depth`) for the online autotuner:
+the in-flight window is gated by an :class:`AdjustableSemaphore` rather than
+the queue's fixed ``maxsize``, so deepening the ring takes effect immediately
+and shrinking drains naturally as the consumer pulls batches.
 """
 from __future__ import annotations
 
@@ -13,6 +18,7 @@ from typing import Any, Iterator, Optional
 
 import jax
 
+from repro.core.fetcher import AdjustableSemaphore
 from repro.core.tracing import BATCH_TO_DEVICE, NULL_TRACER, Tracer
 
 
@@ -31,17 +37,30 @@ class DevicePrefetchRing:
         it: Iterator[Any],
         *,
         depth: int = 2,
+        max_depth: Optional[int] = None,
         sharding: Optional[jax.sharding.Sharding] = None,
         tracer: Tracer = NULL_TRACER,
     ) -> None:
         self.it = it
-        self.depth = max(1, depth)
+        depth = max(1, depth)
+        self.max_depth = max(depth, max_depth or depth)
         self.sharding = sharding
         self.tracer = tracer
-        self._q: "queue.Queue" = queue.Queue(maxsize=self.depth)
+        self._slots = AdjustableSemaphore(depth)
+        self._q: "queue.Queue" = queue.Queue()  # window bounded by _slots
         self._stop = threading.Event()
         self._thread = threading.Thread(target=self._run, name="device-prefetch", daemon=True)
         self._thread.start()
+
+    @property
+    def depth(self) -> int:
+        return self._slots.limit
+
+    def set_depth(self, depth: int) -> int:
+        """Adjust the in-flight window; returns the applied (clamped) value."""
+        d = max(1, min(int(depth), self.max_depth))
+        self._slots.set_limit(d)
+        return d
 
     def _put_device(self, batch: Any) -> Any:
         with self.tracer.span(BATCH_TO_DEVICE):
@@ -56,18 +75,24 @@ class DevicePrefetchRing:
             )
             return dev
 
+    def _acquire_slot(self) -> bool:
+        """Wait for a free ring slot, polling the stop flag."""
+        while not self._stop.is_set():
+            if self._slots.acquire(timeout=0.1):
+                return True
+        return False
+
     def _run(self) -> None:
         try:
             for batch in self.it:
                 if self._stop.is_set():
                     return
                 dev = self._put_device(batch)
-                while not self._stop.is_set():
-                    try:
-                        self._q.put(dev, timeout=0.1)
-                        break
-                    except queue.Full:
-                        continue
+                # slot acquired AFTER the transfer, matching the fixed-queue
+                # behaviour (depth queued + 1 transferred-and-waiting)
+                if not self._acquire_slot():
+                    return
+                self._q.put(dev)
             self._q.put(_End())
         except BaseException as e:  # propagate
             self._q.put(_Err(e))
@@ -81,6 +106,7 @@ class DevicePrefetchRing:
             raise StopIteration
         if isinstance(item, _Err):
             raise item.exc
+        self._slots.release()
         return item
 
     def close(self) -> None:

@@ -13,7 +13,7 @@ import threading
 import time
 from contextlib import contextmanager
 from dataclasses import dataclass, field
-from typing import Any, Dict, Iterator, List, Optional
+from typing import Any, Dict, Iterator, List, Optional, Sequence
 
 # Canonical lane names (paper Fig. 1)
 GET_BATCH = "get_batch"
@@ -121,6 +121,60 @@ class _NullTracer(Tracer):
 
 
 NULL_TRACER = _NullTracer()
+
+
+@dataclass(frozen=True)
+class StageWindow:
+    """Aggregate statistics for one span name over a time window."""
+
+    name: str
+    count: int
+    mean_s: float
+    p50_s: float
+    p95_s: float
+    total_s: float
+
+    @property
+    def rate_per_s(self) -> float:
+        return self.count / self.total_s if self.total_s > 0 else 0.0
+
+
+def _pctl(sorted_xs: List[float], q: float) -> float:
+    return sorted_xs[min(int(q * len(sorted_xs)), len(sorted_xs) - 1)]
+
+
+def window_summary(
+    tracer: Tracer, names: Sequence[str], since: float, until: Optional[float] = None
+) -> Dict[str, StageWindow]:
+    """Per-stage latency aggregation over spans that *ended* in
+    ``[since, until)`` — the autotuner's windowed view of the pipeline.
+
+    Returns a ``StageWindow`` per requested name; names with no spans in the
+    window map to a zero-count window so callers can compare stages without
+    key checks.
+    """
+    if until is None:
+        until = time.monotonic()
+    wanted = set(names)
+    durs: Dict[str, List[float]] = {n: [] for n in names}
+    for s in tracer.spans():
+        if s.name in wanted and since <= s.t1 < until:
+            durs[s.name].append(s.duration)
+    out: Dict[str, StageWindow] = {}
+    for n in names:
+        ds = sorted(durs[n])
+        if not ds:
+            out[n] = StageWindow(n, 0, 0.0, 0.0, 0.0, max(until - since, 0.0))
+            continue
+        out[n] = StageWindow(
+            name=n,
+            count=len(ds),
+            mean_s=sum(ds) / len(ds),
+            p50_s=_pctl(ds, 0.5),
+            p95_s=_pctl(ds, 0.95),
+            total_s=max(until - since, 0.0),
+        )
+    return out
 
 
 def union_duration(spans: List[Span]) -> float:

@@ -17,9 +17,9 @@ import queue
 import threading
 import time
 from concurrent.futures import FIRST_COMPLETED, wait
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence
 
-from repro.core.fetcher import Fetcher, ThreadPoolFetcher, _fetch_one_with_retry
+from repro.core.fetcher import Fetcher, ThreadPoolFetcher
 from repro.core.sampler import BatchIndices
 from repro.core.tracing import NULL_TRACER, Tracer
 from repro.data.dataset import Item, MapDataset, collate
@@ -62,6 +62,9 @@ class Worker:
         self.batch_pool = batch_pool
         self.ready = threading.Event()
         self.stop = threading.Event()
+        # blocking waits inside the fetcher poll this so a stalled store
+        # can't wedge the worker past shutdown
+        self.fetcher.stop_event = self.stop
         self.thread = threading.Thread(
             target=self._run, name=f"loader-worker-{worker_id}", daemon=True
         )
@@ -155,7 +158,9 @@ class Worker:
             remaining[b.batch_id] = len(b.indices)
             results[b.batch_id] = [None] * len(b.indices)
             for pos, idx in enumerate(b.indices):
-                fut = pool._pool.submit(_fetch_one_with_retry, self.dataset, idx)
+                # submit_one routes through the fetcher's concurrency gate so
+                # autotuner resizes apply to the disassembly path too
+                fut = pool.submit_one(self.dataset, idx)
                 fut_meta[fut] = (b.batch_id, pos)
         pending = set(fut_meta)
         by_id = {b.batch_id: b for b in batches}

@@ -10,7 +10,6 @@ from __future__ import annotations
 import struct
 import zlib
 from dataclasses import dataclass
-from typing import Tuple
 
 import numpy as np
 

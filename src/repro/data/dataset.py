@@ -17,7 +17,7 @@ from __future__ import annotations
 
 import hashlib
 import time
-from typing import Any, Dict, List, Optional, Sequence
+from typing import Dict, Sequence
 
 import numpy as np
 

@@ -13,7 +13,7 @@ from __future__ import annotations
 
 import io
 import tarfile
-from typing import Iterator, List, Optional, Sequence
+from typing import Iterator, List, Sequence
 
 import numpy as np
 

@@ -8,7 +8,6 @@ HWC->CHW layout flip in one VMEM pass per image block.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

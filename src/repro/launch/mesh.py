@@ -6,7 +6,7 @@ never touches jax device state — dryrun.py must set
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 from jax.sharding import Mesh
@@ -16,17 +16,24 @@ V5E_HBM_BW = 819e9  # bytes/s per chip
 V5E_ICI_BW = 50e9  # bytes/s per link
 V5E_HBM_BYTES = 16 * 1024**3  # 16 GiB per chip
 
+# jax.sharding.AxisType landed after 0.4.x; Auto is the pre-AxisType default
+_AXIS_TYPE = getattr(jax.sharding, "AxisType", None)
+
+
+def _make(shape: Tuple[int, ...], axes: Tuple[str, ...]) -> Mesh:
+    if _AXIS_TYPE is not None:
+        return jax.make_mesh(
+            shape, axes, axis_types=(_AXIS_TYPE.Auto,) * len(axes)
+        )
+    return jax.make_mesh(shape, axes)
+
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return _make(shape, axes)
 
 
 def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]) -> Mesh:
     """Arbitrary mesh (tests use small ones, e.g. (2,2,2) on 8 host devices)."""
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return _make(shape, axes)

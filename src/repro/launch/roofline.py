@@ -16,7 +16,7 @@ from __future__ import annotations
 
 import re
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List
 
 from repro.launch.mesh import V5E_HBM_BW, V5E_ICI_BW, V5E_PEAK_FLOPS
 

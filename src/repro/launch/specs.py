@@ -124,7 +124,7 @@ def cache_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh) -> Any:
     else:
         shapes = jax.eval_shape(lambda: transformer.init_cache(cfg, B, max_len))
 
-    from repro.models.sharding import dp_axes, _axis_size
+    from repro.models.sharding import dp_axes
 
     dp = dp_axes(mesh)
     dp_ax = dp if len(dp) > 1 else (dp[0] if dp else None)

@@ -6,7 +6,6 @@
 """
 from __future__ import annotations
 
-import math
 from functools import lru_cache
 from typing import Any
 

@@ -11,7 +11,7 @@ cached — decode steps never touch the encoder again.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -12,7 +12,7 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.config import AttentionConfig, ModelConfig
+from repro.config import ModelConfig
 
 Params = Dict[str, Any]
 

@@ -13,7 +13,7 @@ Aux load-balancing loss follows Switch-Transformer (fraction*prob per expert).
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -5,7 +5,7 @@ BatchNorm carries running statistics in a separate ``state`` pytree:
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

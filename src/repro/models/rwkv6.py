@@ -16,7 +16,7 @@ Channel-mix is the RWKV squared-ReLU FFN.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp

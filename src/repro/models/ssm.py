@@ -13,7 +13,7 @@ Decode carries (conv_state, ssm_state) in the cache.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp

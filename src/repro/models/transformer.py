@@ -13,8 +13,7 @@ Three lowered programs per architecture (the assigned input shapes):
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

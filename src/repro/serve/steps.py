@@ -1,7 +1,7 @@
 """Jitted serving programs: prefill / decode per architecture family."""
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, Tuple
+from typing import Callable, Dict
 
 import jax
 import jax.numpy as jnp

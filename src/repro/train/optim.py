@@ -6,9 +6,7 @@ of optimizer state instead of AdamW's 8.
 """
 from __future__ import annotations
 
-import math
-from dataclasses import dataclass
-from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+from typing import Any, Callable, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp

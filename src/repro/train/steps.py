@@ -14,8 +14,7 @@ State is a plain dict pytree => trivially shardable and checkpointable.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable, Dict, Tuple
+from typing import Any, Callable, Dict
 
 import jax
 import jax.numpy as jnp

@@ -20,8 +20,6 @@ import jax
 
 from repro.core.prefetch import DevicePrefetchRing
 from repro.core.tracing import (
-    BATCH_TO_DEVICE,
-    GET_BATCH,
     NULL_TRACER,
     RUN_TRAINING_BATCH,
     Tracer,
@@ -94,6 +92,24 @@ class TrainResult:
     history: List[Dict[str, float]] = field(default_factory=list)
 
 
+def _make_ring(loader, depth: int, tracer) -> DevicePrefetchRing:
+    """Build the per-epoch device prefetch ring; when the loader carries an
+    autotuner, register the ring's depth as a live knob (sized so it has
+    headroom up to the configured bound)."""
+    auto = getattr(loader, "autotuner", None)
+    max_depth = depth
+    if auto is not None:
+        max_depth = max(depth, auto.cfg.max_device_prefetch)
+    ring = DevicePrefetchRing(
+        iter(loader), depth=depth, max_depth=max_depth, tracer=tracer
+    )
+    if auto is not None:
+        # iter(loader) above re-bound the loader knobs; the ring knob rides
+        # along for this epoch and is dropped at the next re-bind
+        auto.attach_ring(ring)
+    return ring
+
+
 class Trainer:
     def __init__(
         self,
@@ -137,9 +153,7 @@ class Trainer:
             if hasattr(loader, "set_epoch") and epoch != start_epoch:
                 loader.set_epoch(epoch)
             self._hook("on_epoch_start", epoch)
-            ring = DevicePrefetchRing(
-                iter(loader), depth=self.device_prefetch, tracer=self.tracer
-            )
+            ring = _make_ring(loader, self.device_prefetch, self.tracer)
             for i, batch in enumerate(ring):
                 self._hook("on_train_batch_start", batch, i)
                 with self.tracer.span(RUN_TRAINING_BATCH, step=self.global_step):
@@ -188,7 +202,7 @@ def raw_train_loop(
     for epoch in range(epochs):
         if hasattr(loader, "set_epoch") and epoch:
             loader.set_epoch(epoch)
-        ring = DevicePrefetchRing(iter(loader), depth=device_prefetch, tracer=tracer)
+        ring = _make_ring(loader, device_prefetch, tracer)
         for batch in ring:
             with tracer.span(RUN_TRAINING_BATCH, step=steps):
                 state, m = step_fn(state, batch)

@@ -1,0 +1,56 @@
+"""Fallback stubs for ``hypothesis`` so the suite collects on a bare
+interpreter (tier-1 CI has no optional deps).
+
+Property-based tests decorated with the stub ``given`` are skipped at run
+time; everything else in the module runs normally.  Usage::
+
+    try:
+        from hypothesis import given, settings
+        from hypothesis import strategies as st
+    except ImportError:
+        from _hypothesis_fallback import given, settings, st
+"""
+from __future__ import annotations
+
+import pytest
+
+
+class _Strategy:
+    """Opaque placeholder returned by every ``st.*`` call."""
+
+    def __call__(self, *args, **kwargs):  # strategies are sometimes chained
+        return self
+
+    def __getattr__(self, name):
+        return self
+
+
+class _Strategies:
+    """Attribute access mimics ``hypothesis.strategies``; every strategy
+    constructor returns an inert placeholder (the test is skipped anyway)."""
+
+    def __getattr__(self, name):
+        return _Strategy()
+
+
+st = _Strategies()
+
+
+def given(*args, **kwargs):
+    def deco(fn):
+        def skipper():
+            pytest.skip("hypothesis not installed")
+
+        skipper.__name__ = fn.__name__
+        skipper.__doc__ = fn.__doc__
+        skipper.__module__ = fn.__module__
+        return skipper
+
+    return deco
+
+
+def settings(*args, **kwargs):
+    def deco(fn):
+        return fn
+
+    return deco

@@ -1,0 +1,390 @@
+"""Autotuner tests: controller convergence on synthetic profiles, knob-bound
+safety, mid-epoch fetcher resize determinism, and autotune=off equivalence."""
+import time
+
+import pytest
+
+from repro.config import AutotuneConfig, LoaderConfig
+from repro.core.autotune import AutotuneController, Knob
+from repro.core.fetcher import (
+    AdjustableSemaphore,
+    AsyncioFetcher,
+    HedgeTracker,
+    ThreadPoolFetcher,
+)
+from repro.core.loader import ConcurrentDataLoader
+from repro.core.tracing import Tracer, window_summary
+from repro.data.dataset import ImageDataset
+from repro.data.imagenet_synth import SyntheticImageStore
+from repro.data.store import SimulatedS3Store
+
+N_ITEMS = 96
+BS = 16
+
+
+@pytest.fixture(scope="module")
+def dataset():
+    store = SyntheticImageStore(N_ITEMS, seed=0, avg_kb=4)
+    sim = SimulatedS3Store(store, latency_mean_s=0.004, bandwidth_per_conn=1e9,
+                           max_connections=64)
+    return ImageDataset(sim, N_ITEMS, out_size=24)
+
+
+def digest(batches):
+    return [(float(b["image"].sum()), b["label"].tolist()) for b in batches]
+
+
+# ---------------------------------------------------------------------------
+# controller on synthetic throughput profiles (no threads, no sleeping)
+# ---------------------------------------------------------------------------
+
+
+def drive(ctrl, vals, tput_fn, steps):
+    """Feed the controller a deterministic clock: each batch takes
+    1/tput(current knobs) seconds."""
+    now = 0.0
+    for _ in range(steps):
+        now += 1.0 / tput_fn(vals)
+        ctrl.on_batch(1, now=now)
+    return now
+
+
+def synthetic_knobs(vals, bounds):
+    def mk(name):
+        lo, hi = bounds[name]
+
+        def setter(v, name=name, lo=lo, hi=hi):
+            vals[name] = max(lo, min(int(v), hi))
+            return vals[name]
+
+        return Knob(name, lambda name=name: vals[name], setter, lo, hi)
+
+    return [mk(n) for n in vals]
+
+
+def test_controller_converges_on_synthetic_profile():
+    # tput rises with both knobs, plateaus at fetch>=16, out>=8
+    def tput(v):
+        return min(v["fetch"], 16) * min(v["out"], 8)
+
+    vals = {"fetch": 1, "out": 1}
+    bounds = {"fetch": (1, 64), "out": (1, 64)}
+    cfg = AutotuneConfig(enabled=True, interval_batches=1, min_window_s=0.0,
+                         warmup_windows=1, rel_improvement=0.05)
+    ctrl = AutotuneController(cfg, synthetic_knobs(vals, bounds))
+    drive(ctrl, vals, tput, steps=300)
+    best = 16 * 8
+    assert tput(vals) >= 0.8 * best, (vals, ctrl.events)
+    assert any(e.action == "accept" for e in ctrl.events)
+
+
+def test_controller_goes_quiescent_on_flat_profile():
+    vals = {"fetch": 4, "out": 4}
+    bounds = {"fetch": (1, 64), "out": (1, 64)}
+    cfg = AutotuneConfig(enabled=True, interval_batches=1, min_window_s=0.0,
+                         patience=2, reprobe_windows=0)  # heartbeat off
+    ctrl = AutotuneController(cfg, synthetic_knobs(vals, bounds))
+    drive(ctrl, vals, lambda v: 100.0, steps=200)
+    assert any(e.action == "quiesce" for e in ctrl.events)
+    # heartbeat disabled: once quiescent on a stable profile, no probing
+    events = list(ctrl.events)
+    last_quiesce = max(i for i, e in enumerate(events)
+                       if e.action == "quiesce")
+    assert all(e.action in ("quiesce", "restore")
+               for e in events[last_quiesce:])
+
+
+def test_reprobe_heartbeat_escapes_premature_park():
+    """Two early noise-reverts can park the controller at a bad point whose
+    throughput is stable (no collapse to trigger a re-arm); the heartbeat
+    must re-probe and resume climbing."""
+    state = {"lie": True}  # first probes measure a fake regression
+
+    def tput(v):
+        if state["lie"]:
+            return 10.0 if v["fetch"] > 1 else 20.0  # punishes the climb
+        return min(v["fetch"], 16) * 20.0
+
+    vals = {"fetch": 1, "out": 4}
+    bounds = {"fetch": (1, 64), "out": (4, 4)}  # single movable knob
+    cfg = AutotuneConfig(enabled=True, interval_batches=1, min_window_s=0.0,
+                         patience=1, reprobe_windows=4)
+    ctrl = AutotuneController(cfg, synthetic_knobs(vals, bounds))
+    drive(ctrl, vals, tput, steps=12)
+    assert any(e.action == "quiesce" for e in ctrl.events)  # parked at fetch=1
+    assert vals["fetch"] == 1
+    state["lie"] = False  # the true profile rewards concurrency
+    drive(ctrl, vals, tput, steps=80)
+    assert any(e.action == "reprobe" for e in ctrl.events)
+    assert vals["fetch"] >= 16, (vals, ctrl.events)
+
+
+def test_controller_rearms_on_regime_change():
+    state = {"collapse": False}
+
+    def tput(v):
+        base = min(v["fetch"], 16) * 10.0
+        return base * (0.05 if state["collapse"] else 1.0)
+
+    vals = {"fetch": 16, "out": 4}
+    bounds = {"fetch": (1, 64), "out": (1, 64)}
+    cfg = AutotuneConfig(enabled=True, interval_batches=1, min_window_s=0.0,
+                         patience=1)
+    ctrl = AutotuneController(cfg, synthetic_knobs(vals, bounds))
+    drive(ctrl, vals, tput, steps=60)
+    assert any(e.action == "quiesce" for e in ctrl.events)
+    state["collapse"] = True  # storage got 20x slower
+    drive(ctrl, vals, tput, steps=60)
+    assert any(e.action == "rearm" for e in ctrl.events)
+
+
+def test_controller_never_exceeds_bounds():
+    # adversarial deterministic "noise": tput jumps around wildly, provoking
+    # accepts/reverts in all directions
+    def tput(v):
+        return 1.0 + ((v["fetch"] * 7919 + v["out"] * 104729) % 97)
+
+    seen = []
+    vals = {"fetch": 4, "out": 4}
+    lo, hi = 2, 32
+
+    def setter(name):
+        def s(v):
+            seen.append(v)
+            vals[name] = max(lo, min(int(v), hi))
+            return vals[name]
+
+        return s
+
+    knobs = [Knob(n, lambda n=n: vals[n], setter(n), lo, hi)
+             for n in ("fetch", "out")]
+    cfg = AutotuneConfig(enabled=True, interval_batches=1, min_window_s=0.0,
+                         patience=1000)  # never quiesce
+    ctrl = AutotuneController(cfg, knobs)
+    drive(ctrl, vals, tput, steps=500)
+    assert seen, "controller never probed"
+    assert all(lo <= v <= hi for v in seen), sorted(set(seen))
+
+
+def test_binary_knob_reverts_unconvincing_flip():
+    flips = []
+    vals = {"hedge": 0}
+
+    def setter(v):
+        flips.append(v)
+        vals["hedge"] = int(v)
+        return vals["hedge"]
+
+    knob = Knob("hedge", lambda: vals["hedge"], setter, 0, 1)
+    cfg = AutotuneConfig(enabled=True, interval_batches=1, min_window_s=0.0,
+                         patience=2)
+    ctrl = AutotuneController(cfg, [knob])
+    drive(ctrl, vals, lambda v: 50.0, steps=50)  # flat: flips never help
+    assert vals["hedge"] == 0  # always rolled back
+    assert any(e.action == "revert" and e.knob == "hedge" for e in ctrl.events)
+
+
+# ---------------------------------------------------------------------------
+# resizable fetchers / adjustable primitives
+# ---------------------------------------------------------------------------
+
+
+def test_adjustable_semaphore_resize():
+    sem = AdjustableSemaphore(2)
+    assert sem.acquire(timeout=0.1) and sem.acquire(timeout=0.1)
+    assert not sem.acquire(timeout=0.05)  # at limit
+    sem.set_limit(3)
+    assert sem.acquire(timeout=0.1)  # raised limit admits immediately
+    sem.set_limit(1)  # shrink below held count: drains, never interrupts
+    sem.release()
+    sem.release()
+    assert not sem.acquire(timeout=0.05)  # still 1 held >= limit 1
+    sem.release()
+    assert sem.acquire(timeout=0.1)
+    with pytest.raises(ValueError):
+        sem.set_limit(0)
+
+
+def test_threadpool_fetcher_resize_clamps(dataset):
+    f = ThreadPoolFetcher(4, hard_cap=16)
+    try:
+        assert f.concurrency == 4
+        assert f.resize(8) == 8
+        assert f.resize(99) == 16  # clamped to hard cap
+        assert f.resize(0) == 1
+        items = f.fetch(dataset, list(range(8)))
+        assert len(items) == 8
+    finally:
+        f.close()
+
+
+def test_asyncio_fetcher_resize(dataset):
+    f = AsyncioFetcher(4, hard_cap=16)
+    try:
+        assert f.resize(12) == 12
+        assert f.resize(64) == 16
+        items = f.fetch(dataset, list(range(6)))
+        assert len(items) == 6
+    finally:
+        f.close()
+
+
+def test_hedge_tracker_enable_toggle(dataset):
+    hedge = HedgeTracker(factor=3.0, min_s=0.05)
+    hedge.enabled = False
+    f = ThreadPoolFetcher(4, hedge=hedge)
+    try:
+        f.fetch(dataset, list(range(4)))
+        assert hedge.hedges_issued == 0  # disabled tracker: no hedging path
+    finally:
+        f.close()
+
+
+def test_window_summary_aggregates():
+    tr = Tracer()
+    t = time.monotonic()
+    for i in range(10):
+        tr.record("stage_a", t + i * 0.01, t + i * 0.01 + 0.005)
+    tr.record("stage_b", t, t + 1.0)
+    w = window_summary(tr, ["stage_a", "stage_b", "stage_c"], t - 1.0,
+                       t + 10.0)
+    assert w["stage_a"].count == 10
+    assert abs(w["stage_a"].mean_s - 0.005) < 1e-9
+    assert w["stage_b"].count == 1
+    assert w["stage_c"].count == 0 and w["stage_c"].rate_per_s == 0.0
+    # spans ending outside the window are excluded
+    w2 = window_summary(tr, ["stage_a"], t + 0.02, t + 0.04)
+    assert w2["stage_a"].count < 10
+
+
+# ---------------------------------------------------------------------------
+# loader integration: determinism under live resizing, off == stock
+# ---------------------------------------------------------------------------
+
+
+def _stream(dataset, **cfg_kw):
+    cfg = LoaderConfig(impl="threaded", batch_size=BS, num_workers=2,
+                       prefetch_factor=2, num_fetch_workers=8, seed=11,
+                       **cfg_kw)
+    dl = ConcurrentDataLoader(dataset, cfg)
+    return digest(list(dl))
+
+
+def test_autotune_off_is_stock_behavior(dataset):
+    stock = _stream(dataset)
+    off = _stream(dataset, autotune=AutotuneConfig(enabled=False))
+    assert stock == off
+    cfg = LoaderConfig(impl="threaded", batch_size=BS,
+                       autotune=AutotuneConfig(enabled=False))
+    dl = ConcurrentDataLoader(dataset, cfg)
+    assert dl.autotuner is None  # no controller object, no hook in __next__
+
+
+@pytest.mark.parametrize("impl", ["threaded", "asyncio"])
+def test_autotune_on_preserves_stream(dataset, impl):
+    cfg_kw = dict(impl=impl, batch_size=BS, num_workers=2, prefetch_factor=2,
+                  num_fetch_workers=8, seed=11)
+    stock = digest(list(ConcurrentDataLoader(dataset, LoaderConfig(**cfg_kw))))
+    at = AutotuneConfig(enabled=True, interval_batches=1, min_window_s=0.0,
+                        max_fetch_workers=16, max_outstanding=16)
+    tuned = digest(list(ConcurrentDataLoader(
+        dataset, LoaderConfig(autotune=at, **cfg_kw))))
+    assert stock == tuned
+
+
+def test_midepoch_resize_preserves_batch_order(dataset):
+    """Resizing every worker's fetch pool between batches must not change the
+    delivered stream (the reorder buffer owns ordering)."""
+    cfg = LoaderConfig(impl="threaded", batch_size=BS, num_workers=2,
+                       prefetch_factor=2, num_fetch_workers=8, seed=11)
+    ref = digest(list(ConcurrentDataLoader(dataset, cfg)))
+
+    dl = ConcurrentDataLoader(dataset, cfg)
+    it = iter(dl)
+    out = []
+    sizes = [1, 16, 2, 8, 4]
+    for i, batch in enumerate(it):
+        out.append(batch)
+        for w in it.workers:
+            w.fetcher.resize(sizes[i % len(sizes)])
+    assert digest(out) == ref
+
+
+def test_autotune_state_persists_across_epochs(dataset):
+    at = AutotuneConfig(enabled=True, interval_batches=1, min_window_s=0.0,
+                        max_fetch_workers=16, max_outstanding=16)
+    cfg = LoaderConfig(impl="threaded", batch_size=BS, num_workers=2,
+                       prefetch_factor=2, num_fetch_workers=2, seed=11,
+                       autotune=at)
+    dl = ConcurrentDataLoader(dataset, cfg)
+    list(dl)
+    tuned_after_e0 = dict(dl._tuned)
+    dl.set_epoch(1)
+    it = iter(dl)
+    next(it)
+    # the new iterator starts from the learned values, not cfg defaults
+    if "fetch_workers" in tuned_after_e0:
+        assert it._fetch_workers == dl._tuned["fetch_workers"]
+    it.shutdown()
+
+
+def test_attach_ring_knob_bounds():
+    class FakeRing:
+        def __init__(self):
+            self.depth = 2
+            self.max_depth = 6
+
+        def set_depth(self, d):
+            self.depth = max(1, min(int(d), self.max_depth))
+            return self.depth
+
+    cfg = AutotuneConfig(enabled=True, interval_batches=1, min_window_s=0.0,
+                         min_device_prefetch=1, max_device_prefetch=8)
+    ctrl = AutotuneController(cfg, [])
+    ring = FakeRing()
+    ctrl.attach_ring(ring)
+    (knob,) = ctrl.knobs
+    assert knob.name == "device_prefetch"
+    assert (knob.lo, knob.hi) == (1, 6)  # capped by the ring's own max_depth
+    assert knob.set(99) == 6
+    assert ring.depth == 6
+
+
+def test_reattach_known_knob_keeps_quiescence():
+    """A converged controller must stay parked when the next epoch re-attaches
+    a knob it already learned (e.g. the per-epoch DevicePrefetchRing)."""
+    vals = {"depth": 2}
+
+    def setter(v):
+        vals["depth"] = max(1, min(int(v), 8))
+        return vals["depth"]
+
+    def mk():
+        return Knob("depth", lambda: vals["depth"], setter, 1, 8)
+
+    cfg = AutotuneConfig(enabled=True, interval_batches=1, min_window_s=0.0,
+                         patience=1, reprobe_windows=0)
+    ctrl = AutotuneController(cfg, [])
+    ctrl.attach_knob(mk())
+    drive(ctrl, vals, lambda v: min(v["depth"], 4) * 25.0, steps=60)
+    assert any(e.action == "quiesce" for e in ctrl.events)
+    tuned = vals["depth"]
+    n_events = len(ctrl.events)
+    ctrl.attach_knob(mk())  # next epoch: same control surface, new object
+    assert vals["depth"] == tuned  # learned value re-applied
+    drive(ctrl, vals, lambda v: min(v["depth"], 4) * 25.0, steps=30)
+    probes_after = [e for e in list(ctrl.events)[n_events:]
+                    if e.action == "probe"]
+    assert not probes_after  # still quiescent — no probing restarted
+
+
+def test_autotune_never_caps_static_config(dataset):
+    """Turning the tuner ON with bounds below the explicit static config must
+    widen the bounds, not silently clamp the loader below its off baseline."""
+    at = AutotuneConfig(enabled=True, max_outstanding=4, max_fetch_workers=4)
+    cfg = LoaderConfig(impl="threaded", batch_size=BS, num_workers=2,
+                       prefetch_factor=8, num_fetch_workers=8, autotune=at)
+    it = iter(ConcurrentDataLoader(dataset, cfg))
+    assert it.max_outstanding == 16  # num_workers * prefetch_factor, uncapped
+    assert it._fetch_workers == 8
+    it.shutdown()

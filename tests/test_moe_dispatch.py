@@ -10,7 +10,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # bare interpreter: skip only the property-based tests
+    from _hypothesis_fallback import given, settings, st
 
 from repro.config import AttentionConfig, ModelConfig, MoEConfig
 from repro.models import moe

@@ -28,6 +28,7 @@ def test_chunked_prefill_matches_single_pass(arch):
                              - b.astype(jnp.float32)).max()) < 0.05
 
 
+@pytest.mark.slow
 def test_chunked_prefill_then_decode_consistent():
     """Decode after a chunked prefill continues exactly like decode after a
     single-pass prefill (cache contents equivalent end-to-end)."""

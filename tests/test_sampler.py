@@ -1,10 +1,11 @@
 """Sampler: determinism, shard coverage, resumability (hypothesis properties)."""
-import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # bare interpreter: skip only the property-based tests
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core.sampler import (
-    BatchIndices,
     ShardedBatchSampler,
     epoch_permutation,
     shard_plan,

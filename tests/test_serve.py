@@ -1,8 +1,6 @@
 """Serving engine: batched decode, continuous batching, greedy parity."""
-import jax
 import jax.numpy as jnp
 import jax.random as jr
-import numpy as np
 import pytest
 
 from repro.config import get_arch
@@ -33,6 +31,7 @@ def reference_greedy(cfg, params, prompt, n_new):
     return out
 
 
+@pytest.mark.slow
 def test_engine_matches_reference(setup):
     cfg, params = setup
     prompts = [[5, 7, 11], [1, 2, 3], [9, 9, 9]]
@@ -65,6 +64,7 @@ def test_continuous_batching_refills_slots(setup):
     assert eng.ticks <= 20  # batched + refilled, not sequential (would be ~25)
 
 
+@pytest.mark.slow
 def test_per_slot_positions_are_isolated(setup):
     """Different prompt lengths per slot must not cross-contaminate."""
     cfg, params = setup
@@ -79,6 +79,7 @@ def test_per_slot_positions_are_isolated(setup):
     assert by_uid[2].output == reference_greedy(cfg, params, pb, 4)
 
 
+@pytest.mark.slow
 def test_eos_stops_early(setup):
     cfg, params = setup
     ref = reference_greedy(cfg, params, [5, 7, 11], 8)

@@ -4,11 +4,14 @@ import time
 
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # bare interpreter: skip only the property-based tests
+    from _hypothesis_fallback import given, settings, st
 
 from repro.config import StoreConfig
-from repro.data.imagenet_synth import SyntheticImageStore, build_synthetic_imagenet, item_key
+from repro.data.imagenet_synth import SyntheticImageStore, item_key
 from repro.data.store import (
     CachedStore,
     InMemoryStore,
