@@ -24,14 +24,18 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 from repro.config import LoaderConfig
 from repro.core.loader import ConcurrentDataLoader
-from repro.core.tracing import Tracer
+from repro.core.tracing import NULL_TRACER, Tracer
 from repro.data.dataset import ImageDataset
 from repro.data.imagenet_synth import build_synthetic_imagenet
 from repro.data.store import (
     CachedStore,
+    DiskTierCache,
     InMemoryStore,
+    MemoryTierCache,
     ObjectStore,
     SimulatedS3Store,
+    TieredCacheStore,
+    make_admission,
 )
 
 # --------------------------------------------------------------------------
@@ -110,9 +114,18 @@ def make_store(
     *,
     num_items: Optional[int] = None,
     cache_bytes: int = 0,
+    disk_dir: str = "",
+    disk_bytes: int = 0,
+    admission: str = "admit-all",
+    cache_shards: int = 1,
     seed: int = 0,
+    tracer: Optional[Tracer] = None,
 ) -> ObjectStore:
-    """kind: 'scratch' (in-memory local) | 's3' (simulated remote)."""
+    """kind: 'scratch' (in-memory local) | 's3' (simulated remote).
+
+    ``cache_bytes`` alone keeps the legacy single-tier ``CachedStore``;
+    adding ``disk_dir`` builds the two-tier ``TieredCacheStore`` (memory LRU
+    over a disk tier bounded at ``disk_bytes``, 0 = unbounded)."""
     base = base_image_store(scale, num_items)
     store: ObjectStore = base
     if kind == "s3":
@@ -125,7 +138,17 @@ def make_store(
             max_connections=scale.max_connections,
             seed=seed,
         )
-    if cache_bytes:
+    if disk_dir:
+        store = TieredCacheStore(
+            store,
+            memory=(
+                MemoryTierCache(cache_bytes, shards=cache_shards)
+                if cache_bytes else None
+            ),
+            disk=DiskTierCache(disk_dir, disk_bytes, make_admission(admission)),
+            tracer=tracer or NULL_TRACER,
+        )
+    elif cache_bytes:
         store = CachedStore(store, cache_bytes)
     return store
 

@@ -175,9 +175,21 @@ class StoreConfig:
     nic_bandwidth: float = 1.2e9  # bytes/s aggregate
     max_connections: int = 256
     failure_rate: float = 0.0
-    # caching layer (paper §2.4; Varnish analogue)
-    cache_bytes: int = 0  # 0 = no cache
-    cache_dir: str = ""  # optional on-disk cache
+    # caching layer (paper §2.4; Varnish analogue).  When both cache_bytes
+    # and cache_dir are set, build_store assembles one two-tier
+    # TieredCacheStore (memory LRU over bounded disk) instead of nesting.
+    cache_bytes: int = 0  # memory tier capacity; 0 = no memory tier
+    cache_dir: str = ""  # disk tier directory; "" = no disk tier
+    disk_cache_bytes: int = 0  # disk tier capacity; 0 = unbounded (legacy)
+    # memory-tier lock striping.  Default 1 = exact global LRU with items
+    # cacheable up to the full capacity (the legacy CachedStore semantics).
+    # Raising it trades strict LRU for less lock contention AND caps the
+    # largest cacheable item at cache_bytes // cache_shards — opt in only
+    # when single objects are far smaller than the memory budget.
+    cache_shards: int = 1
+    # disk-tier admission: admit-all | size-threshold | second-hit
+    cache_admission: str = "admit-all"
+    admission_max_item_bytes: int = 1 << 20  # size-threshold policy cutoff
 
 
 @dataclass(frozen=True)
@@ -213,19 +225,50 @@ class AutotuneConfig:
     max_outstanding: int = 64
     min_device_prefetch: int = 1
     max_device_prefetch: int = 8
-    # multiplicative step for integer knobs (value *= step / value //= step)
+    # per-knob coarse->fine step schedule for integer knobs: each knob starts
+    # at the first (coarse) factor and drops to the next finer one after a
+    # revert/hold on that knob; a rearm (regime change) resets to coarse.
+    # () derives (2 * step_factor, step_factor) so a bare step_factor keeps
+    # its legacy meaning as the *fine* step.
+    step_schedule: Tuple[int, ...] = ()
+    # multiplicative fine step for integer knobs (value *= step / value //= step)
     step_factor: int = 2
     # allow the controller to trial-toggle hedged requests once concurrency
     # knobs have plateaued (threaded impl only)
     tune_hedge: bool = False
     # consecutive plateau windows before the controller goes quiescent
     patience: int = 3
+    # jump back to the best settled state when a window collapses below half
+    # of its throughput.  Right for stationary measurement (the collapse IS
+    # the walk's fault); disable when the environment itself is non-stationary
+    # (shared CPUs, phase-shifting load) — there a collapse says nothing
+    # about the knobs and restoring just thrashes them.
+    collapse_restore: bool = True
     # exploration heartbeat: while quiescent, re-probe once every this many
     # windows (0 = off).  Escapes premature parking after early noise
     # reverts — a collapse-based re-arm alone cannot detect "parked at a
     # stable but suboptimal point".  A failed heartbeat probe re-quiesces
     # immediately; an accepted one resumes full climbing.
     reprobe_windows: int = 8
+    # accelerator-utilization gate: when the controller has a utilization
+    # signal (Trainer wires repro.core.utilization.recent_busy_fraction) and
+    # the training step is busier than this fraction, upward probes are
+    # skipped — don't buy loader throughput the accelerator can't eat.
+    # 0 disables the gate.
+    util_gate: float = 0.9
+    # cache-tier knobs (attached when the dataset's store stack contains a
+    # TieredCacheStore).  Capacity knobs exist only when the matching
+    # max_*_cache_bytes names an explicit ceiling ABOVE the configured
+    # capacity (default 0 = no capacity knob): growth is almost always
+    # throughput-positive, so a default ceiling would let the hill climber
+    # silently walk a cache the user sized for their RAM/disk up to it.
+    # The admission-policy knob is attached whenever a disk tier exists.
+    tune_cache: bool = True
+    min_memory_cache_bytes: int = 1 << 20
+    max_memory_cache_bytes: int = 0
+    min_disk_cache_bytes: int = 1 << 22
+    max_disk_cache_bytes: int = 0
+    tune_admission: bool = True
 
 
 @dataclass(frozen=True)

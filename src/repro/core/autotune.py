@@ -46,8 +46,8 @@ re-arms it (regime change, e.g. storage latency shift).
 from __future__ import annotations
 
 from collections import deque
-from dataclasses import dataclass
-from typing import Any, Callable, Deque, Dict, List, Optional
+from dataclasses import dataclass, field
+from typing import Any, Callable, Deque, Dict, List, Optional, Tuple
 
 import time
 
@@ -72,6 +72,9 @@ class Knob:
 
     ``set`` must apply the value at a safe boundary and return the value
     actually applied (clamped by the owner); binary knobs use ``lo=0, hi=1``.
+    ``scale`` selects multiplicative stepping (concurrency/capacity knobs) or
+    additive stepping (small enumerations, e.g. an admission-policy index).
+    ``step_schedule`` overrides the config's coarse->fine factors per knob.
     """
 
     name: str
@@ -79,6 +82,8 @@ class Knob:
     set: Callable[[int], int]
     lo: int
     hi: int
+    scale: str = "mult"  # mult | add
+    step_schedule: Tuple[int, ...] = field(default=())
 
     @property
     def is_binary(self) -> bool:
@@ -91,6 +96,7 @@ class TuneEvent:
 
     batch: int
     action: str  # probe | accept | revert | hold | restore | quiesce | rearm
+    #             | reprobe | gate
     knob: str
     value: int
     tput: float
@@ -114,11 +120,16 @@ class AutotuneController:
         *,
         tracer: Optional[Tracer] = None,
         store_stats_fn: Optional[Callable[[], Any]] = None,
+        util_fn: Optional[Callable[[], Optional[float]]] = None,
     ) -> None:
         self.cfg = cfg
         self.knobs = list(knobs)
         self.tracer = tracer
         self.store_stats_fn = store_stats_fn
+        # accelerator busy-fraction signal (None = no signal yet); wired by
+        # the Trainer so the controller stops buying loader throughput the
+        # training step can't eat (see cfg.util_gate)
+        self.util_fn = util_fn
         # bounded: the reprobe heartbeat keeps appending for the loader's
         # lifetime; consumers only ever need the recent tail
         self.events: Deque[TuneEvent] = deque(maxlen=4096)
@@ -134,6 +145,8 @@ class AutotuneController:
         self._phase = "baseline"
         self._ki = 0  # round-robin knob cursor
         self._dir: Dict[str, int] = {k.name: +1 for k in self.knobs}
+        # per-knob position in the coarse->fine step schedule
+        self._step_idx: Dict[str, int] = {k.name: 0 for k in self.knobs}
         self._stalled_moves = 0  # consecutive non-accepted probes
         self._quiescent = False
         self._quiet_windows = 0  # windows spent quiescent (reprobe heartbeat)
@@ -152,6 +165,7 @@ class AutotuneController:
         self.knobs = list(knobs)
         for k in knobs:
             self._dir.setdefault(k.name, +1)
+            self._step_idx.setdefault(k.name, 0)
         # start the new epoch at the best point measured so far, not at
         # whatever mid-probe value the last iterator stopped on
         for k in self.knobs:
@@ -174,6 +188,7 @@ class AutotuneController:
         self.knobs.append(knob)
         seen = knob.name in self._dir
         self._dir.setdefault(knob.name, +1)
+        self._step_idx.setdefault(knob.name, 0)
         if knob.name in self._best_state:
             knob.set(self._best_state[knob.name])
         if not seen:
@@ -191,6 +206,18 @@ class AutotuneController:
                 hi=min(self.cfg.max_device_prefetch, ring.max_depth),
             )
         )
+
+    def reset_window(self) -> None:
+        """Drop the in-flight measurement window and any probe riding on it;
+        call before resuming ``on_batch`` after a feeding pause (the gap
+        would otherwise be measured as a throughput collapse).  The probed
+        knob value is kept — only the judgment is abandoned."""
+        self._win_t0 = None
+        self._win_batches = 0
+        self._win_items = 0
+        self._probe = None
+        if self._phase in ("settle", "measure"):
+            self._phase = "baseline"
 
     def on_batch(self, items: int = 1, now: Optional[float] = None) -> None:
         """Account one delivered batch; maybe close a window and adjust."""
@@ -274,6 +301,9 @@ class AutotuneController:
                 self._best_state_tput *= 0.5
                 for name in self._dir:
                     self._dir[name] = +1
+                # regime changed: the optimum may be far away — coarse again
+                for name in self._step_idx:
+                    self._step_idx[name] = 0
                 self._log("rearm", "-", 0, tput)
                 self._start_probe(tput)
                 return
@@ -325,7 +355,8 @@ class AutotuneController:
         walk went downhill (mis-attribution) or the world changed; jump back
         to the best point wholesale instead of retracing the gradient."""
         if (
-            self._best_state
+            self.cfg.collapse_restore
+            and self._best_state
             and self._best_state_tput > 0
             and tput < REARM_FRACTION * self._best_state_tput
             and self._current_state() != self._best_state
@@ -363,6 +394,7 @@ class AutotuneController:
             # settle + re-measure a clean baseline before the next probe
             p.knob.set(p.old_value)
             self._log("revert", p.knob.name, p.old_value, tput)
+            self._refine(p.knob)  # the coarse jump overshot: step finer
             if not p.knob.is_binary:
                 # a failed up-probe earns ONE down-trial; a failed down-probe
                 # resets to climbing (never walk downhill repeatedly)
@@ -374,6 +406,7 @@ class AutotuneController:
             return
         # dead-band: keep the value but stop pushing this knob
         self._log("hold", p.knob.name, p.new_value, tput)
+        self._refine(p.knob)  # plateaued at this granularity: step finer
         if went_down:
             self._dir[p.knob.name] = +1
         self._advance()
@@ -399,12 +432,34 @@ class AutotuneController:
         if self.knobs:
             self._ki = (self._ki + 1) % len(self.knobs)
 
+    def _sched(self, knob: Knob) -> Tuple[int, ...]:
+        """Coarse->fine step factors for this knob."""
+        if knob.step_schedule:
+            return knob.step_schedule
+        if self.cfg.step_schedule:
+            return self.cfg.step_schedule
+        fine = max(self.cfg.step_factor, 2)
+        return (2 * fine, fine)
+
+    def _refine(self, knob: Knob) -> None:
+        """Advance the knob's schedule to the next finer step (sticky at the
+        finest); called when a probe at the current granularity didn't pay."""
+        sched = self._sched(knob)
+        idx = self._step_idx.get(knob.name, 0)
+        self._step_idx[knob.name] = min(idx + 1, len(sched) - 1)
+
     def _next_value(self, knob: Knob, cur: int) -> Optional[int]:
         if knob.is_binary:
             return knob.hi - cur  # flip
         d = self._dir[knob.name]
-        step = max(self.cfg.step_factor, 2)
-        nxt = cur * step if d > 0 else cur // step
+        sched = self._sched(knob)
+        step = sched[min(self._step_idx.get(knob.name, 0), len(sched) - 1)]
+        if knob.scale == "add":
+            step = max(step, 1)
+            nxt = cur + step if d > 0 else cur - step
+        else:
+            step = max(step, 2)
+            nxt = cur * step if d > 0 else cur // step
         nxt = max(knob.lo, min(knob.hi, nxt))
         return None if nxt == cur else nxt
 
@@ -416,9 +471,16 @@ class AutotuneController:
         downward direction flips back up (climbing from the bottom is the
         desirable move), but a knob at its UPPER wall is simply skipped —
         flipping there would momentum-probe a 4x concurrency drop right
-        after reaching the top, cratering throughput for two windows."""
+        after reaching the top, cratering throughput for two windows.
+
+        When the accelerator-utilization gate is active (the training step is
+        already consuming everything the loader produces), upward moves and
+        binary trials are skipped — they'd buy throughput nobody eats — but
+        downward moves still run so over-provisioned concurrency is given
+        back."""
         if not self.knobs:
             return
+        gated = self._util_gated()
         order: List[Knob] = []
         if prefer is not None:
             order.append(prefer)
@@ -427,6 +489,7 @@ class AutotuneController:
             k = self.knobs[(self._ki + i) % len(self.knobs)]
             if k is not prefer:
                 order.append(k)
+        skipped_for_gate = False
         for k in order:
             cur = k.get()
             nxt = self._next_value(k, cur)
@@ -436,6 +499,9 @@ class AutotuneController:
                 nxt = self._next_value(k, cur)
             if nxt is None:
                 continue
+            if gated and (k.is_binary or nxt > cur):
+                skipped_for_gate = True
+                continue
             applied = k.set(nxt)
             if applied == cur:
                 continue  # owner clamped the move away — not a probe
@@ -444,9 +510,27 @@ class AutotuneController:
             self._phase = "settle"
             self._log("probe", k.name, applied, baseline)
             return
-        # nothing movable anywhere
+        if skipped_for_gate:
+            # accelerator-bound, not converged: stay armed and re-check the
+            # gate next window instead of quiescing
+            self._log("gate", "-", 0, baseline)
+            self._phase = "baseline"
+            return
+        # nothing movable anywhere (e.g. a coarse momentum-accept landed every
+        # knob on a wall): park, and say so in the audit trail
         self._quiescent = True
+        self._quiet_windows = 0
         self._phase = "baseline"
+        self._log("quiesce", "-", 0, baseline)
+
+    def _util_gated(self) -> bool:
+        if self.util_fn is None or self.cfg.util_gate <= 0:
+            return False
+        try:
+            util = self.util_fn()
+        except Exception:
+            return False
+        return util is not None and util >= self.cfg.util_gate
 
 
 def build_loader_knobs(
@@ -489,4 +573,62 @@ def build_loader_knobs(
             return int(hedge.enabled)
 
         knobs.append(Knob("hedge", _get_hedge, _set_hedge, 0, 1))
+    return knobs
+
+
+def build_cache_knobs(cfg: AutotuneConfig, cache: Any) -> List[Knob]:
+    """Knobs for a ``TieredCacheStore``-shaped object (duck-typed so
+    ``repro.core`` never imports ``repro.data``): memory capacity, disk
+    capacity, and the disk admission-policy index.
+
+    Capacity knobs are attached ONLY when the config names an explicit
+    ceiling above the configured capacity (``max_*_cache_bytes``): growing a
+    cache is almost always throughput-positive, so a default ceiling would
+    silently walk a user-sized cache up to it — and without growth headroom
+    the knob would start pinned at its upper wall, where the controller
+    (deliberately) never probes, making it a silent no-op.  No ceiling, no
+    knob.  The lower bound widens down to the configured capacity, mirroring
+    the loader-knob rule that enabling autotune must never clamp an explicit
+    static config.  An unbounded disk tier (capacity 0) gets no capacity
+    knob — there is nothing to trade off.  The admission knob is attached
+    whenever a disk tier exists (``tune_admission``).  The cache object
+    outlives any ``_LoaderIter``, so these knobs are attached per-epoch via
+    ``attach_knob`` and keep their learned values."""
+    knobs: List[Knob] = []
+    mem = getattr(cache, "memory", None)
+    if mem is not None and cfg.max_memory_cache_bytes > mem.capacity:
+        knobs.append(
+            Knob(
+                name="cache_mem_bytes",
+                get=lambda m=mem: m.capacity,
+                set=cache.set_memory_capacity,
+                lo=min(cfg.min_memory_cache_bytes, mem.capacity),
+                hi=cfg.max_memory_cache_bytes,
+            )
+        )
+    disk = getattr(cache, "disk", None)
+    if disk is not None and disk.capacity and cfg.max_disk_cache_bytes > disk.capacity:
+        knobs.append(
+            Knob(
+                name="cache_disk_bytes",
+                get=lambda d=disk: d.capacity,
+                set=cache.set_disk_capacity,
+                lo=min(cfg.min_disk_cache_bytes, disk.capacity),
+                hi=cfg.max_disk_cache_bytes,
+            )
+        )
+    if disk is not None and cfg.tune_admission:
+        kinds = getattr(cache, "ADMISSION_KINDS", ())
+        if len(kinds) > 2:  # a 2-policy space would look binary to the controller
+            knobs.append(
+                Knob(
+                    name="cache_admission",
+                    get=cache.admission_index,
+                    set=cache.set_admission,
+                    lo=0,
+                    hi=len(kinds) - 1,
+                    scale="add",
+                    step_schedule=(1,),
+                )
+            )
     return knobs

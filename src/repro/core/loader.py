@@ -27,7 +27,12 @@ import time
 from typing import Any, Callable, Dict, Iterator, List, Optional
 
 from repro.config import LoaderConfig
-from repro.core.autotune import AutotuneController, build_loader_knobs
+from repro.core.autotune import (
+    AutotuneController,
+    Knob,
+    build_cache_knobs,
+    build_loader_knobs,
+)
 from repro.core.fetcher import HedgeTracker, make_fetcher
 from repro.core.sampler import BatchIndices, ShardedBatchSampler
 from repro.core.tracing import GET_BATCH, NULL_TRACER, Tracer
@@ -46,6 +51,17 @@ def _store_stats_fn(dataset: MapDataset):
     while store is not None:
         if hasattr(store, "stats"):
             return lambda s=store: s.stats
+        store = getattr(store, "base", None)
+    return None
+
+
+def _find_tiered_cache(dataset: MapDataset):
+    """Find a TieredCacheStore in the dataset's store stack (duck-typed on
+    its knob surface) so its capacities/admission become autotune knobs."""
+    store = getattr(dataset, "store", None)
+    while store is not None:
+        if hasattr(store, "set_memory_capacity"):
+            return store
         store = getattr(store, "base", None)
     return None
 
@@ -101,6 +117,17 @@ class ConcurrentDataLoader:
             else None
         )
         self._tuned: Dict[str, int] = {}
+        # cache-tier knobs: the cache outlives every _LoaderIter, so the knob
+        # list is built once here and re-attached after each epoch's bind().
+        # (The cache's tracer is NOT rebound here: the store may be shared
+        # by several loaders, and mutating a caller-owned object would leak
+        # this loader's tracer into their timelines — pass a tracer to
+        # build_store/TieredCacheStore to get cache_get spans.)
+        self._cache_knobs: List[Knob] = []
+        if self.autotuner is not None and cfg.autotune.tune_cache:
+            cache = _find_tiered_cache(dataset)
+            if cache is not None:
+                self._cache_knobs = build_cache_knobs(cfg.autotune, cache)
 
     # -- epoch / resume ------------------------------------------------------
     def set_epoch(self, epoch: int) -> None:
@@ -190,6 +217,11 @@ class _LoaderIter:
                     max_outstanding=self._max_outstanding_bound,
                 )
             )
+            # bind() replaced the knob list; cache knobs ride along for every
+            # epoch (attach_knob re-applies learned values and keeps a
+            # quiescent controller parked for already-seen knobs)
+            for knob in loader._cache_knobs:
+                loader.autotuner.attach_knob(knob)
 
         if not cfg.lazy_init:
             # Vanilla blocking behaviour: the constructor sequentially starts

@@ -20,6 +20,9 @@ GET_BATCH = "get_batch"
 GET_ITEM = "get_item"
 BATCH_TO_DEVICE = "batch_to_device"
 RUN_TRAINING_BATCH = "run_training_batch"
+# cache-subsystem lane: one span per TieredCacheStore GET, tagged with the
+# serving tier (memory | disk | origin)
+CACHE_GET = "cache_get"
 
 
 @dataclass
@@ -70,6 +73,25 @@ class Tracer:
             out = list(self._spans)
         if name is not None:
             out = [s for s in out if s.name == name]
+        return out
+
+    # threads record() spans in completion order, give or take this much
+    _REORDER_SLACK_S = 1.0
+
+    def recent_spans(self, name: str, since: float) -> List[Span]:
+        """Spans named ``name`` that ended at or after ``since``, oldest
+        first.  Walks the record backward and stops once spans end before
+        the window (minus a reorder slack), so the cost is O(matches) per
+        call instead of O(entire history) — this is the hot-path query the
+        autotuner's utilization gate issues every tuning window."""
+        out: List[Span] = []
+        with self._lock:
+            for s in reversed(self._spans):
+                if s.t1 < since - self._REORDER_SLACK_S:
+                    break
+                if s.name == name and s.t1 >= since:
+                    out.append(s)
+        out.reverse()
         return out
 
     def durations(self, name: str) -> List[float]:

@@ -9,8 +9,9 @@ by the fraction of it covered by ``run_training_batch`` spans.
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass
-from typing import List, Sequence
+from typing import List, Optional, Sequence
 
 from repro.core.tracing import RUN_TRAINING_BATCH, Span, Tracer, union_duration
 
@@ -70,3 +71,34 @@ def sample_utilization(
 
 def accelerator_stats(tracer: Tracer, t0: float, t1: float, hz: float = 10.0) -> UtilStats:
     return sample_utilization(tracer.spans(RUN_TRAINING_BATCH), t0, t1, hz)
+
+
+def recent_busy_fraction(
+    tracer: Tracer, window_s: float = 2.0, now: Optional[float] = None
+) -> Optional[float]:
+    """Accelerator busy fraction over the trailing window — the live signal
+    the autotuner's utilization gate consumes (``AutotuneConfig.util_gate``).
+
+    The window is anchored at the END of the last *completed* training-step
+    span, not at the wall clock: only completed spans are recorded, so a
+    now-anchored window read mid-step would count the in-flight step's time
+    as idle and systematically under-report utilization whenever the step
+    duration approaches ``window_s`` (the long-step regime the gate most
+    targets).
+
+    Returns ``None`` when there is no usable signal — no step span in recent
+    history, the last step completed too long ago (training paused, or an
+    in-flight step much longer than the window), or a saturated ``Tracer``
+    dropping spans.  No signal, no gate: failing open beats tuning against a
+    stale reading."""
+    t_now = time.monotonic() if now is None else now
+    recent = tracer.recent_spans(RUN_TRAINING_BATCH, t_now - 3 * window_s)
+    if not recent:
+        return None
+    anchor = max(s.t1 for s in recent)
+    if t_now - anchor > 2 * window_s:
+        return None  # stale: paused, or an in-flight step we can't see
+    t1, t0 = anchor, anchor - window_s
+    spans = [s for s in recent if s.t1 > t0 and s.t0 < t1]
+    clipped = [Span(s.name, max(s.t0, t0), min(s.t1, t1), s.tid) for s in spans]
+    return min(union_duration(clipped) / max(window_s, 1e-9), 1.0)

@@ -1,1 +1,1 @@
-from repro.data import augment, codec, dataset, imagenet_synth, shards, store  # noqa: F401
+from repro.data import augment, cache, codec, dataset, imagenet_synth, shards, store  # noqa: F401

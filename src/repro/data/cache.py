@@ -1,0 +1,744 @@
+"""Tiered cache subsystem — the hot tier behind the paper's 12x S3 win.
+
+The paper's Varnish cache (§2.4) only pays off when the hot tier absorbs
+repeat reads; this module makes that tier a first-class, *tunable* subsystem:
+
+* :class:`MemoryTierCache` — sharded, lock-striped in-process LRU bounded by
+  bytes.  Shard count 1 gives exact global LRU (the legacy ``CachedStore``
+  semantics); more shards trade strict LRU for reduced lock contention.
+* :class:`DiskTierCache`  — **bounded** on-disk tier: atomic tmp+rename
+  writes, LRU eviction by bytes, a pluggable admission policy, and crash
+  recovery (orphaned ``*.tmp*`` files are purged and surviving entries
+  re-indexed, oldest-mtime first, on init).  Capacity is *reserved before the
+  write*, so parallel writers can never overshoot ``capacity_bytes``.
+* :class:`TieredCacheStore` — :class:`~repro.data.store.ObjectStore` facade
+  stacking memory over disk over the origin store, with sync ``get`` and
+  async-safe ``aget`` (disk I/O is offloaded to the default executor), disk
+  hits promoted to memory, and per-GET ``cache_get`` spans recorded through
+  :mod:`repro.core.tracing` (``tier=memory|disk|origin``).
+
+Admission policies (applied to the disk tier, where a wasted write costs
+I/O *and* evicts something useful):
+
+* ``admit-all``       — cache every miss (the legacy behaviour),
+* ``size-threshold``  — only items below a byte threshold (huge objects
+  would sweep the whole tier for one future hit),
+* ``second-hit``      — admit on the second sighting of a key (Bloom-filter
+  based; one-touch scans never pollute the cache).
+
+Capacities and the admission policy are runtime-adjustable
+(``set_memory_capacity`` / ``set_disk_capacity`` / ``set_admission``), which
+is what lets ``repro.core.autotune`` drive them as knobs.
+"""
+from __future__ import annotations
+
+import asyncio
+import hashlib
+import os
+import threading
+import time
+from abc import ABC, abstractmethod
+from collections import OrderedDict
+from dataclasses import dataclass
+from typing import List, Optional
+
+from repro.core.tracing import CACHE_GET, NULL_TRACER, Tracer
+
+
+@dataclass(frozen=True)
+class CacheTierStats:
+    """Unified per-tier counters (a point-in-time snapshot)."""
+
+    hits: int = 0
+    misses: int = 0
+    evictions: int = 0
+    admitted: int = 0
+    rejected: int = 0  # admission-policy / capacity rejections only
+    write_failures: int = 0  # I/O errors writing the tier (disk full, EMFILE)
+    bytes_used: int = 0
+    bytes_admitted: int = 0
+    bytes_evicted: int = 0
+
+    @property
+    def lookups(self) -> int:
+        return self.hits + self.misses
+
+    @property
+    def hit_rate(self) -> float:
+        return self.hits / self.lookups if self.lookups else 0.0
+
+
+# ---------------------------------------------------------------------------
+# Admission policies
+# ---------------------------------------------------------------------------
+
+
+class AdmissionPolicy(ABC):
+    """Decides whether a missed object earns a slot in the tier."""
+
+    name: str = "?"
+
+    @abstractmethod
+    def admit(self, key: str, size: int) -> bool: ...
+
+
+class AdmitAll(AdmissionPolicy):
+    name = "admit-all"
+
+    def admit(self, key: str, size: int) -> bool:
+        return True
+
+
+class SizeThresholdAdmission(AdmissionPolicy):
+    """Reject items above ``max_item_bytes`` — one giant object can sweep the
+    whole tier for a single future hit."""
+
+    name = "size-threshold"
+
+    def __init__(self, max_item_bytes: int) -> None:
+        self.max_item_bytes = int(max_item_bytes)
+
+    def admit(self, key: str, size: int) -> bool:
+        return size <= self.max_item_bytes
+
+
+class _BloomFilter:
+    """Small thread-safe Bloom filter (blake2b-derived indices)."""
+
+    def __init__(self, num_bits: int = 1 << 17, num_hashes: int = 4) -> None:
+        self._nbits = num_bits
+        self._k = num_hashes
+        self._bits = bytearray(num_bits // 8)
+        self._lock = threading.Lock()
+
+    def _indices(self, key: str) -> List[int]:
+        h = hashlib.blake2b(key.encode(), digest_size=4 * self._k).digest()
+        return [
+            int.from_bytes(h[4 * i: 4 * i + 4], "little") % self._nbits
+            for i in range(self._k)
+        ]
+
+    def test_and_add(self, key: str) -> bool:
+        """Return whether ``key`` was (probably) already present; add it."""
+        idxs = self._indices(key)
+        with self._lock:
+            present = all(self._bits[i >> 3] & (1 << (i & 7)) for i in idxs)
+            for i in idxs:
+                self._bits[i >> 3] |= 1 << (i & 7)
+        return present
+
+
+class SecondHitAdmission(AdmissionPolicy):
+    """Admit a key only on its *second* sighting: one-touch scan traffic
+    (e.g. a single validation pass) never pollutes the tier."""
+
+    name = "second-hit"
+
+    def __init__(self, num_bits: int = 1 << 17) -> None:
+        self._seen = _BloomFilter(num_bits=num_bits)
+
+    def admit(self, key: str, size: int) -> bool:
+        return self._seen.test_and_add(key)
+
+
+ADMISSION_KINDS = ("admit-all", "size-threshold", "second-hit")
+
+
+def make_admission(kind: str, max_item_bytes: int = 1 << 20) -> AdmissionPolicy:
+    if kind == "admit-all":
+        return AdmitAll()
+    if kind == "size-threshold":
+        return SizeThresholdAdmission(max_item_bytes)
+    if kind == "second-hit":
+        return SecondHitAdmission()
+    raise ValueError(f"unknown admission policy {kind!r}; known: {ADMISSION_KINDS}")
+
+
+# ---------------------------------------------------------------------------
+# Memory tier
+# ---------------------------------------------------------------------------
+
+
+class _MemShard:
+    __slots__ = ("lock", "lru", "used", "hits", "misses", "evictions",
+                 "admitted", "rejected", "bytes_admitted", "bytes_evicted")
+
+    def __init__(self) -> None:
+        self.lock = threading.Lock()
+        self.lru: "OrderedDict[str, bytes]" = OrderedDict()
+        self.used = 0
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+        self.admitted = 0
+        self.rejected = 0
+        self.bytes_admitted = 0
+        self.bytes_evicted = 0
+
+
+class MemoryTierCache:
+    """Sharded, lock-striped byte-bounded LRU.  Each shard owns 1/N of the
+    capacity and its own lock, so the aggregate can never exceed
+    ``capacity_bytes`` while concurrent readers rarely contend.
+
+    Striping tradeoff: the largest cacheable item is ``capacity_bytes //
+    shards`` — an object bigger than one shard's budget is rejected (counted
+    in ``rejected``) rather than allowed to blow the shard's bound.  Size
+    jumbo objects for the disk tier, or use fewer shards when single items
+    approach the memory budget."""
+
+    def __init__(
+        self,
+        capacity_bytes: int,
+        *,
+        shards: int = 1,
+        admission: Optional[AdmissionPolicy] = None,
+    ) -> None:
+        if shards < 1:
+            raise ValueError("shards must be >= 1")
+        self.capacity = max(int(capacity_bytes), 0)
+        self.admission = admission or AdmitAll()
+        self._shards = [_MemShard() for _ in range(shards)]
+
+    def _shard(self, key: str) -> _MemShard:
+        if len(self._shards) == 1:
+            return self._shards[0]
+        h = hashlib.blake2b(key.encode(), digest_size=4).digest()
+        return self._shards[int.from_bytes(h, "little") % len(self._shards)]
+
+    def _per_shard_capacity(self) -> int:
+        return self.capacity // len(self._shards)
+
+    def get(self, key: str) -> Optional[bytes]:
+        sh = self._shard(key)
+        with sh.lock:
+            data = sh.lru.get(key)
+            if data is not None:
+                sh.lru.move_to_end(key)
+                sh.hits += 1
+                return data
+            sh.misses += 1
+            return None
+
+    def put(self, key: str, data: bytes) -> bool:
+        size = len(data)
+        sh = self._shard(key)
+        if not self.admission.admit(key, size):
+            with sh.lock:
+                sh.rejected += 1
+            return False
+        with sh.lock:
+            # capacity is read under the shard lock: a concurrent
+            # set_capacity shrink must not leave this shard sized (and
+            # evicted) against the stale larger budget
+            cap = self._per_shard_capacity()
+            if size > cap:
+                sh.rejected += 1
+                return False
+            if key in sh.lru:
+                sh.lru.move_to_end(key)
+                return True
+            sh.lru[key] = data
+            sh.used += size
+            sh.admitted += 1
+            sh.bytes_admitted += size
+            self._evict_shard_locked(sh, cap)
+        return True
+
+    def _evict_shard_locked(self, sh: _MemShard, cap: int) -> None:
+        while sh.used > cap and sh.lru:
+            _, victim = sh.lru.popitem(last=False)
+            sh.used -= len(victim)
+            sh.evictions += 1
+            sh.bytes_evicted += len(victim)
+
+    def set_capacity(self, capacity_bytes: int) -> int:
+        self.capacity = max(int(capacity_bytes), 0)
+        cap = self._per_shard_capacity()
+        for sh in self._shards:
+            with sh.lock:
+                self._evict_shard_locked(sh, cap)
+        return self.capacity
+
+    @property
+    def used_bytes(self) -> int:
+        return sum(sh.used for sh in self._shards)
+
+    def stats(self) -> CacheTierStats:
+        agg = dict(hits=0, misses=0, evictions=0, admitted=0, rejected=0,
+                   bytes_used=0, bytes_admitted=0, bytes_evicted=0)
+        for sh in self._shards:
+            with sh.lock:
+                agg["hits"] += sh.hits
+                agg["misses"] += sh.misses
+                agg["evictions"] += sh.evictions
+                agg["admitted"] += sh.admitted
+                agg["rejected"] += sh.rejected
+                agg["bytes_used"] += sh.used
+                agg["bytes_admitted"] += sh.bytes_admitted
+                agg["bytes_evicted"] += sh.bytes_evicted
+        return CacheTierStats(**agg)
+
+
+# ---------------------------------------------------------------------------
+# Disk tier
+# ---------------------------------------------------------------------------
+
+
+class _DiskEntry:
+    __slots__ = ("size", "final", "read_failures")
+
+    def __init__(self, size: int, final: bool) -> None:
+        self.size = size
+        self.final = final
+        self.read_failures = 0  # consecutive non-ENOENT read errors
+
+
+class DiskTierCache:
+    """Byte-bounded on-disk LRU with atomic writes and pluggable admission.
+
+    Capacity accounting is *reservation-based*: a writer reserves its bytes in
+    the index (evicting LRU victims as needed) before touching the disk, so
+    the sum of finalized cache files never exceeds ``capacity_bytes`` even
+    under parallel writers.  ``capacity_bytes=0`` means unbounded (the legacy
+    ``DiskCacheStore`` behaviour).  Same-key writers serialize on a striped
+    lock; distinct keys proceed in parallel.
+    """
+
+    def __init__(
+        self,
+        cache_dir: str,
+        capacity_bytes: int = 0,
+        admission: Optional[AdmissionPolicy] = None,
+        *,
+        write_stripes: int = 16,
+    ) -> None:
+        self.dir = cache_dir
+        self.capacity = max(int(capacity_bytes), 0)
+        self.admission = admission or AdmitAll()
+        os.makedirs(cache_dir, exist_ok=True)
+        self._index: "OrderedDict[str, _DiskEntry]" = OrderedDict()
+        self._used = 0
+        self._lock = threading.Lock()  # index + counters
+        self._stripes = [threading.Lock() for _ in range(write_stripes)]
+        self.orphans_removed = 0
+        self._hits = 0
+        self._misses = 0
+        self._evictions = 0
+        self._admitted = 0
+        self._rejected = 0
+        self._write_failures = 0
+        self._bytes_admitted = 0
+        self._bytes_evicted = 0
+        self._recover()
+
+    # -- init / recovery -----------------------------------------------------
+    def _recover(self) -> None:
+        """Purge orphaned tmp files from crashed writers; re-index surviving
+        entries (oldest mtime first, so recovered LRU order is sensible)."""
+        found = []
+        for name in os.listdir(self.dir):
+            path = os.path.join(self.dir, name)
+            if ".tmp" in name:
+                try:
+                    os.remove(path)
+                    self.orphans_removed += 1
+                except OSError:
+                    pass
+                continue
+            try:
+                st = os.stat(path)
+            except OSError:
+                continue
+            found.append((st.st_mtime, name, st.st_size))
+        for _, name, size in sorted(found):
+            self._index[name] = _DiskEntry(size, True)
+            self._used += size
+        with self._lock:  # a shrunk capacity still bounds a reload
+            paths = self._pop_victims_locked()
+        self._unlink(paths)
+
+    # -- key mapping ---------------------------------------------------------
+    def _fname(self, key: str) -> str:
+        return hashlib.sha1(key.encode()).hexdigest()
+
+    def _path(self, fname: str) -> str:
+        return os.path.join(self.dir, fname)
+
+    def _stripe(self, fname: str) -> threading.Lock:
+        return self._stripes[int(fname[:8], 16) % len(self._stripes)]
+
+    # -- eviction ------------------------------------------------------------
+    def _pop_victims_locked(self, need: int = 0) -> List[str]:
+        """Pop LRU *finalized* entries from the index until ``need`` more
+        bytes fit; return their paths for the caller to unlink.  Provisional
+        (mid-write) entries are skipped: their file does not exist yet and
+        popping them would corrupt the writer's accounting."""
+        paths: List[str] = []
+        while self.capacity and self._used + need > self.capacity:
+            victim = next((f for f, e in self._index.items() if e.final), None)
+            if victim is None:
+                break
+            entry = self._index.pop(victim)
+            self._used -= entry.size
+            self._evictions += 1
+            self._bytes_evicted += entry.size
+            paths.append(self._path(victim))
+        return paths
+
+    @staticmethod
+    def _unlink(paths: List[str]) -> None:
+        for p in paths:
+            try:
+                os.remove(p)
+            except OSError:
+                pass
+
+    def _evict_locked(self, need: int = 0) -> None:
+        """One-item-sized eviction for the get/put hot paths: the unlink
+        stays under the lock so the on-disk bytes never exceed the accounted
+        bytes (the bound tests scan the directory concurrently).  Bulk
+        sweeps (capacity shrink) go through set_capacity, which unlinks
+        OUTSIDE the lock."""
+        self._unlink(self._pop_victims_locked(need))
+
+    # -- get / put -----------------------------------------------------------
+    def get(self, key: str) -> Optional[bytes]:
+        fname = self._fname(key)
+        try:
+            with open(self._path(fname), "rb") as f:
+                data = f.read()
+        except FileNotFoundError:
+            with self._lock:
+                entry = self._index.get(fname)
+                if entry is not None and entry.final:
+                    # vanished mid-read (external delete / crash leftover):
+                    # repair the byte accounting instead of leaking it
+                    del self._index[fname]
+                    self._used -= entry.size
+                self._misses += 1
+            return None
+        except OSError:
+            # transient failure (EMFILE, EACCES, mid-read error): the file
+            # may well still exist — count the miss but keep the accounting,
+            # or the still-present bytes would become untracked and push
+            # real disk usage over capacity.  A PERSISTENTLY unreadable
+            # entry must not stay pinned forever though (put()'s dedup
+            # fast-path refreshes it to MRU on every origin refill), so
+            # after a few consecutive failures drop it and unlink.
+            with self._lock:
+                self._misses += 1
+                entry = self._index.get(fname)
+                if entry is not None and entry.final:
+                    entry.read_failures += 1
+                    if entry.read_failures >= 3:
+                        del self._index[fname]
+                        self._used -= entry.size
+                        try:
+                            os.remove(self._path(fname))
+                        except OSError:
+                            pass
+            return None
+        with self._lock:
+            entry = self._index.get(fname)
+            if entry is not None:
+                entry.read_failures = 0
+                self._index.move_to_end(fname)
+            # not indexed: either a concurrent eviction unlinked the file
+            # while our fd kept the read alive, or an external process
+            # dropped a file in mid-run.  Either way the bytes must NOT be
+            # (re-)indexed — adopting a just-evicted name would create a
+            # phantom entry whose file is gone, corrupting the accounting
+            # and short-circuiting the next put().  Serve the data as a hit
+            # and leave the index alone (externally placed files are only
+            # adopted by _recover at init).
+            self._hits += 1
+        return data
+
+    def put(self, key: str, data: bytes) -> bool:
+        size = len(data)
+        fname = self._fname(key)
+        if (self.capacity and size > self.capacity) or not self.admission.admit(key, size):
+            with self._lock:
+                self._rejected += 1
+            return False
+        with self._stripe(fname):
+            with self._lock:
+                if fname in self._index:
+                    self._index.move_to_end(fname)
+                    return True
+                if self.capacity:
+                    self._evict_locked(need=size)
+                    if self._used + size > self.capacity:
+                        # only mid-write reservations left to evict
+                        self._rejected += 1
+                        return False
+                self._index[fname] = _DiskEntry(size, False)
+                self._used += size
+            tmp = self._path(fname) + f".tmp{threading.get_ident()}"
+            try:
+                with open(tmp, "wb") as f:
+                    f.write(data)
+                os.replace(tmp, self._path(fname))
+            except OSError:
+                with self._lock:
+                    entry = self._index.pop(fname, None)
+                    if entry is not None:
+                        self._used -= entry.size
+                    self._write_failures += 1  # I/O failure, not a rejection
+                try:
+                    os.remove(tmp)
+                except OSError:
+                    pass
+                return False
+            with self._lock:
+                entry = self._index.get(fname)
+                if entry is not None:
+                    entry.final = True
+                self._admitted += 1
+                self._bytes_admitted += size
+        return True
+
+    # -- control / observability ---------------------------------------------
+    def set_capacity(self, capacity_bytes: int) -> int:
+        """A shrink can evict thousands of entries; victims are popped under
+        the lock but unlinked after releasing it, so concurrent get/put
+        traffic is not stalled behind the whole deletion sweep."""
+        with self._lock:
+            self.capacity = max(int(capacity_bytes), 0)
+            paths = self._pop_victims_locked()
+        self._unlink(paths)
+        return self.capacity
+
+    def set_admission(self, policy: AdmissionPolicy) -> None:
+        self.admission = policy
+
+    @property
+    def used_bytes(self) -> int:
+        with self._lock:
+            return self._used
+
+    def stats(self) -> CacheTierStats:
+        with self._lock:
+            return CacheTierStats(
+                hits=self._hits,
+                misses=self._misses,
+                evictions=self._evictions,
+                admitted=self._admitted,
+                rejected=self._rejected,
+                write_failures=self._write_failures,
+                bytes_used=self._used,
+                bytes_admitted=self._bytes_admitted,
+                bytes_evicted=self._bytes_evicted,
+            )
+
+
+# ---------------------------------------------------------------------------
+# Tiered facade
+# ---------------------------------------------------------------------------
+
+
+class TieredCacheStore:
+    """Memory LRU over a bounded disk tier over the origin store.
+
+    Implements the :class:`repro.data.store.ObjectStore` protocol (registered
+    as a virtual subclass by ``repro.data.store`` to avoid a circular import).
+    Disk hits are promoted to memory; origin fetches are written through both
+    tiers.  Each GET records a ``cache_get`` tracing span tagged with the
+    serving tier, so hit/miss/byte composition is visible in the same
+    Perfetto timeline / ``window_summary`` pipeline as the loader stages.
+    """
+
+    ADMISSION_KINDS = ADMISSION_KINDS
+
+    def __init__(
+        self,
+        base,
+        *,
+        memory: Optional[MemoryTierCache] = None,
+        disk: Optional[DiskTierCache] = None,
+        tracer: Tracer = NULL_TRACER,
+        admission_max_item_bytes: int = 1 << 20,
+    ) -> None:
+        if memory is None and disk is None:
+            raise ValueError("TieredCacheStore needs at least one tier")
+        self.base = base
+        self.memory = memory
+        self.disk = disk
+        self.tracer = tracer
+        self.admission_max_item_bytes = admission_max_item_bytes
+        # policies are memoized per index so stateful ones (second-hit's
+        # Bloom filter) survive autotune probe/revert toggles instead of
+        # being reset to empty on every knob move
+        self._admission_by_index: dict = {}
+        if disk is not None:
+            self._admission_by_index[self.admission_index()] = disk.admission
+
+    # -- trace helper --------------------------------------------------------
+    def _trace(self, t0: float, tier: str, nbytes: int) -> None:
+        self.tracer.record(CACHE_GET, t0, time.monotonic(), tier=tier, nbytes=nbytes)
+
+    # -- ObjectStore surface -------------------------------------------------
+    def get(self, key: str) -> bytes:
+        t0 = time.monotonic()
+        if self.memory is not None:
+            data = self.memory.get(key)
+            if data is not None:
+                self._trace(t0, "memory", len(data))
+                return data
+        if self.disk is not None:
+            data = self.disk.get(key)
+            if data is not None:
+                if self.memory is not None:
+                    self.memory.put(key, data)
+                self._trace(t0, "disk", len(data))
+                return data
+        data = self.base.get(key)
+        if self.disk is not None:
+            self.disk.put(key, data)
+        if self.memory is not None:
+            self.memory.put(key, data)
+        self._trace(t0, "origin", len(data))
+        return data
+
+    async def aget(self, key: str) -> bytes:
+        """Async-safe GET: memory is O(1) inline, disk I/O runs on the
+        default executor, the origin uses its own ``aget``."""
+        t0 = time.monotonic()
+        if self.memory is not None:
+            data = self.memory.get(key)
+            if data is not None:
+                self._trace(t0, "memory", len(data))
+                return data
+        loop = asyncio.get_running_loop()
+        if self.disk is not None:
+            data = await loop.run_in_executor(None, self.disk.get, key)
+            if data is not None:
+                if self.memory is not None:
+                    self.memory.put(key, data)
+                self._trace(t0, "disk", len(data))
+                return data
+        data = await self.base.aget(key)
+        if self.disk is not None:
+            await loop.run_in_executor(None, self.disk.put, key, data)
+        if self.memory is not None:
+            self.memory.put(key, data)
+        self._trace(t0, "origin", len(data))
+        return data
+
+    def put(self, key: str, data: bytes) -> None:
+        self.base.put(key, data)
+
+    def list_keys(self, prefix: str = "") -> List[str]:
+        return self.base.list_keys(prefix)
+
+    def size(self, key: str) -> int:
+        return self.base.size(key)
+
+    def close(self) -> None:
+        self.base.close()
+
+    # -- unified stats -------------------------------------------------------
+    def cache_stats(self) -> dict:
+        """Snapshot of every tier (named ``cache_stats`` so the autotuner's
+        store-stack walk still finds ``SimulatedS3Store.stats`` underneath)."""
+        out = {}
+        if self.memory is not None:
+            out["memory"] = self.memory.stats()
+        if self.disk is not None:
+            out["disk"] = self.disk.stats()
+        return out
+
+    @property
+    def hit_rate(self) -> float:
+        """Fraction of external GETs served by *any* tier."""
+        outer = self.memory if self.memory is not None else self.disk
+        total = outer.stats().lookups
+        if not total:
+            return 0.0
+        inner = self.disk if self.disk is not None else self.memory
+        origin_fetches = inner.stats().misses
+        return (total - origin_fetches) / total
+
+    # -- autotune knob surfaces ----------------------------------------------
+    def set_memory_capacity(self, capacity_bytes: int) -> int:
+        if self.memory is None:
+            return 0
+        return self.memory.set_capacity(capacity_bytes)
+
+    def set_disk_capacity(self, capacity_bytes: int) -> int:
+        if self.disk is None:
+            return 0
+        return self.disk.set_capacity(capacity_bytes)
+
+    def admission_index(self) -> int:
+        if self.disk is None:
+            return 0
+        try:
+            return ADMISSION_KINDS.index(self.disk.admission.name)
+        except ValueError:
+            return 0
+
+    def set_admission(self, index: int) -> int:
+        if self.disk is None:
+            return 0
+        index = max(0, min(int(index), len(ADMISSION_KINDS) - 1))
+        if index not in self._admission_by_index:
+            self._admission_by_index[index] = make_admission(
+                ADMISSION_KINDS[index], self.admission_max_item_bytes
+            )
+        self.disk.set_admission(self._admission_by_index[index])
+        return index
+
+
+# ---------------------------------------------------------------------------
+# Legacy shims (public names re-exported by repro.data.store)
+# ---------------------------------------------------------------------------
+
+
+class CachedStore(TieredCacheStore):
+    """Single-tier in-memory LRU — the original ``CachedStore`` surface
+    (exact global LRU via one shard; ``hits``/``misses``/``hit_rate``)."""
+
+    def __init__(self, base, capacity_bytes: int) -> None:
+        super().__init__(base, memory=MemoryTierCache(capacity_bytes, shards=1))
+
+    @property
+    def capacity(self) -> int:
+        return self.memory.capacity
+
+    @property
+    def hits(self) -> int:
+        return self.memory.stats().hits
+
+    @property
+    def misses(self) -> int:
+        return self.memory.stats().misses
+
+    @property
+    def _used(self) -> int:
+        return self.memory.used_bytes
+
+
+class DiskCacheStore(TieredCacheStore):
+    """Single-tier on-disk cache — the original ``DiskCacheStore`` surface,
+    now with optional byte bound + admission (0 = unbounded, as before)."""
+
+    def __init__(
+        self,
+        base,
+        cache_dir: str,
+        capacity_bytes: int = 0,
+        admission: Optional[AdmissionPolicy] = None,
+    ) -> None:
+        super().__init__(
+            base, disk=DiskTierCache(cache_dir, capacity_bytes, admission)
+        )
+
+    @property
+    def hits(self) -> int:
+        return self.disk.stats().hits
+
+    @property
+    def misses(self) -> int:
+        return self.disk.stats().misses

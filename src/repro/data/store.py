@@ -10,9 +10,9 @@ backends:
   NIC cap and a bounded connection pool.  Reproduces the latency-vs-
   concurrency phenomenology of real S3 on CPU-only CI.  A real S3 backend
   (boto3) would subclass ``ObjectStore`` with the same interface.
-* :class:`CachedStore`         — bounded LRU byte cache (Varnish analogue,
-  paper §2.4) with hit/miss statistics.
-* :class:`DiskCacheStore`      — optional on-disk cache tier.
+* :class:`CachedStore` / :class:`DiskCacheStore` / :class:`TieredCacheStore`
+  — the cache tiers (Varnish analogue, paper §2.4), implemented in
+  :mod:`repro.data.cache` and re-exported here for back-compat.
 
 Both sync ``get`` and async ``aget`` are provided; the simulated network
 sleeps with ``time.sleep`` (releases the GIL — I/O-like) or ``asyncio.sleep``.
@@ -26,7 +26,6 @@ import random
 import threading
 import time
 from abc import ABC, abstractmethod
-from collections import OrderedDict
 from dataclasses import dataclass
 from typing import Dict, List, Optional
 
@@ -284,112 +283,21 @@ class SimulatedS3Store(ObjectStore):
 
 
 # ---------------------------------------------------------------------------
-# Caches
+# Caches — implemented in repro.data.cache; re-exported here for back-compat
 # ---------------------------------------------------------------------------
 
+from repro.data.cache import (  # noqa: E402
+    CachedStore,
+    DiskCacheStore,
+    DiskTierCache,
+    MemoryTierCache,
+    TieredCacheStore,
+    make_admission,
+)
 
-class CachedStore(ObjectStore):
-    """Bounded LRU byte cache in front of a slower store (Varnish analogue)."""
-
-    def __init__(self, base: ObjectStore, capacity_bytes: int) -> None:
-        self.base = base
-        self.capacity = capacity_bytes
-        self._lru: "OrderedDict[str, bytes]" = OrderedDict()
-        self._used = 0
-        self._lock = threading.Lock()
-        self.hits = 0
-        self.misses = 0
-
-    def _cache_get(self, key: str) -> Optional[bytes]:
-        with self._lock:
-            if key in self._lru:
-                self._lru.move_to_end(key)
-                self.hits += 1
-                return self._lru[key]
-            self.misses += 1
-            return None
-
-    def _cache_put(self, key: str, data: bytes) -> None:
-        if len(data) > self.capacity:
-            return
-        with self._lock:
-            if key in self._lru:
-                return
-            self._lru[key] = data
-            self._used += len(data)
-            while self._used > self.capacity:
-                _, ev = self._lru.popitem(last=False)
-                self._used -= len(ev)
-
-    def get(self, key: str) -> bytes:
-        data = self._cache_get(key)
-        if data is not None:
-            return data
-        data = self.base.get(key)
-        self._cache_put(key, data)
-        return data
-
-    async def aget(self, key: str) -> bytes:
-        data = self._cache_get(key)
-        if data is not None:
-            return data
-        data = await self.base.aget(key)
-        self._cache_put(key, data)
-        return data
-
-    def put(self, key: str, data: bytes) -> None:
-        self.base.put(key, data)
-
-    def list_keys(self, prefix: str = "") -> List[str]:
-        return self.base.list_keys(prefix)
-
-    def size(self, key: str) -> int:
-        return self.base.size(key)
-
-    @property
-    def hit_rate(self) -> float:
-        tot = self.hits + self.misses
-        return self.hits / tot if tot else 0.0
-
-
-class DiskCacheStore(ObjectStore):
-    """On-disk cache tier (unbounded; the bench bounds the dataset instead)."""
-
-    def __init__(self, base: ObjectStore, cache_dir: str) -> None:
-        self.base = base
-        self.dir = cache_dir
-        os.makedirs(cache_dir, exist_ok=True)
-        self.hits = 0
-        self.misses = 0
-        self._lock = threading.Lock()
-
-    def _path(self, key: str) -> str:
-        return os.path.join(self.dir, hashlib.sha1(key.encode()).hexdigest())
-
-    def get(self, key: str) -> bytes:
-        p = self._path(key)
-        try:
-            with open(p, "rb") as f:
-                data = f.read()
-            with self._lock:
-                self.hits += 1
-            return data
-        except FileNotFoundError:
-            pass
-        with self._lock:
-            self.misses += 1
-        data = self.base.get(key)
-        tmp = p + f".tmp{threading.get_ident()}"
-        with open(tmp, "wb") as f:
-            f.write(data)
-        os.replace(tmp, p)
-        return data
-
-    def put(self, key: str, data: bytes) -> None:
-        self.base.put(key, data)
-
-    def list_keys(self, prefix: str = "") -> List[str]:
-        return self.base.list_keys(prefix)
+# TieredCacheStore implements the full ObjectStore protocol but cannot inherit
+# from it (repro.data.cache must not import this module back)
+ObjectStore.register(TieredCacheStore)
 
 
 # ---------------------------------------------------------------------------
@@ -398,8 +306,14 @@ class DiskCacheStore(ObjectStore):
 
 
 def build_store(cfg: StoreConfig, base: Optional[ObjectStore] = None,
-                time_scale: float = 1.0, seed: int = 0) -> ObjectStore:
-    """Assemble the store stack described by a StoreConfig."""
+                time_scale: float = 1.0, seed: int = 0,
+                tracer=None) -> ObjectStore:
+    """Assemble the store stack described by a StoreConfig.
+
+    ``tracer`` (a ``repro.core.tracing.Tracer``) makes the cache tiers emit
+    per-GET ``cache_get`` spans.  It must be passed explicitly: the loader
+    deliberately never rebinds a store's tracer (the store may be shared by
+    several loaders), so omitting it means no cache spans."""
     if base is None:
         if cfg.kind == "localfs":
             base = LocalFSStore(cfg.root)
@@ -418,8 +332,29 @@ def build_store(cfg: StoreConfig, base: Optional[ObjectStore] = None,
             seed=seed,
             time_scale=time_scale,
         )
-    if cfg.cache_dir:
-        store = DiskCacheStore(store, cfg.cache_dir)
-    if cfg.cache_bytes:
+    if cfg.cache_dir and cfg.cache_bytes:
+        # both tiers configured: a single two-tier store (memory over disk)
+        store = TieredCacheStore(
+            store,
+            memory=MemoryTierCache(cfg.cache_bytes, shards=cfg.cache_shards),
+            disk=DiskTierCache(
+                cfg.cache_dir,
+                cfg.disk_cache_bytes,
+                make_admission(cfg.cache_admission, cfg.admission_max_item_bytes),
+            ),
+            admission_max_item_bytes=cfg.admission_max_item_bytes,
+        )
+    elif cfg.cache_dir:
+        store = DiskCacheStore(
+            store,
+            cfg.cache_dir,
+            capacity_bytes=cfg.disk_cache_bytes,
+            admission=make_admission(
+                cfg.cache_admission, cfg.admission_max_item_bytes
+            ),
+        )
+    elif cfg.cache_bytes:
         store = CachedStore(store, cfg.cache_bytes)
+    if tracer is not None and isinstance(store, TieredCacheStore):
+        store.tracer = tracer
     return store

@@ -24,6 +24,7 @@ from repro.core.tracing import (
     RUN_TRAINING_BATCH,
     Tracer,
 )
+from repro.core.utilization import recent_busy_fraction
 
 
 class Callback:
@@ -95,7 +96,9 @@ class TrainResult:
 def _make_ring(loader, depth: int, tracer) -> DevicePrefetchRing:
     """Build the per-epoch device prefetch ring; when the loader carries an
     autotuner, register the ring's depth as a live knob (sized so it has
-    headroom up to the configured bound)."""
+    headroom up to the configured bound) and wire the accelerator-utilization
+    signal so the controller stops buying loader throughput the training step
+    can't eat (AutotuneConfig.util_gate)."""
     auto = getattr(loader, "autotuner", None)
     max_depth = depth
     if auto is not None:
@@ -107,6 +110,8 @@ def _make_ring(loader, depth: int, tracer) -> DevicePrefetchRing:
         # iter(loader) above re-bound the loader knobs; the ring knob rides
         # along for this epoch and is dropped at the next re-bind
         auto.attach_ring(ring)
+        if tracer is not NULL_TRACER and auto.util_fn is None:
+            auto.util_fn = lambda: recent_busy_fraction(tracer)
     return ring
 
 

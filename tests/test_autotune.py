@@ -184,6 +184,147 @@ def test_binary_knob_reverts_unconvincing_flip():
     assert any(e.action == "revert" and e.knob == "hedge" for e in ctrl.events)
 
 
+def test_step_schedule_coarse_then_fine():
+    """The first probe jumps by the coarse factor; after a hold/revert on the
+    knob the next probe uses the finer factor."""
+    vals = {"fetch": 1}
+    bounds = {"fetch": (1, 256)}
+    cfg = AutotuneConfig(enabled=True, interval_batches=1, min_window_s=0.0,
+                         patience=1000)  # default schedule: (4, 2)
+    ctrl = AutotuneController(cfg, synthetic_knobs(vals, bounds))
+    drive(ctrl, vals, lambda v: 100.0, steps=40)  # flat: every probe holds
+    probes = [e.value for e in ctrl.events if e.action == "probe"]
+    assert probes[0] == 4  # coarse x4 from 1
+    assert probes[1] == 8  # refined to x2 after the hold
+    assert all(b == 2 * a for a, b in zip(probes[1:], probes[2:]))  # stays fine
+
+
+def test_knob_step_schedule_override():
+    vals = {"fetch": 1}
+    knob = synthetic_knobs(vals, {"fetch": (1, 256)})[0]
+    knob.step_schedule = (8, 2)
+    cfg = AutotuneConfig(enabled=True, interval_batches=1, min_window_s=0.0,
+                         patience=1000)
+    ctrl = AutotuneController(cfg, [knob])
+    drive(ctrl, vals, lambda v: 100.0, steps=20)
+    probes = [e.value for e in ctrl.events if e.action == "probe"]
+    assert probes[0] == 8 and probes[1] == 16
+
+
+def test_additive_knob_steps_by_one():
+    vals = {"policy": 0}
+
+    def setter(v):
+        vals["policy"] = max(0, min(int(v), 2))
+        return vals["policy"]
+
+    knob = Knob("policy", lambda: vals["policy"], setter, 0, 2,
+                scale="add", step_schedule=(1,))
+    cfg = AutotuneConfig(enabled=True, interval_batches=1, min_window_s=0.0,
+                         patience=2, reprobe_windows=0)
+    ctrl = AutotuneController(cfg, [knob])
+    # policy 1 is strictly best: the controller must land and stay there
+    drive(ctrl, vals, lambda v: (50.0, 200.0, 10.0)[v["policy"]], steps=120)
+    assert vals["policy"] == 1, ctrl.events
+    probed = {e.value for e in ctrl.events if e.action == "probe"}
+    assert probed <= {0, 1, 2}
+
+
+def test_util_gate_blocks_up_probes_until_headroom():
+    """A saturated training step (busy fraction >= util_gate) must stop the
+    controller from buying more loader throughput; headroom re-enables it."""
+    busy = {"frac": 0.98}
+    vals = {"fetch": 4}
+    bounds = {"fetch": (1, 64)}
+    cfg = AutotuneConfig(enabled=True, interval_batches=1, min_window_s=0.0,
+                         util_gate=0.9, patience=1000)
+    ctrl = AutotuneController(cfg, synthetic_knobs(vals, bounds),
+                              util_fn=lambda: busy["frac"])
+    drive(ctrl, vals, lambda v: min(v["fetch"], 32) * 10.0, steps=40)
+    assert vals["fetch"] == 4  # nothing bought while the accelerator is full
+    assert not any(e.action == "probe" for e in ctrl.events)
+    assert any(e.action == "gate" for e in ctrl.events)
+    assert not any(e.action == "quiesce" for e in ctrl.events)  # stayed armed
+    busy["frac"] = 0.3  # headroom appeared (e.g. a bigger model step ended)
+    drive(ctrl, vals, lambda v: min(v["fetch"], 32) * 10.0, steps=120)
+    assert vals["fetch"] >= 32, (vals, ctrl.events)
+
+
+def test_util_gate_off_when_no_signal():
+    vals = {"fetch": 4}
+    bounds = {"fetch": (1, 64)}
+    cfg = AutotuneConfig(enabled=True, interval_batches=1, min_window_s=0.0,
+                         util_gate=0.9, patience=1000)
+    ctrl = AutotuneController(cfg, synthetic_knobs(vals, bounds),
+                              util_fn=lambda: None)  # no step spans yet
+    drive(ctrl, vals, lambda v: min(v["fetch"], 32) * 10.0, steps=60)
+    assert any(e.action == "probe" for e in ctrl.events)
+    assert vals["fetch"] > 4
+
+
+def test_trainer_ring_wires_util_signal(dataset):
+    """_make_ring must hand the controller a utilization signal exactly when
+    a real tracer is present (NULL_TRACER has no step spans to read)."""
+    from repro.core.tracing import NULL_TRACER
+    from repro.train.trainer import _make_ring
+
+    at = AutotuneConfig(enabled=True)
+    cfg = LoaderConfig(impl="threaded", batch_size=BS, num_workers=2,
+                       prefetch_factor=2, num_fetch_workers=4, seed=5,
+                       autotune=at)
+    dl = ConcurrentDataLoader(dataset, cfg)
+    ring = _make_ring(dl, depth=2, tracer=NULL_TRACER)
+    assert dl.autotuner.util_fn is None
+    ring.close()
+    tracer = Tracer()
+    ring = _make_ring(dl, depth=2, tracer=tracer)
+    assert dl.autotuner.util_fn is not None
+    assert dl.autotuner.util_fn() is None  # no step spans yet -> no signal
+    now = time.monotonic()
+    tracer.record("run_training_batch", now - 0.5, now)
+    assert dl.autotuner.util_fn() > 0.0
+    ring.close()
+
+
+def test_tracer_recent_spans_bounded_scan():
+    tr = Tracer()
+    t = 1000.0
+    for i in range(50):
+        tr.record("step", t + i, t + i + 0.5)
+    tr.record("other", t + 49, t + 49.5)
+    recent = tr.recent_spans("step", since=t + 48.0)
+    assert [s.t0 for s in recent] == [t + 48, t + 49]  # oldest first
+    assert tr.recent_spans("step", since=t + 100.0) == []
+    # slightly out-of-order completion near the window edge is still found
+    tr.record("step", t + 48.2, t + 48.4)
+    assert len(tr.recent_spans("step", since=t + 48.0)) == 3
+
+
+def test_recent_busy_fraction_windowing():
+    from repro.core.tracing import RUN_TRAINING_BATCH
+    from repro.core.utilization import recent_busy_fraction
+
+    tr = Tracer()
+    now = time.monotonic()
+    assert recent_busy_fraction(tr, window_s=1.0, now=now) is None
+    # half the window (anchored at the last completed span) covered
+    tr.record(RUN_TRAINING_BATCH, now - 0.5, now)
+    assert abs(recent_busy_fraction(tr, window_s=1.0, now=now) - 0.5) < 1e-6
+    # spans overlapping the window edge are clipped, not dropped
+    tr.record(RUN_TRAINING_BATCH, now - 2.0, now - 0.9)
+    f = recent_busy_fraction(tr, window_s=1.0, now=now)
+    assert abs(f - 0.6) < 1e-6
+    # long-step regime: queried MID-step (1 s into an unrecorded in-flight
+    # step), the window anchors at the last completed step and reads the
+    # true saturation instead of counting the in-flight time as idle
+    tr2 = Tracer()
+    tr2.record(RUN_TRAINING_BATCH, now - 4.0, now - 2.0)
+    tr2.record(RUN_TRAINING_BATCH, now - 2.0, now)
+    assert recent_busy_fraction(tr2, window_s=1.0, now=now + 1.0) == 1.0
+    # ...but a stale anchor (paused training / very long step) is no signal
+    assert recent_busy_fraction(tr2, window_s=1.0, now=now + 3.0) is None
+
+
 # ---------------------------------------------------------------------------
 # resizable fetchers / adjustable primitives
 # ---------------------------------------------------------------------------
