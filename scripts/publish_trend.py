@@ -1,0 +1,503 @@
+#!/usr/bin/env python3
+"""Publish nightly benchmark trend history to a static dashboard.
+
+The nightly CI job produces stamped ``BENCH_<name>_<YYYYMMDD>_run<N>.json``
+files (one per benchmark per run).  GitHub artifacts expire after 90 days;
+this script maintains the *permanent* history on the ``gh-pages`` branch:
+
+    python scripts/publish_trend.py --trend-dir trend --site-dir site
+
+* copies the new stamped files into ``<site>/data/`` (the accumulated,
+  version-controlled history),
+* rebuilds ``<site>/trend.json`` (compact per-bench series extracted from
+  every stored run), and
+* regenerates ``<site>/index.html`` — a dependency-free static dashboard
+  (inline data, vanilla SVG charts) showing claim pass/fail status and
+  throughput trends per benchmark.
+
+Stdlib only; runs anywhere Python 3.10+ does.  The caller (nightly.yml)
+handles the gh-pages checkout/commit/push around it.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import re
+import shutil
+import sys
+from typing import Any, Dict, List
+
+STAMP_RE = re.compile(r"^BENCH_(?P<name>.+)_(?P<stamp>\d{8})_run(?P<run>\d+)\.json$")
+
+# row fields that identify a measured cell (joined into a series label);
+# everything numeric is a candidate metric
+_METRIC_PRIORITY = ("img_per_s", "mbit_per_s", "runtime_s", "wall_s")
+
+
+def parse_stamp(fname: str):
+    m = STAMP_RE.match(fname)
+    if not m:
+        return None
+    return m.group("name"), m.group("stamp"), int(m.group("run"))
+
+
+def _series_of_rows(rows: List[Dict[str, Any]]) -> Dict[str, float]:
+    """Collapse a run's rows into {cell label: headline metric}."""
+    out: Dict[str, float] = {}
+    for row in rows:
+        label_parts = [
+            str(v) for k, v in row.items()
+            if isinstance(v, str) or k in ("host", "attempt")
+        ]
+        label = "/".join(label_parts) or "all"
+        metric = next(
+            (row[m] for m in _METRIC_PRIORITY
+             if isinstance(row.get(m), (int, float))),
+            None,
+        )
+        if metric is None:
+            metric = next(
+                (v for v in row.values() if isinstance(v, (int, float))), None
+            )
+        if metric is not None:
+            out[label] = float(metric)
+    return out
+
+
+def collect(data_dir: str) -> Dict[str, Any]:
+    """Aggregate every stored BENCH_* file into the dashboard's trend doc."""
+    benches: Dict[str, Dict[str, Any]] = {}
+    for fname in sorted(os.listdir(data_dir)):
+        parsed = parse_stamp(fname)
+        if parsed is None:
+            continue
+        name, stamp, run = parsed
+        try:
+            with open(os.path.join(data_dir, fname)) as f:
+                doc = json.load(f)
+        except (OSError, ValueError) as exc:
+            print(f"warning: skipping unreadable {fname}: {exc}", file=sys.stderr)
+            continue
+        bench = benches.setdefault(name, {"runs": []})
+        claims = doc.get("claims", [])
+        bench["runs"].append(
+            {
+                "stamp": stamp,
+                "run": run,
+                "date": f"{stamp[:4]}-{stamp[4:6]}-{stamp[6:]}",
+                "wall_s": doc.get("wall_s", 0),
+                "claims_passed": sum(1 for c in claims if c.get("ok")),
+                "claims_total": len(claims),
+                "claims": [
+                    {"claim": c.get("claim", "?"), "ok": bool(c.get("ok"))}
+                    for c in claims
+                ],
+                "series": _series_of_rows(doc.get("rows", [])),
+            }
+        )
+    for bench in benches.values():
+        bench["runs"].sort(key=lambda r: (r["stamp"], r["run"]))
+    return {"benches": benches}
+
+
+def publish(trend_dir: str, site_dir: str) -> int:
+    data_dir = os.path.join(site_dir, "data")
+    os.makedirs(data_dir, exist_ok=True)
+    copied = 0
+    if trend_dir and os.path.isdir(trend_dir):
+        for fname in sorted(os.listdir(trend_dir)):
+            if parse_stamp(fname) is None:
+                continue
+            shutil.copy2(os.path.join(trend_dir, fname),
+                         os.path.join(data_dir, fname))
+            copied += 1
+    trend = collect(data_dir)
+    with open(os.path.join(site_dir, "trend.json"), "w") as f:
+        json.dump(trend, f, indent=1, sort_keys=True)
+    html = TEMPLATE.replace("/*__TREND_JSON__*/null", json.dumps(trend))
+    with open(os.path.join(site_dir, "index.html"), "w") as f:
+        f.write(html)
+    nruns = sum(len(b["runs"]) for b in trend["benches"].values())
+    print(f"published {copied} new file(s); site now tracks "
+          f"{len(trend['benches'])} bench(es), {nruns} stored run(s)")
+    return 0
+
+
+# ---------------------------------------------------------------------------
+# Static dashboard template (inline data; no external dependencies).
+# Palette/chrome follow the repo's dataviz conventions: categorical series
+# hues in fixed slot order, status colors reserved for claim pass/fail with
+# icon + label (never color alone), text in ink tokens (never series colors),
+# 2px lines with 8px end markers ringed in the surface color, hairline solid
+# gridlines, crosshair + all-series tooltip, legend for >=2 series, and a
+# table view so no value is gated behind hover.  Dark mode is its own
+# validated color set, not an automatic flip.
+# ---------------------------------------------------------------------------
+
+TEMPLATE = r"""<!doctype html>
+<html lang="en">
+<head>
+<meta charset="utf-8">
+<meta name="viewport" content="width=device-width, initial-scale=1">
+<title>Bench trends — dataloader repro</title>
+<style>
+  .viz-root {
+    color-scheme: light;
+    --surface-1: #fcfcfb; --page: #f9f9f7;
+    --ink-1: #0b0b0b; --ink-2: #52514e; --ink-3: #898781;
+    --grid: #e1e0d9; --axis: #c3c2b7;
+    --border: rgba(11,11,11,0.10);
+    --s1: #2a78d6; --s2: #eb6834; --s3: #1baf7a; --s4: #eda100;
+    --s5: #e87ba4; --s6: #008300;
+    --good: #0ca30c; --critical: #d03b3b;
+  }
+  @media (prefers-color-scheme: dark) {
+    :root:where(:not([data-theme="light"])) .viz-root {
+      color-scheme: dark;
+      --surface-1: #1a1a19; --page: #0d0d0d;
+      --ink-1: #ffffff; --ink-2: #c3c2b7; --ink-3: #898781;
+      --grid: #2c2c2a; --axis: #383835;
+      --border: rgba(255,255,255,0.10);
+      --s1: #3987e5; --s2: #d95926; --s3: #199e70; --s4: #c98500;
+      --s5: #d55181; --s6: #008300;
+    }
+  }
+  :root[data-theme="dark"] .viz-root {
+    color-scheme: dark;
+    --surface-1: #1a1a19; --page: #0d0d0d;
+    --ink-1: #ffffff; --ink-2: #c3c2b7; --ink-3: #898781;
+    --grid: #2c2c2a; --axis: #383835;
+    --border: rgba(255,255,255,0.10);
+    --s1: #3987e5; --s2: #d95926; --s3: #199e70; --s4: #c98500;
+    --s5: #d55181; --s6: #008300;
+  }
+  body.viz-root {
+    margin: 0; background: var(--page); color: var(--ink-1);
+    font: 14px/1.45 system-ui, -apple-system, "Segoe UI", sans-serif;
+  }
+  main { max-width: 1080px; margin: 0 auto; padding: 24px 20px 64px; }
+  h1 { font-size: 20px; margin: 0 0 2px; }
+  .sub { color: var(--ink-2); margin: 0 0 20px; }
+  .kpis { display: flex; flex-wrap: wrap; gap: 12px; margin: 0 0 24px; }
+  .tile {
+    background: var(--surface-1); border: 1px solid var(--border);
+    border-radius: 8px; padding: 12px 16px; min-width: 130px;
+  }
+  .tile .label { color: var(--ink-2); font-size: 12px; }
+  .tile .value { font-size: 26px; font-weight: 600; }
+  .tile .delta { font-size: 12px; color: var(--ink-2); }
+  section.bench {
+    background: var(--surface-1); border: 1px solid var(--border);
+    border-radius: 8px; padding: 16px 20px; margin: 0 0 20px;
+  }
+  section.bench h2 { font-size: 15px; margin: 0 0 2px; }
+  .meta { color: var(--ink-3); font-size: 12px; margin: 0 0 10px; }
+  .claims { display: flex; flex-direction: column; gap: 4px; margin: 10px 0 4px; }
+  .claim { display: flex; gap: 8px; align-items: baseline; font-size: 13px; }
+  .claim .mark { font-weight: 700; flex: none; }
+  .claim.ok .mark { color: var(--good); }
+  .claim.fail .mark { color: var(--critical); }
+  .claim .text { color: var(--ink-2); }
+  .chart-wrap { position: relative; margin-top: 8px; }
+  svg.chart { display: block; width: 100%; height: auto; }
+  .legend { display: flex; flex-wrap: wrap; gap: 6px 16px; margin: 6px 0 0;
+            font-size: 12px; color: var(--ink-2); }
+  .legend .key { display: inline-block; width: 14px; height: 0;
+                 border-top: 2px solid; border-radius: 1px;
+                 vertical-align: middle; margin-right: 6px; }
+  .tooltip {
+    position: absolute; pointer-events: none; display: none;
+    background: var(--surface-1); border: 1px solid var(--border);
+    border-radius: 6px; padding: 8px 10px; font-size: 12px;
+    box-shadow: 0 2px 8px rgba(0,0,0,0.12); min-width: 140px; z-index: 2;
+  }
+  .tooltip .t-date { color: var(--ink-3); margin-bottom: 4px; }
+  .tooltip .t-row { display: flex; gap: 8px; align-items: baseline;
+                    justify-content: space-between; }
+  .tooltip .t-val { font-weight: 600; }
+  .tooltip .t-name { color: var(--ink-2); }
+  .tooltip .t-key { display: inline-block; width: 10px; height: 0;
+                    border-top: 2px solid; vertical-align: middle;
+                    margin-right: 5px; }
+  details.table-view { margin-top: 10px; font-size: 12px; }
+  details.table-view summary { cursor: pointer; color: var(--ink-2); }
+  table { border-collapse: collapse; margin-top: 8px; }
+  th, td { border-bottom: 1px solid var(--grid); padding: 3px 10px 3px 0;
+           text-align: right; font-variant-numeric: tabular-nums; }
+  th:first-child, td:first-child { text-align: left; }
+  th { color: var(--ink-2); font-weight: 500; }
+  .note { color: var(--ink-3); font-size: 12px; margin-top: 6px; }
+</style>
+</head>
+<body class="viz-root">
+<main>
+  <h1>Benchmark trends</h1>
+  <p class="sub">Nightly full-scale claim + throughput history for the
+  dataloader reproduction (beyond the 90-day artifact window).</p>
+  <div class="kpis" id="kpis"></div>
+  <div id="benches"></div>
+  <p class="note">Generated by <code>scripts/publish_trend.py</code>; data
+  files live under <code>data/</code> on this branch.</p>
+</main>
+<script>
+"use strict";
+const TREND = /*__TREND_JSON__*/null;
+const SERIES_VARS = ["--s1","--s2","--s3","--s4","--s5","--s6"];
+const MAX_SERIES = SERIES_VARS.length;
+
+function el(tag, cls, text) {
+  const n = document.createElement(tag);
+  if (cls) n.className = cls;
+  if (text !== undefined) n.textContent = text;  // labels are untrusted data
+  return n;
+}
+function fmt(v) {
+  if (!isFinite(v)) return "–";
+  if (Math.abs(v) >= 1000) return Math.round(v).toLocaleString("en-US");
+  if (Math.abs(v) >= 10) return v.toFixed(1);
+  return v.toFixed(2);
+}
+function niceTicks(max, n) {
+  if (!(max > 0)) return [0, 1];
+  const raw = max / n, mag = Math.pow(10, Math.floor(Math.log10(raw)));
+  const step = [1, 2, 2.5, 5, 10].map(m => m * mag).find(s => max / s <= n)
+    || 10 * mag;
+  const out = [];
+  for (let v = 0; v <= max + 1e-9; v += step) out.push(v);
+  return out;
+}
+
+function kpiRow(trend) {
+  const root = document.getElementById("kpis");
+  const benches = Object.entries(trend.benches);
+  let passed = 0, total = 0, runs = 0, lastDate = "";
+  for (const [, b] of benches) {
+    runs += b.runs.length;
+    const last = b.runs[b.runs.length - 1];
+    if (last) {
+      passed += last.claims_passed; total += last.claims_total;
+      if (last.date > lastDate) lastDate = last.date;
+    }
+  }
+  const tiles = [
+    ["Latest claims passing", total ? `${passed}/${total}` : "–",
+     total && passed === total ? "all green" : "see failures below"],
+    ["Benchmarks tracked", String(benches.length), "nightly --full lane"],
+    ["Stored runs", String(runs), "full history, no expiry"],
+    ["Last run", lastDate || "–", "UTC date stamp"],
+  ];
+  for (const [label, value, delta] of tiles) {
+    const t = el("div", "tile");
+    t.appendChild(el("div", "label", label));
+    t.appendChild(el("div", "value", value));
+    t.appendChild(el("div", "delta", delta));
+    root.appendChild(t);
+  }
+}
+
+function pickSeries(runs) {
+  // series with the most observations first; cap at the palette's slot
+  // count and say what was folded away (never a silent cap)
+  const counts = new Map();
+  for (const r of runs)
+    for (const name of Object.keys(r.series))
+      counts.set(name, (counts.get(name) || 0) + 1);
+  const names = [...counts.keys()].sort((a, b) =>
+    (counts.get(b) - counts.get(a)) || a.localeCompare(b));
+  return { shown: names.slice(0, MAX_SERIES),
+           hidden: Math.max(0, names.length - MAX_SERIES) };
+}
+
+function lineChart(wrap, runs, shown) {
+  const W = 940, H = 240, m = { t: 12, r: 16, b: 26, l: 52 };
+  const iw = W - m.l - m.r, ih = H - m.t - m.b;
+  const svg = document.createElementNS("http://www.w3.org/2000/svg", "svg");
+  svg.setAttribute("viewBox", `0 0 ${W} ${H}`);
+  svg.setAttribute("class", "chart");
+  const css = getComputedStyle(document.body);
+  const color = i => css.getPropertyValue(SERIES_VARS[i]).trim();
+  const surface = css.getPropertyValue("--surface-1").trim();
+  const n = runs.length;
+  const x = i => m.l + (n === 1 ? iw / 2 : (i / (n - 1)) * iw);
+  let maxV = 0;
+  for (const r of runs)
+    for (const s of shown)
+      if (isFinite(r.series[s])) maxV = Math.max(maxV, r.series[s]);
+  const ticks = niceTicks(maxV, 4);
+  const top = ticks[ticks.length - 1];
+  const y = v => m.t + ih - (v / top) * ih;
+  const S = (tag, attrs) => {
+    const e = document.createElementNS("http://www.w3.org/2000/svg", tag);
+    for (const [k, v] of Object.entries(attrs)) e.setAttribute(k, v);
+    svg.appendChild(e);
+    return e;
+  };
+  for (const t of ticks) {  // hairline solid gridlines, recessive
+    S("line", { x1: m.l, x2: W - m.r, y1: y(t), y2: y(t),
+                stroke: css.getPropertyValue("--grid").trim(),
+                "stroke-width": 1 });
+    const lbl = S("text", { x: m.l - 8, y: y(t) + 4, "text-anchor": "end",
+                            "font-size": 11,
+                            fill: css.getPropertyValue("--ink-3").trim() });
+    lbl.textContent = t.toLocaleString("en-US");
+  }
+  S("line", { x1: m.l, x2: W - m.r, y1: y(0), y2: y(0),
+              stroke: css.getPropertyValue("--axis").trim(),
+              "stroke-width": 1 });
+  const xticks = n <= 6 ? runs.map((_, i) => i)
+    : [0, Math.floor(n / 2), n - 1];
+  for (const i of xticks) {
+    const lbl = S("text", { x: x(i), y: H - 8, "text-anchor": "middle",
+                            "font-size": 11,
+                            fill: css.getPropertyValue("--ink-3").trim() });
+    lbl.textContent = runs[i].date;
+  }
+  shown.forEach((name, si) => {
+    const pts = runs.map((r, i) => [i, r.series[name]])
+      .filter(([, v]) => isFinite(v));
+    if (!pts.length) return;
+    const d = pts.map(([i, v], k) =>
+      `${k ? "L" : "M"}${x(i).toFixed(1)},${y(v).toFixed(1)}`).join("");
+    S("path", { d, fill: "none", stroke: color(si), "stroke-width": 2,
+                "stroke-linecap": "round", "stroke-linejoin": "round" });
+    const [li, lv] = pts[pts.length - 1];  // 8px end marker, 2px surface ring
+    S("circle", { cx: x(li), cy: y(lv), r: 6, fill: surface });
+    S("circle", { cx: x(li), cy: y(lv), r: 4, fill: color(si) });
+  });
+  const cross = S("line", { x1: 0, x2: 0, y1: m.t, y2: m.t + ih,
+                            stroke: css.getPropertyValue("--axis").trim(),
+                            "stroke-width": 1, visibility: "hidden" });
+  wrap.appendChild(svg);
+
+  // hover layer: crosshair snaps to the nearest run; one tooltip, every
+  // series at that X; values lead, names follow, line keys not boxes
+  const tip = el("div", "tooltip");
+  wrap.appendChild(tip);
+  const show = evt => {
+    const box = svg.getBoundingClientRect();
+    const px = (evt.clientX - box.left) * (W / box.width);
+    const i = Math.max(0, Math.min(n - 1,
+      Math.round((px - m.l) / (n === 1 ? 1 : iw / (n - 1)))));
+    cross.setAttribute("x1", x(i)); cross.setAttribute("x2", x(i));
+    cross.setAttribute("visibility", "visible");
+    tip.replaceChildren();
+    tip.appendChild(el("div", "t-date",
+      `${runs[i].date} · run ${runs[i].run}`));
+    shown.forEach((name, si) => {
+      const v = runs[i].series[name];
+      if (!isFinite(v)) return;
+      const row = el("div", "t-row");
+      const nm = el("span", "t-name");
+      const key = el("span", "t-key");
+      key.style.borderTopColor = color(si);
+      nm.appendChild(key);
+      nm.appendChild(document.createTextNode(name));
+      row.appendChild(nm);
+      row.appendChild(el("span", "t-val", fmt(v)));
+      tip.appendChild(row);
+    });
+    tip.style.display = "block";
+    const wb = wrap.getBoundingClientRect();
+    const left = Math.min(evt.clientX - wb.left + 14,
+                          wb.width - tip.offsetWidth - 8);
+    tip.style.left = `${Math.max(0, left)}px`;
+    tip.style.top = `${Math.max(0, evt.clientY - wb.top - 10)}px`;
+  };
+  svg.addEventListener("pointermove", show);
+  svg.addEventListener("pointerleave", () => {
+    tip.style.display = "none";
+    cross.setAttribute("visibility", "hidden");
+  });
+}
+
+function benchSection(name, bench) {
+  const sec = el("section", "bench");
+  sec.appendChild(el("h2", null, `bench_${name}`));
+  const runs = bench.runs;
+  const last = runs[runs.length - 1];
+  sec.appendChild(el("p", "meta",
+    `${runs.length} stored run(s) · latest ${last.date} · ` +
+    `${last.claims_passed}/${last.claims_total} claims passing · ` +
+    `${Math.round(last.wall_s)}s wall`));
+  const claims = el("div", "claims");
+  for (const c of last.claims) {  // status = icon + label, never color alone
+    const row = el("div", `claim ${c.ok ? "ok" : "fail"}`);
+    row.appendChild(el("span", "mark", c.ok ? "✓ PASS" : "✗ FAIL"));
+    row.appendChild(el("span", "text", c.claim));
+    claims.appendChild(row);
+  }
+  sec.appendChild(claims);
+  const { shown, hidden } = pickSeries(runs);
+  if (shown.length && runs.length) {
+    const wrap = el("div", "chart-wrap");
+    lineChart(wrap, runs, shown);
+    sec.appendChild(wrap);
+    if (shown.length >= 2) {  // legend always present for >=2 series
+      const css = getComputedStyle(document.body);
+      const legend = el("div", "legend");
+      shown.forEach((s, i) => {
+        const item = el("span");
+        const key = el("span", "key");
+        key.style.borderTopColor =
+          css.getPropertyValue(SERIES_VARS[i]).trim();
+        item.appendChild(key);
+        item.appendChild(document.createTextNode(s));
+        legend.appendChild(item);
+      });
+      sec.appendChild(legend);
+    }
+    if (hidden)
+      sec.appendChild(el("p", "note",
+        `${hidden} low-coverage cell(s) not plotted — see the table view.`));
+    const details = el("details", "table-view");
+    details.appendChild(el("summary", null, "Table view (all cells, all runs)"));
+    const allNames = [...new Set(runs.flatMap(r => Object.keys(r.series)))];
+    const table = el("table");
+    const head = el("tr");
+    head.appendChild(el("th", null, "run"));
+    for (const s of allNames) head.appendChild(el("th", null, s));
+    table.appendChild(head);
+    for (const r of runs) {
+      const tr = el("tr");
+      tr.appendChild(el("td", null, `${r.date} #${r.run}`));
+      for (const s of allNames)
+        tr.appendChild(el("td", null,
+          isFinite(r.series[s]) ? fmt(r.series[s]) : "–"));
+      table.appendChild(tr);
+    }
+    details.appendChild(table);
+    sec.appendChild(details);
+  }
+  return sec;
+}
+
+if (TREND && TREND.benches && Object.keys(TREND.benches).length) {
+  kpiRow(TREND);
+  const root = document.getElementById("benches");
+  for (const [name, bench] of
+       Object.entries(TREND.benches).sort((a, b) => a[0].localeCompare(b[0])))
+    root.appendChild(benchSection(name, bench));
+} else {
+  document.getElementById("benches").appendChild(
+    el("p", "note", "No stored benchmark runs yet — the first nightly " +
+                    "publish will populate this page."));
+}
+</script>
+</body>
+</html>
+"""
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--trend-dir", default="trend",
+                    help="directory with freshly stamped BENCH_*.json files")
+    ap.add_argument("--site-dir", required=True,
+                    help="gh-pages checkout to publish into")
+    args = ap.parse_args()
+    return publish(args.trend_dir, args.site_dir)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -175,6 +175,12 @@ class StoreConfig:
     nic_bandwidth: float = 1.2e9  # bytes/s aggregate
     max_connections: int = 256
     failure_rate: float = 0.0
+    # congestion collapse model: when the NIC is oversubscribed (more active
+    # transfers than nic_bandwidth / bandwidth_per_conn supports), each GET's
+    # service time is additionally scaled by (oversubscription)**overload_penalty
+    # — the queueing/bufferbloat tail real links exhibit.  0 = off (the
+    # legacy monotone model, where extra concurrency never hurts).
+    overload_penalty: float = 0.0
     # caching layer (paper §2.4; Varnish analogue).  When both cache_bytes
     # and cache_dir are set, build_store assembles one two-tier
     # TieredCacheStore (memory LRU over bounded disk) instead of nesting.
@@ -190,6 +196,18 @@ class StoreConfig:
     # disk-tier admission: admit-all | size-threshold | second-hit
     cache_admission: str = "admit-all"
     admission_max_item_bytes: int = 1 << 20  # size-threshold policy cutoff
+    # multi-host disk-tier coordination (repro.core.coord) when several
+    # processes/hosts point cache_dir at one shared directory:
+    #   ""        — off: in-process accounting only (single-host, the default)
+    #   "journal" — shared accounting: one fcntl-locked byte journal under
+    #               cache_dir/.coord bounds the tier across all writers
+    #   "shard"   — partitioned keyspace: this host only caches keys where
+    #               host_shard(key, n_hosts) == host_id (capacity is per-host)
+    #               but opportunistically reads peers' entries off the shared
+    #               disk
+    cache_coord: str = ""
+    cache_coord_host_id: int = 0
+    cache_coord_num_hosts: int = 1
 
 
 @dataclass(frozen=True)
@@ -269,6 +287,25 @@ class AutotuneConfig:
     min_disk_cache_bytes: int = 1 << 22
     max_disk_cache_bytes: int = 0
     tune_admission: bool = True
+    # cache-knob cadence.  Capacity knobs pay off on *epoch* timescales in
+    # full-pass regimes (a shuffled pass has no intra-epoch repeats, so a
+    # bigger cache only shows up one epoch later — see bench_cache):
+    #   "batch" — cache knobs ride the per-batch controller (legacy; right
+    #             for within-epoch-repeat workloads)
+    #   "epoch" — the loader runs a second controller for the cache knobs,
+    #             fed once per completed epoch, judging on
+    #             cache_epoch_windows-epoch throughput windows
+    cache_cadence: str = "batch"
+    cache_epoch_windows: int = 2
+    # multi-host cooperative tuning (repro.core.coord.UpProbeLease): when
+    # coord_dir names a directory shared by co-located hosts, upward
+    # concurrency/hedging probes require holding the fleet-wide up-probe
+    # lease — one tenant probes a saturated NIC while the others hold or
+    # refine downward.  "" = off (single-host, the default; behaviour is
+    # bit-identical to a lease-free controller).  A crashed holder's lease
+    # expires after coord_ttl_s.
+    coord_dir: str = ""
+    coord_ttl_s: float = 30.0
 
 
 @dataclass(frozen=True)

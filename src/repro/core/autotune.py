@@ -32,7 +32,19 @@ pre-probe baseline: *accepted* when it beats the baseline by
 ``rel_improvement`` (momentum: the same knob is pushed again immediately),
 *reverted* when it regresses by the same margin (direction flips, then
 settle + fresh baseline before the next probe), and otherwise *held*
-(dead-band — keep the value, move to the next knob).  Concurrency-reducing
+(dead-band — keep the value, move to the next knob).
+
+Multi-host cooperation: when co-located hosts share one NIC, each host's
+controller independently concluding "more concurrency helps" is how the link
+collapses (every tenant probes up at once, every measurement is polluted by
+every other tenant's probe).  Passing a ``probe_lease`` (duck-typed like
+:class:`repro.core.coord.UpProbeLease`) makes every *upward* or binary probe
+conditional on holding the fleet-wide up-probe token: one tenant probes the
+saturated link while the others hold their operating point or refine
+downward.  The lease is renewed while a probe chain is in flight, released
+on revert/hold/quiesce (and when starting a downward probe), and
+TTL-expires if the holder crashes.  With no lease configured the controller
+is bit-identical to before.  Concurrency-reducing
 moves need twice the improvement to be accepted: the cost of slightly too
 much concurrency is small, the cost of walking downhill on a noise spike is
 an epoch of starvation.  The controller also remembers the best *settled*
@@ -96,7 +108,7 @@ class TuneEvent:
 
     batch: int
     action: str  # probe | accept | revert | hold | restore | quiesce | rearm
-    #             | reprobe | gate
+    #             | reprobe | gate | lease (up-move skipped: peer holds token)
     knob: str
     value: int
     tput: float
@@ -121,11 +133,16 @@ class AutotuneController:
         tracer: Optional[Tracer] = None,
         store_stats_fn: Optional[Callable[[], Any]] = None,
         util_fn: Optional[Callable[[], Optional[float]]] = None,
+        probe_lease: Optional[Any] = None,
     ) -> None:
         self.cfg = cfg
         self.knobs = list(knobs)
         self.tracer = tracer
         self.store_stats_fn = store_stats_fn
+        # fleet-wide up-probe token (repro.core.coord.UpProbeLease-shaped);
+        # None = single-host, no coordination overhead anywhere
+        self.probe_lease = probe_lease
+        self._lease_held = False
         # accelerator busy-fraction signal (None = no signal yet); wired by
         # the Trainer so the controller stops buying loader throughput the
         # training step can't eat (see cfg.util_gate)
@@ -172,6 +189,7 @@ class AutotuneController:
             if k.name in self._best_state:
                 k.set(self._best_state[k.name])
         self._probe = None
+        self._release_lease()  # the dropped probe may have held the token
         self._phase = "baseline"
         self._win_t0 = None
         self._win_batches = 0
@@ -216,6 +234,7 @@ class AutotuneController:
         self._win_batches = 0
         self._win_items = 0
         self._probe = None
+        self._release_lease()
         if self._phase in ("settle", "measure"):
             self._phase = "baseline"
 
@@ -263,6 +282,39 @@ class AutotuneController:
                 out["store"] = None
         return out
 
+    def release_coordination(self) -> None:
+        """Hand the fleet-wide up-probe token back (clean shutdown: peers
+        should not have to wait out the crash TTL).  No-op without a lease."""
+        self._release_lease()
+
+    # -- cooperative lease ---------------------------------------------------
+
+    def _lease_for_up(self) -> bool:
+        """True when an upward probe may run: no lease configured, already
+        holding (renewed), or the token was free to take.  A transient
+        shared-dir error (NFS hiccup) counts as "token unavailable" rather
+        than crashing the training loop — the controller just holds this
+        window and retries next time."""
+        if self.probe_lease is None:
+            return True
+        try:
+            if self._lease_held:
+                if self.probe_lease.renew():
+                    return True
+                self._lease_held = False  # TTL expired, a peer took over
+            self._lease_held = bool(self.probe_lease.try_acquire())
+        except OSError:
+            self._lease_held = False
+        return self._lease_held
+
+    def _release_lease(self) -> None:
+        if self.probe_lease is not None and self._lease_held:
+            self._lease_held = False
+            try:
+                self.probe_lease.release()
+            except OSError:  # pragma: no cover - shared dir unavailable
+                pass
+
     # -- controller core -----------------------------------------------------
 
     def _log(self, action: str, knob: str, value: int, tput: float) -> None:
@@ -270,6 +322,25 @@ class AutotuneController:
 
     def _step(self, tput: float) -> None:
         self._windows_seen += 1
+        if self._lease_held and self._probe is not None:
+            # keep the token alive across the settle+measure windows of an
+            # in-flight upward probe (TTL is sized for a few windows only);
+            # a transient shared-dir error counts as a lost token
+            try:
+                self._lease_held = bool(self.probe_lease.renew())
+            except OSError:
+                self._lease_held = False
+            if not self._lease_held:
+                # the TTL lapsed mid-probe and a peer may already hold the
+                # token: letting our upward move keep running would be the
+                # two-concurrent-up-probes state the lease exists to prevent
+                # (and invisible to the lease audit).  Abort: roll the knob
+                # back and re-baseline.
+                p, self._probe = self._probe, None
+                p.knob.set(p.old_value)
+                self._log("revert", p.knob.name, p.old_value, tput)
+                self._phase = "settle_revert"
+                return
         if self._windows_seen <= self.cfg.warmup_windows:
             return  # settle: prefetch burst / startup warps early windows
         if self._phase == "settle":
@@ -393,6 +464,7 @@ class AutotuneController:
             # regression (or an unconvincing binary flip): roll back, then
             # settle + re-measure a clean baseline before the next probe
             p.knob.set(p.old_value)
+            self._release_lease()  # the up-probe failed: let a peer try
             self._log("revert", p.knob.name, p.old_value, tput)
             self._refine(p.knob)  # the coarse jump overshot: step finer
             if not p.knob.is_binary:
@@ -405,6 +477,7 @@ class AutotuneController:
             self._phase = "settle_revert"
             return
         # dead-band: keep the value but stop pushing this knob
+        self._release_lease()  # plateaued: the token helps a peer more
         self._log("hold", p.knob.name, p.new_value, tput)
         self._refine(p.knob)  # plateaued at this granularity: step finer
         if went_down:
@@ -420,6 +493,7 @@ class AutotuneController:
             self._quiescent = True
             self._quiet_windows = 0
             self._phase = "baseline"
+            self._release_lease()
             # park at the best point we ever measured, not wherever the
             # walk happened to stop
             if self._best_state and self._current_state() != self._best_state:
@@ -477,7 +551,12 @@ class AutotuneController:
         already consuming everything the loader produces), upward moves and
         binary trials are skipped — they'd buy throughput nobody eats — but
         downward moves still run so over-provisioned concurrency is given
-        back."""
+        back.
+
+        When a cooperative ``probe_lease`` is configured, upward moves and
+        binary trials additionally require holding the fleet-wide up-probe
+        token: a peer holding it means the shared NIC is already being probed,
+        so this host holds or refines downward until the token frees up."""
         if not self.knobs:
             return
         gated = self._util_gated()
@@ -490,6 +569,7 @@ class AutotuneController:
             if k is not prefer:
                 order.append(k)
         skipped_for_gate = False
+        skipped_for_lease = False
         for k in order:
             cur = k.get()
             nxt = self._next_value(k, cur)
@@ -499,21 +579,31 @@ class AutotuneController:
                 nxt = self._next_value(k, cur)
             if nxt is None:
                 continue
-            if gated and (k.is_binary or nxt > cur):
+            up_move = k.is_binary or nxt > cur
+            if gated and up_move:
                 skipped_for_gate = True
+                continue
+            if up_move and not self._lease_for_up():
+                skipped_for_lease = True
                 continue
             applied = k.set(nxt)
             if applied == cur:
                 continue  # owner clamped the move away — not a probe
+            if not up_move:
+                # refining downward: hand the token back so a peer can climb
+                self._release_lease()
             self._probe = _Probe(k, cur, applied, baseline)
             self._ki = self.knobs.index(k)
             self._phase = "settle"
             self._log("probe", k.name, applied, baseline)
             return
-        if skipped_for_gate:
-            # accelerator-bound, not converged: stay armed and re-check the
-            # gate next window instead of quiescing
-            self._log("gate", "-", 0, baseline)
+        if skipped_for_gate or skipped_for_lease:
+            # accelerator-bound or a peer holds the up-probe token — not
+            # converged: stay armed and re-check next window instead of
+            # quiescing.  An idle hold of the token (e.g. util-gated right
+            # after an accept) is released so peers can use it.
+            self._release_lease()
+            self._log("gate" if skipped_for_gate else "lease", "-", 0, baseline)
             self._phase = "baseline"
             return
         # nothing movable anywhere (e.g. a coarse momentum-accept landed every
@@ -521,6 +611,7 @@ class AutotuneController:
         self._quiescent = True
         self._quiet_windows = 0
         self._phase = "baseline"
+        self._release_lease()
         self._log("quiesce", "-", 0, baseline)
 
     def _util_gated(self) -> bool:
@@ -607,7 +698,15 @@ def build_cache_knobs(cfg: AutotuneConfig, cache: Any) -> List[Knob]:
             )
         )
     disk = getattr(cache, "disk", None)
-    if disk is not None and disk.capacity and cfg.max_disk_cache_bytes > disk.capacity:
+    # a journal-shared disk tier's capacity belongs to the fleet, not to one
+    # host's hill climber: two hosts walking the same shared bound in
+    # opposite directions would thrash every peer's working set.  The
+    # (per-host) memory knob and admission knob remain tunable.
+    disk_shared = disk is not None and getattr(disk, "journal", None) is not None
+    if (
+        disk is not None and not disk_shared
+        and disk.capacity and cfg.max_disk_cache_bytes > disk.capacity
+    ):
         knobs.append(
             Knob(
                 name="cache_disk_bytes",

@@ -1,0 +1,616 @@
+"""File-based multi-host coordination: locks, leases, counters, journals.
+
+The ROADMAP's production fleet puts many loader hosts behind one NIC and one
+shared disk.  Without coordination two failure modes appear (the
+uncoordinated-client collapse that arXiv:2503.22643 and the Uber distributed
+pipeline design against):
+
+* every host's :class:`~repro.data.cache.DiskTierCache` accounts bytes with
+  in-process locks only, so N writers on one shared directory overshoot
+  ``capacity_bytes`` by up to N times;
+* every host's :class:`~repro.core.autotune.AutotuneController` sees the same
+  saturated NIC and raises fetch concurrency at the same time, which is
+  exactly how the link got saturated in the first place.
+
+This module is the shared substrate both clients build on.  It deliberately
+needs **no network daemon**: coordination state is lock files + small JSON
+records under a directory every host can reach (the shared disk itself, or
+any NFS-style mount).  Primitives:
+
+* :class:`FileLock`       — ``fcntl.flock``-based inter-process mutex.
+* :func:`host_shard`      — stable key -> host assignment for partitioned
+  (rather than shared-accounting) cache keyspaces.
+* :class:`SharedCounter`  — cross-process integer with atomic add (used by
+  the simulated store to model one NIC shared by several processes).
+* :class:`SharedDiskJournal` — the ``fcntl``-locked byte-accounting journal
+  behind the shared disk tier: reservation-based capacity accounting, LRU
+  eviction and crash recovery across processes.
+* :class:`UpProbeLease`   — a TTL lease on the "may increase concurrency /
+  hedging" token consumed by the autotuner, plus an append-only event log so
+  benchmarks can audit that at most one host ever held it at a time.
+
+Scalability note: the journal rewrites one small JSON document per mutation
+under an exclusive lock.  That is the right trade for a cache tier whose
+entries are ~100 KB objects fetched over a ~20 ms-latency link (the lock
+hold time is microseconds against a millisecond-scale op); a deployment with
+millions of tiny entries would swap the JSON document for an embedded
+database behind the same interface.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import socket
+import threading
+import time
+from contextlib import contextmanager
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Iterator, List, Optional, Tuple
+
+try:  # pragma: no cover - exercised only on non-POSIX platforms
+    import fcntl
+
+    HAVE_FCNTL = True
+except ImportError:  # pragma: no cover
+    fcntl = None  # type: ignore[assignment]
+    HAVE_FCNTL = False
+
+
+class CoordinationUnavailable(RuntimeError):
+    """Raised when file-based coordination is requested on a platform
+    without ``fcntl`` advisory locks."""
+
+
+def default_owner() -> str:
+    """Stable-enough identity for lease records: host + pid."""
+    return f"{socket.gethostname()}-{os.getpid()}"
+
+
+# ---------------------------------------------------------------------------
+# Lock file
+# ---------------------------------------------------------------------------
+
+
+class FileLock:
+    """Inter-process exclusive lock (``flock``) usable as a context manager.
+
+    ``flock`` locks belong to the open file description, so every acquisition
+    opens a fresh fd — two threads of one process exclude each other exactly
+    like two processes do.  The lock file itself carries no data and is never
+    deleted (unlinking a locked path races fresh openers on some kernels).
+    """
+
+    def __init__(self, path: str) -> None:
+        if not HAVE_FCNTL:
+            raise CoordinationUnavailable(
+                "repro.core.coord requires fcntl advisory locks"
+            )
+        self.path = path
+        self._local = threading.local()
+
+    def __enter__(self) -> "FileLock":
+        fd = os.open(self.path, os.O_RDWR | os.O_CREAT, 0o644)
+        try:
+            fcntl.flock(fd, fcntl.LOCK_EX)
+        except BaseException:
+            os.close(fd)
+            raise
+        self._local.fd = fd
+        return self
+
+    def __exit__(self, *exc) -> None:
+        fd = self._local.fd
+        self._local.fd = None
+        try:
+            fcntl.flock(fd, fcntl.LOCK_UN)
+        finally:
+            os.close(fd)
+
+
+# ---------------------------------------------------------------------------
+# Key sharding
+# ---------------------------------------------------------------------------
+
+
+def host_shard(key: str, n_hosts: int) -> int:
+    """Stable assignment of ``key`` to one of ``n_hosts`` (blake2b-derived,
+    independent of Python's randomized ``hash``).  Hosts that partition the
+    cache keyspace instead of sharing one accounting journal each own the
+    keys where ``host_shard(key, n) == host_id``."""
+    if n_hosts <= 1:
+        return 0
+    h = hashlib.blake2b(key.encode(), digest_size=8).digest()
+    return int.from_bytes(h, "little") % n_hosts
+
+
+# ---------------------------------------------------------------------------
+# Shared counter
+# ---------------------------------------------------------------------------
+
+
+class SharedCounter:
+    """Cross-process integer with atomic add (text file under a FileLock).
+
+    Used to model shared physical resources in benchmarks — e.g. the number
+    of in-flight transfers on one NIC serving several loader processes.  A
+    process killed between add(+1) and add(-1) leaks its increment; callers
+    that need self-healing should reset the counter at fleet start."""
+
+    def __init__(self, path: str) -> None:
+        self.path = path
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        self._lock = FileLock(path + ".lock")
+
+    def _read(self) -> int:
+        try:
+            with open(self.path, "r") as f:
+                return int(f.read().strip() or 0)
+        except (FileNotFoundError, ValueError):
+            return 0
+
+    def add(self, delta: int) -> int:
+        with self._lock:
+            val = self._read() + delta
+            tmp = f"{self.path}.tmp{os.getpid()}"
+            with open(tmp, "w") as f:
+                f.write(str(val))
+            os.replace(tmp, self.path)
+            return val
+
+    def value(self) -> int:
+        with self._lock:
+            return self._read()
+
+
+# ---------------------------------------------------------------------------
+# Shared disk-tier journal
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class ReserveResult:
+    ok: bool = False
+    dedup: bool = False  # key already present (or mid-write by a peer)
+    evicted: int = 0
+    evicted_bytes: int = 0
+
+
+@dataclass
+class _JEntry:
+    fname: str
+    size: int
+    final: bool
+    deadline: float  # provisional reservations expire (crashed writers)
+
+
+class SharedDiskJournal:
+    """Byte-accounting index for a :class:`DiskTierCache` directory shared by
+    several processes/hosts.
+
+    The journal document (JSON, LRU order oldest-first) is the *authoritative*
+    index: every reserve/finalize/touch/evict is a read-modify-write under one
+    ``flock``, so the sum of reserved bytes — and therefore the bytes on disk,
+    since writers reserve before writing and victims are unlinked inside the
+    lock — can never exceed ``capacity_bytes`` no matter how many writers
+    race.  Crashed writers leak only a provisional reservation, which expires
+    after ``reserve_ttl_s`` and becomes evictable.
+    """
+
+    COORD_SUBDIR = ".coord"
+
+    def __init__(
+        self,
+        cache_dir: str,
+        capacity_bytes: int = 0,
+        *,
+        reserve_ttl_s: float = 60.0,
+    ) -> None:
+        self.cache_dir = cache_dir
+        self.coord_dir = os.path.join(cache_dir, self.COORD_SUBDIR)
+        os.makedirs(self.coord_dir, exist_ok=True)
+        self.capacity = max(int(capacity_bytes), 0)
+        self.reserve_ttl_s = reserve_ttl_s
+        self.index_path = os.path.join(self.coord_dir, "index.json")
+        self._flock = FileLock(os.path.join(self.coord_dir, "index.lock"))
+
+    # -- state I/O (only ever called under the flock) ------------------------
+    def _load(self) -> Tuple[int, List[_JEntry]]:
+        try:
+            with open(self.index_path, "r") as f:
+                doc = json.load(f)
+        except (FileNotFoundError, ValueError):
+            return self.capacity, []
+        entries = [_JEntry(*e) for e in doc.get("entries", [])]
+        return int(doc.get("capacity", self.capacity)), entries
+
+    def _save(self, capacity: int, entries: List[_JEntry]) -> None:
+        tmp = f"{self.index_path}.tmp{os.getpid()}-{threading.get_ident()}"
+        with open(tmp, "w") as f:
+            json.dump(
+                {
+                    "capacity": capacity,
+                    "entries": [
+                        [e.fname, e.size, e.final, e.deadline] for e in entries
+                    ],
+                },
+                f,
+            )
+        os.replace(tmp, self.index_path)
+
+    @contextmanager
+    def _locked(self) -> Iterator[List[_JEntry]]:
+        with self._flock:
+            capacity, entries = self._load()
+            # the journal document is the authority on capacity so every
+            # process evicts against the same bound after a set_capacity
+            self.capacity = capacity
+            yield entries
+            self._save(self.capacity, entries)
+
+    # -- eviction (under lock) -----------------------------------------------
+    def _evict_until_fits(
+        self, entries: List[_JEntry], need: int
+    ) -> Tuple[Optional[List[_JEntry]], int, int]:
+        """Pop evictable LRU entries until ``need`` more bytes fit; unlink the
+        victims' files while still holding the lock (a concurrent directory
+        scan must never observe more bytes than the journal accounts for).
+        Returns (victims or None when impossible, count, bytes)."""
+        if not self.capacity:
+            return [], 0, 0
+        now = time.time()
+        used = sum(e.size for e in entries)
+        victims: List[_JEntry] = []
+        while used + need > self.capacity:
+            victim = next(
+                (e for e in entries if e.final or e.deadline < now), None
+            )
+            if victim is None:  # only live mid-write reservations remain
+                return None, 0, 0
+            entries.remove(victim)
+            used -= victim.size
+            victims.append(victim)
+        for v in victims:
+            try:
+                os.remove(os.path.join(self.cache_dir, v.fname))
+            except OSError:
+                pass
+            if not v.final:
+                self._reclaim_tmps(v.fname)
+        return victims, len(victims), sum(v.size for v in victims)
+
+    def _reclaim_tmps(self, fname: str) -> None:
+        """An EXPIRED provisional entry may belong to a writer that stalled
+        after writing its tmp file: freeing the journal budget while those
+        bytes sit on disk would let the fleet overshoot capacity, so the
+        tmp(s) are reclaimed with the reservation.  If the writer ever
+        wakes, its finalize() fails and it cleans up after itself."""
+        prefix = fname + ".tmp"
+        try:
+            names = os.listdir(self.cache_dir)
+        except OSError:
+            return
+        for name in names:
+            if name.startswith(prefix):
+                try:
+                    os.remove(os.path.join(self.cache_dir, name))
+                except OSError:
+                    pass
+
+    # -- operations ----------------------------------------------------------
+    def reserve(self, fname: str, size: int) -> ReserveResult:
+        with self._locked() as entries:
+            now = time.time()
+            for e in entries:
+                if e.fname == fname:
+                    if not e.final and e.deadline < now:
+                        # expired reservation of a crashed writer: treating
+                        # it as a dedup hit would return True without a file
+                        # ever existing, permanently blocking this key —
+                        # drop it (and any stalled tmp bytes) and reserve
+                        # afresh
+                        entries.remove(e)
+                        self._reclaim_tmps(e.fname)
+                        break
+                    entries.remove(e)
+                    entries.append(e)  # MRU
+                    return ReserveResult(ok=True, dedup=True)
+            if self.capacity and size > self.capacity:
+                return ReserveResult(ok=False)
+            victims, n, nbytes = self._evict_until_fits(entries, size)
+            if victims is None:
+                return ReserveResult(ok=False)
+            entries.append(
+                _JEntry(fname, size, False, time.time() + self.reserve_ttl_s)
+            )
+            return ReserveResult(ok=True, evicted=n, evicted_bytes=nbytes)
+
+    def finalize(self, fname: str) -> bool:
+        """Mark a reservation durable.  Returns False when the reservation
+        expired and was evicted while the (too-slow) writer was writing — the
+        caller must unlink its file, which is no longer accounted for."""
+        with self._locked() as entries:
+            for e in entries:
+                if e.fname == fname:
+                    e.final = True
+                    e.deadline = 0.0
+                    return True
+        return False
+
+    def abort(self, fname: str) -> None:
+        with self._locked() as entries:
+            for e in entries:
+                if e.fname == fname and not e.final:
+                    entries.remove(e)
+                    return
+
+    def touch(self, fname: str) -> None:
+        with self._locked() as entries:
+            for e in entries:
+                if e.fname == fname and e.final:
+                    entries.remove(e)
+                    entries.append(e)
+                    return
+
+    def repair_missing(self, fname: str) -> int:
+        """Drop a finalized entry whose file vanished externally; returns the
+        repaired byte count (0 when the journal was already consistent — e.g.
+        a peer evicted the entry between our read and this call).  The
+        absence is re-verified under the lock: between our failed read and
+        this call a peer may have evicted AND re-written the key, and
+        dropping the fresh entry would leave its file as untracked bytes."""
+        with self._locked() as entries:
+            for e in entries:
+                if e.fname == fname and e.final:
+                    if os.path.exists(os.path.join(self.cache_dir, fname)):
+                        return 0  # a peer re-created it: nothing to repair
+                    entries.remove(e)
+                    return e.size
+        return 0
+
+    def reconcile(
+        self,
+        capacity_bytes: Optional[int] = None,
+        file_filter: Optional[Callable[[str], bool]] = None,
+    ) -> int:
+        """Bring the journal and the directory into agreement at init:
+
+        * finalized entries whose file vanished are dropped,
+        * expired provisional reservations are dropped,
+        * files unknown to the journal (a pre-coordination cache dir, or an
+          external drop-in) are adopted at the LRU *cold* end in mtime order,
+        * the result is evicted down to capacity.
+
+        The directory is listed while HOLDING the journal lock: a listing
+        taken before the lock races live peers — an entry finalized between
+        the stale listing and the lock would be dropped as "vanished" while
+        its file stays on disk, permanently leaking unaccounted bytes.
+        ``file_filter`` lets the caller exclude extra names (tmp files and
+        dotfiles are always excluded).  Concurrent reconciles from several
+        starting processes serialize on the flock and are idempotent.
+        Returns the number of adopted files."""
+        adopted = 0
+        with self._locked() as entries:
+            if capacity_bytes is not None:
+                self.capacity = max(int(capacity_bytes), 0)
+            files: Dict[str, Tuple[int, float]] = {}
+            for name in os.listdir(self.cache_dir):
+                if name.startswith(".") or ".tmp" in name:
+                    continue
+                if file_filter is not None and not file_filter(name):
+                    continue
+                try:
+                    st = os.stat(os.path.join(self.cache_dir, name))
+                except OSError:
+                    continue
+                files[name] = (st.st_size, st.st_mtime)
+            now = time.time()
+            keep: List[_JEntry] = []
+            for e in entries:
+                if e.final:
+                    if e.fname in files:
+                        keep.append(e)
+                elif e.deadline >= now:
+                    keep.append(e)  # a live peer is mid-write: trust it
+            known = {e.fname for e in keep}
+            fresh = sorted(
+                (mtime, fname, size)
+                for fname, (size, mtime) in files.items()
+                if fname not in known
+            )
+            adoptees = [_JEntry(f, s, True, 0.0) for _, f, s in fresh]
+            entries[:] = adoptees + keep
+            self._evict_until_fits(entries, 0)
+            adopted = len(adoptees)
+        return adopted
+
+    def set_capacity(self, capacity_bytes: int) -> int:
+        with self._locked() as entries:
+            self.capacity = max(int(capacity_bytes), 0)
+            self._evict_until_fits(entries, 0)
+        return self.capacity
+
+    def used_bytes(self) -> int:
+        with self._flock:
+            _, entries = self._load()
+            return sum(e.size for e in entries)
+
+    def entry_count(self) -> int:
+        with self._flock:
+            _, entries = self._load()
+            return len(entries)
+
+
+# ---------------------------------------------------------------------------
+# Cooperative up-probe lease
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class LeaseEvent:
+    owner: str
+    event: str  # acquire | renew | release | takeover
+    t: float
+    expires_at: float = 0.0
+
+    def to_json(self) -> str:
+        return json.dumps(
+            {"owner": self.owner, "event": self.event, "t": self.t,
+             "expires_at": self.expires_at}
+        )
+
+    @staticmethod
+    def from_json(line: str) -> "LeaseEvent":
+        d = json.loads(line)
+        return LeaseEvent(d["owner"], d["event"], d["t"], d.get("expires_at", 0.0))
+
+
+class UpProbeLease:
+    """TTL lease on the fleet-wide "may probe concurrency upward" token.
+
+    One loader host holds the token at a time; its autotuner may probe
+    concurrency/hedging *up* while the others hold their operating point or
+    refine downward.  A crashed holder is healed by wall-clock TTL expiry —
+    the next ``try_acquire`` after ``expires_at`` takes the token over.  All
+    transitions are appended to ``events.jsonl`` under the same lock, so a
+    benchmark can audit after the fact that no two hosts ever held a live
+    lease concurrently (:func:`validate_lease_events`).
+    """
+
+    def __init__(
+        self,
+        coord_dir: str,
+        *,
+        owner: Optional[str] = None,
+        ttl_s: float = 30.0,
+        events_max_bytes: int = 4 << 20,
+    ) -> None:
+        self.dir = coord_dir
+        os.makedirs(coord_dir, exist_ok=True)
+        self.owner = owner or default_owner()
+        self.ttl_s = ttl_s
+        # the audit log rotates once (events.jsonl -> events.jsonl.1) past
+        # this size, so a multi-day fleet never grows the shared mount
+        # unboundedly; benches audit well within one rotation window
+        self.events_max_bytes = events_max_bytes
+        self.path = os.path.join(coord_dir, "up_probe.lease")
+        self.events_path = os.path.join(coord_dir, "events.jsonl")
+        self._lock = FileLock(os.path.join(coord_dir, "up_probe.lock"))
+
+    # -- record I/O (under the flock) ----------------------------------------
+    def _read(self) -> Optional[Dict]:
+        try:
+            with open(self.path, "r") as f:
+                return json.load(f)
+        except (FileNotFoundError, ValueError):
+            return None
+
+    def _write(self, expires_at: float) -> None:
+        tmp = f"{self.path}.tmp{os.getpid()}-{threading.get_ident()}"
+        with open(tmp, "w") as f:
+            json.dump({"owner": self.owner, "expires_at": expires_at}, f)
+        os.replace(tmp, self.path)
+
+    def _log(self, event: str, expires_at: float = 0.0) -> None:
+        ev = LeaseEvent(self.owner, event, time.time(), expires_at)
+        try:
+            if (
+                self.events_max_bytes
+                and os.path.getsize(self.events_path) >= self.events_max_bytes
+            ):
+                os.replace(self.events_path, self.events_path + ".1")
+        except OSError:
+            pass
+        with open(self.events_path, "a") as f:
+            f.write(ev.to_json() + "\n")
+
+    # -- surface -------------------------------------------------------------
+    def try_acquire(self) -> bool:
+        with self._lock:
+            now = time.time()
+            rec = self._read()
+            if rec and rec["owner"] != self.owner and rec["expires_at"] > now:
+                return False
+            expires = now + self.ttl_s
+            self._write(expires)
+            if rec is None:
+                event = "acquire"
+            elif rec["owner"] == self.owner:
+                event = "renew"  # re-entrant refresh by the current holder
+            else:
+                event = "takeover"  # expired lease of a crashed peer
+            self._log(event, expires)
+            return True
+
+    def renew(self) -> bool:
+        """Extend a held lease; False when it was lost (TTL expired and a
+        peer took over) — the caller must stop treating itself as holder."""
+        with self._lock:
+            rec = self._read()
+            if not rec or rec["owner"] != self.owner:
+                return False
+            expires = time.time() + self.ttl_s
+            self._write(expires)
+            self._log("renew", expires)
+            return True
+
+    def release(self) -> None:
+        with self._lock:
+            rec = self._read()
+            if rec and rec["owner"] == self.owner:
+                try:
+                    os.remove(self.path)
+                except OSError:
+                    pass
+                self._log("release")
+
+    def read_events(self) -> List[LeaseEvent]:
+        try:
+            with open(self.events_path, "r") as f:
+                return [LeaseEvent.from_json(ln) for ln in f if ln.strip()]
+        except FileNotFoundError:
+            return []
+
+
+@dataclass
+class LeaseAudit:
+    ok: bool
+    holders: int  # distinct owners that ever held the lease
+    acquisitions: int
+    violations: List[str] = field(default_factory=list)
+
+
+def validate_lease_events(events: List[LeaseEvent]) -> LeaseAudit:
+    """Audit an event log: at every acquire/takeover, the previous holder must
+    have released or have an expired lease — i.e. no two live holders ever
+    overlap (the bench's "never >1 concurrent up-probe" invariant)."""
+    holder: Optional[str] = None
+    holder_expires = 0.0
+    owners = set()
+    acqs = 0
+    violations: List[str] = []
+    for ev in sorted(events, key=lambda e: e.t):
+        if ev.event in ("acquire", "takeover", "renew"):
+            if (
+                ev.event != "renew"
+                and holder is not None
+                and holder != ev.owner
+                and holder_expires > ev.t
+            ):
+                violations.append(
+                    f"{ev.owner} acquired at {ev.t:.3f} while {holder} held a "
+                    f"live lease (expires {holder_expires:.3f})"
+                )
+            if ev.event == "renew" and holder != ev.owner:
+                # a renew only succeeds for the recorded holder
+                violations.append(f"{ev.owner} renewed without holding")
+            holder = ev.owner
+            holder_expires = ev.expires_at
+            owners.add(ev.owner)
+            if ev.event in ("acquire", "takeover"):
+                acqs += 1
+        elif ev.event == "release":
+            if holder == ev.owner:
+                holder = None
+                holder_expires = 0.0
+    return LeaseAudit(not violations, len(owners), acqs, violations)

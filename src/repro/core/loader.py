@@ -21,9 +21,11 @@ makes the loader checkpoint/restart-deterministic in distributed training.
 """
 from __future__ import annotations
 
+import os
 import queue
 import threading
 import time
+from dataclasses import replace
 from typing import Any, Callable, Dict, Iterator, List, Optional
 
 from repro.config import LoaderConfig
@@ -106,14 +108,27 @@ class ConcurrentDataLoader:
         # online knob control (repro.core.autotune): the controller and the
         # tuned values live on the LOADER so learning persists across epochs;
         # each _LoaderIter re-binds the knob callbacks to itself.
+        at = cfg.autotune
+        probe_lease = None
+        if at.enabled and at.coord_dir:
+            # multi-host cooperation: upward concurrency/hedging probes
+            # require the fleet-wide token under the shared coord dir
+            from repro.core.coord import UpProbeLease  # lazy: fcntl-gated
+
+            probe_lease = UpProbeLease(
+                at.coord_dir,
+                owner=f"host{host_id}-pid{os.getpid()}",
+                ttl_s=at.coord_ttl_s,
+            )
         self.autotuner: Optional[AutotuneController] = (
             AutotuneController(
-                cfg.autotune,
+                at,
                 [],
                 tracer=tracer,
                 store_stats_fn=_store_stats_fn(dataset),
+                probe_lease=probe_lease,
             )
-            if cfg.autotune.enabled
+            if at.enabled
             else None
         )
         self._tuned: Dict[str, int] = {}
@@ -124,10 +139,38 @@ class ConcurrentDataLoader:
         # this loader's tracer into their timelines — pass a tracer to
         # build_store/TieredCacheStore to get cache_get spans.)
         self._cache_knobs: List[Knob] = []
-        if self.autotuner is not None and cfg.autotune.tune_cache:
+        # epoch-cadence cache tuning: capacity knobs pay off one epoch later
+        # in full-pass regimes, so with cache_cadence="epoch" the cache knobs
+        # get their own controller judged on cache_epoch_windows-epoch
+        # throughput windows (fed from _finish_epoch) instead of riding the
+        # per-batch controller.  This is the wiring bench_cache previously
+        # hand-rolled around the loader.
+        self.cache_autotuner: Optional[AutotuneController] = None
+        if at.enabled and at.cache_cadence not in ("batch", "epoch"):
+            # a typo'd cadence must not silently fall back to per-batch —
+            # the mis-cadence is exactly what this option exists to fix
+            raise ValueError(
+                f"unknown cache_cadence {at.cache_cadence!r}; "
+                "known: 'batch', 'epoch'"
+            )
+        if self.autotuner is not None and at.tune_cache:
             cache = _find_tiered_cache(dataset)
             if cache is not None:
-                self._cache_knobs = build_cache_knobs(cfg.autotune, cache)
+                knobs = build_cache_knobs(at, cache)
+                if knobs and at.cache_cadence == "epoch":
+                    epoch_cfg = replace(
+                        at,
+                        interval_batches=max(at.cache_epoch_windows, 1),
+                        min_window_s=0.0,
+                        warmup_windows=1,
+                        # epoch-scale windows on a shared machine: a slow
+                        # phase spanning one window says nothing about the
+                        # knobs, so never restore-on-collapse here
+                        collapse_restore=False,
+                    )
+                    self.cache_autotuner = AutotuneController(epoch_cfg, knobs)
+                else:
+                    self._cache_knobs = knobs
 
     # -- epoch / resume ------------------------------------------------------
     def set_epoch(self, epoch: int) -> None:
@@ -154,6 +197,19 @@ class ConcurrentDataLoader:
 
     def __iter__(self) -> "_LoaderIter":
         return _LoaderIter(self)
+
+    def _note_epoch_end(self) -> None:
+        """Feed the epoch-cadence cache controller one completed epoch
+        (items = batches consumed; only the rate's consistency matters)."""
+        if self.cache_autotuner is not None and self._consumed:
+            self.cache_autotuner.on_batch(items=self._consumed)
+
+    def release_coordination(self) -> None:
+        """Hand back any held multi-host lease (clean shutdown — peers should
+        not have to wait out the crash TTL).  Safe to call repeatedly."""
+        for ctrl in (self.autotuner, self.cache_autotuner):
+            if ctrl is not None:
+                ctrl.release_coordination()
 
 
 class _LoaderIter:
@@ -364,6 +420,7 @@ class _LoaderIter:
 
     def _finish_epoch(self) -> None:
         self.shutdown()
+        self.loader._note_epoch_end()
 
     # -- shutdown ------------------------------------------------------------
     def shutdown(self) -> None:

@@ -8,9 +8,16 @@ repeat reads; this module makes that tier a first-class, *tunable* subsystem:
   semantics); more shards trade strict LRU for reduced lock contention.
 * :class:`DiskTierCache`  — **bounded** on-disk tier: atomic tmp+rename
   writes, LRU eviction by bytes, a pluggable admission policy, and crash
-  recovery (orphaned ``*.tmp*`` files are purged and surviving entries
-  re-indexed, oldest-mtime first, on init).  Capacity is *reserved before the
-  write*, so parallel writers can never overshoot ``capacity_bytes``.
+  recovery (orphaned ``*.tmp*`` files older than ``tmp_grace_s`` are purged
+  — a *fresh* tmp belongs to a live writer in another process — and
+  surviving entries re-indexed, oldest-mtime first, on init).  Capacity is
+  *reserved before the write*, so parallel writers can never overshoot
+  ``capacity_bytes``.  Two multi-host modes (``repro.core.coord``) make the
+  tier safe when several processes/hosts share one directory: ``journal``
+  replaces the in-process index with a cross-process ``fcntl``-locked byte
+  journal, and ``shard`` partitions the keyspace with
+  :func:`~repro.core.coord.host_shard` (each host accounts only its own
+  shard but opportunistically reads peers' entries off the shared disk).
 * :class:`TieredCacheStore` — :class:`~repro.data.store.ObjectStore` facade
   stacking memory over disk over the origin store, with sync ``get`` and
   async-safe ``aget`` (disk I/O is offloaded to the default executor), disk
@@ -40,8 +47,9 @@ import time
 from abc import ABC, abstractmethod
 from collections import OrderedDict
 from dataclasses import dataclass
-from typing import List, Optional
+from typing import List, Optional, Tuple
 
+from repro.core.coord import SharedDiskJournal, host_shard
 from repro.core.tracing import CACHE_GET, NULL_TRACER, Tracer
 
 
@@ -58,6 +66,7 @@ class CacheTierStats:
     bytes_used: int = 0
     bytes_admitted: int = 0
     bytes_evicted: int = 0
+    shard_foreign: int = 0  # shard-mode puts skipped: key owned by a peer host
 
     @property
     def lookups(self) -> int:
@@ -303,6 +312,20 @@ class DiskTierCache:
     under parallel writers.  ``capacity_bytes=0`` means unbounded (the legacy
     ``DiskCacheStore`` behaviour).  Same-key writers serialize on a striped
     lock; distinct keys proceed in parallel.
+
+    Multi-host modes (both off by default — single-host behaviour is
+    unchanged):
+
+    * ``journal`` — pass a :class:`~repro.core.coord.SharedDiskJournal`: the
+      in-process index is replaced by the cross-process byte journal, so N
+      writer processes on one shared directory still never overshoot
+      ``capacity_bytes`` (the journal's capacity is authoritative).
+    * ``shard=(host_id, n_hosts)`` — the keyspace is partitioned with
+      :func:`~repro.core.coord.host_shard`; this instance admits and accounts
+      only its own shard (``capacity_bytes`` is per-host) while GETs for
+      peer-owned keys read the shared directory opportunistically.  File
+      names carry the owning shard as a prefix so re-indexing on init never
+      adopts a peer's bytes into this host's budget.
     """
 
     def __init__(
@@ -312,10 +335,26 @@ class DiskTierCache:
         admission: Optional[AdmissionPolicy] = None,
         *,
         write_stripes: int = 16,
+        journal: Optional[SharedDiskJournal] = None,
+        shard: Optional[Tuple[int, int]] = None,
+        tmp_grace_s: float = 120.0,
     ) -> None:
+        if journal is not None and shard is not None:
+            raise ValueError("journal and shard coordination are exclusive")
+        if shard is not None and not 0 <= shard[0] < shard[1]:
+            # host_shard() only ever returns 0..n_hosts-1: an out-of-range
+            # host id (e.g. 1-based) would silently own NO keys — every put
+            # skipped, no disk tier at all, and no error to say so
+            raise ValueError(
+                f"shard host_id {shard[0]} out of range for {shard[1]} hosts "
+                "(host ids are 0-based)"
+            )
         self.dir = cache_dir
         self.capacity = max(int(capacity_bytes), 0)
         self.admission = admission or AdmitAll()
+        self.journal = journal
+        self.shard = shard
+        self.tmp_grace_s = tmp_grace_s
         os.makedirs(cache_dir, exist_ok=True)
         self._index: "OrderedDict[str, _DiskEntry]" = OrderedDict()
         self._used = 0
@@ -330,27 +369,50 @@ class DiskTierCache:
         self._write_failures = 0
         self._bytes_admitted = 0
         self._bytes_evicted = 0
+        self._shard_foreign = 0
         self._recover()
 
     # -- init / recovery -----------------------------------------------------
     def _recover(self) -> None:
         """Purge orphaned tmp files from crashed writers; re-index surviving
-        entries (oldest mtime first, so recovered LRU order is sensible)."""
+        entries (oldest mtime first, so recovered LRU order is sensible).
+
+        Multi-process tolerance: a *fresh* tmp file (mtime within
+        ``tmp_grace_s``) belongs to a live writer in another process — on a
+        shared directory, purging it would yank an in-flight write out from
+        under a peer — so only stale tmps are treated as crash orphans.  In
+        shard mode only files carrying this host's shard prefix are adopted
+        (a peer's entries are its budget, not ours); in journal mode the
+        directory is reconciled against the shared journal instead of
+        rebuilding a private index."""
+        now = time.time()
         found = []
         for name in os.listdir(self.dir):
+            if name.startswith("."):  # coordination state (.coord), dotfiles
+                continue
             path = os.path.join(self.dir, name)
             if ".tmp" in name:
                 try:
-                    os.remove(path)
-                    self.orphans_removed += 1
+                    if now - os.stat(path).st_mtime >= self.tmp_grace_s:
+                        os.remove(path)
+                        self.orphans_removed += 1
                 except OSError:
                     pass
                 continue
+            if self.journal is not None:
+                continue  # the journal re-lists under its own lock below
+            if self.shard is not None and not name.startswith(self._shard_prefix()):
+                continue  # a peer host's entry (or pre-shard debris): not ours
             try:
                 st = os.stat(path)
             except OSError:
                 continue
             found.append((st.st_mtime, name, st.st_size))
+        if self.journal is not None:
+            # listing happens inside the journal lock — a pre-lock listing
+            # would race live peers and leak their just-finalized bytes
+            self.journal.reconcile(capacity_bytes=self.capacity)
+            return
         for _, name, size in sorted(found):
             self._index[name] = _DiskEntry(size, True)
             self._used += size
@@ -359,14 +421,26 @@ class DiskTierCache:
         self._unlink(paths)
 
     # -- key mapping ---------------------------------------------------------
+    def _shard_prefix(self, owner: Optional[int] = None) -> str:
+        if owner is None:
+            owner = self.shard[0]
+        return f"s{owner:03d}-"
+
     def _fname(self, key: str) -> str:
-        return hashlib.sha1(key.encode()).hexdigest()
+        digest = hashlib.sha1(key.encode()).hexdigest()
+        if self.shard is not None:
+            return self._shard_prefix(host_shard(key, self.shard[1])) + digest
+        return digest
+
+    def _owns(self, fname: str) -> bool:
+        return self.shard is None or fname.startswith(self._shard_prefix())
 
     def _path(self, fname: str) -> str:
         return os.path.join(self.dir, fname)
 
     def _stripe(self, fname: str) -> threading.Lock:
-        return self._stripes[int(fname[:8], 16) % len(self._stripes)]
+        # the trailing 8 chars are always hex digest (shard mode prefixes)
+        return self._stripes[int(fname[-8:], 16) % len(self._stripes)]
 
     # -- eviction ------------------------------------------------------------
     def _pop_victims_locked(self, need: int = 0) -> List[str]:
@@ -403,8 +477,50 @@ class DiskTierCache:
         self._unlink(self._pop_victims_locked(need))
 
     # -- get / put -----------------------------------------------------------
+    def _get_journal(self, fname: str) -> Optional[bytes]:
+        """Journal-mode GET: the file system is read directly; the shared
+        journal only learns about recency (LRU touch) and externally vanished
+        entries.  A peer evicting between our open and the touch is benign —
+        we still serve the bytes our fd pinned, and touch() on a gone entry
+        is a no-op."""
+        try:
+            with open(self._path(fname), "rb") as f:
+                data = f.read()
+        except FileNotFoundError:
+            self.journal.repair_missing(fname)
+            with self._lock:
+                self._misses += 1
+            return None
+        except OSError:
+            with self._lock:
+                self._misses += 1
+            return None
+        self.journal.touch(fname)
+        with self._lock:
+            self._hits += 1
+        return data
+
+    def _get_foreign(self, fname: str) -> Optional[bytes]:
+        """Shard-mode GET for a key owned by a peer host: opportunistic read
+        of the shared directory, no accounting (the bytes live in the owner's
+        budget and only the owner maintains LRU order)."""
+        try:
+            with open(self._path(fname), "rb") as f:
+                data = f.read()
+        except OSError:
+            with self._lock:
+                self._misses += 1
+            return None
+        with self._lock:
+            self._hits += 1
+        return data
+
     def get(self, key: str) -> Optional[bytes]:
         fname = self._fname(key)
+        if self.journal is not None:
+            return self._get_journal(fname)
+        if not self._owns(fname):
+            return self._get_foreign(fname)
         try:
             with open(self._path(fname), "rb") as f:
                 data = f.read()
@@ -455,13 +571,62 @@ class DiskTierCache:
             self._hits += 1
         return data
 
+    def _put_journal(self, fname: str, data: bytes) -> bool:
+        """Journal-mode PUT: reserve in the shared journal (which evicts
+        victims — possibly a peer's — under its cross-process lock), then
+        write tmp + rename, then finalize.  A finalize that comes back False
+        means our reservation expired mid-write (writer slower than the
+        journal's reserve TTL): the renamed file is no longer accounted for,
+        so it must be unlinked rather than become untracked bytes."""
+        size = len(data)
+        with self._stripe(fname):
+            res = self.journal.reserve(fname, size)
+            if res.dedup:
+                return True
+            if not res.ok:
+                with self._lock:
+                    self._rejected += 1
+                return False
+            with self._lock:
+                self._evictions += res.evicted
+                self._bytes_evicted += res.evicted_bytes
+            tmp = self._path(fname) + f".tmp{os.getpid()}-{threading.get_ident()}"
+            try:
+                with open(tmp, "wb") as f:
+                    f.write(data)
+                os.replace(tmp, self._path(fname))
+            except OSError:
+                self.journal.abort(fname)
+                with self._lock:
+                    self._write_failures += 1
+                try:
+                    os.remove(tmp)
+                except OSError:
+                    pass
+                return False
+            if not self.journal.finalize(fname):
+                self._unlink([self._path(fname)])
+                with self._lock:
+                    self._write_failures += 1
+                return False
+            with self._lock:
+                self._admitted += 1
+                self._bytes_admitted += size
+        return True
+
     def put(self, key: str, data: bytes) -> bool:
         size = len(data)
         fname = self._fname(key)
+        if not self._owns(fname):
+            with self._lock:
+                self._shard_foreign += 1
+            return False
         if (self.capacity and size > self.capacity) or not self.admission.admit(key, size):
             with self._lock:
                 self._rejected += 1
             return False
+        if self.journal is not None:
+            return self._put_journal(fname, data)
         with self._stripe(fname):
             with self._lock:
                 if fname in self._index:
@@ -503,7 +668,12 @@ class DiskTierCache:
     def set_capacity(self, capacity_bytes: int) -> int:
         """A shrink can evict thousands of entries; victims are popped under
         the lock but unlinked after releasing it, so concurrent get/put
-        traffic is not stalled behind the whole deletion sweep."""
+        traffic is not stalled behind the whole deletion sweep.  In journal
+        mode the shared journal's capacity is authoritative and the change is
+        visible to every process sharing the directory."""
+        if self.journal is not None:
+            self.capacity = self.journal.set_capacity(capacity_bytes)
+            return self.capacity
         with self._lock:
             self.capacity = max(int(capacity_bytes), 0)
             paths = self._pop_victims_locked()
@@ -515,10 +685,18 @@ class DiskTierCache:
 
     @property
     def used_bytes(self) -> int:
+        if self.journal is not None:
+            return self.journal.used_bytes()
         with self._lock:
             return self._used
 
     def stats(self) -> CacheTierStats:
+        """Per-process counters; ``bytes_used`` is the tier-wide figure in
+        journal mode (each process's hit/miss/eviction counts describe its
+        own operations, which is what stays meaningful under contention)."""
+        bytes_used = (
+            self.journal.used_bytes() if self.journal is not None else None
+        )
         with self._lock:
             return CacheTierStats(
                 hits=self._hits,
@@ -527,9 +705,10 @@ class DiskTierCache:
                 admitted=self._admitted,
                 rejected=self._rejected,
                 write_failures=self._write_failures,
-                bytes_used=self._used,
+                bytes_used=self._used if bytes_used is None else bytes_used,
                 bytes_admitted=self._bytes_admitted,
                 bytes_evicted=self._bytes_evicted,
+                shard_foreign=self._shard_foreign,
             )
 
 

@@ -156,6 +156,22 @@ class SimulatedS3Store(ObjectStore):
     GET time = connection-pool wait + lognormal latency + size / bandwidth,
     where bandwidth = min(per-connection bw, NIC bw / concurrent transfers).
     Deterministic per (seed, key, attempt) so experiments are reproducible.
+
+    Two multi-process extensions (both inert by default):
+
+    * ``shared_active`` — a duck-typed counter (``add(delta) -> int``,
+      ``value() -> int``; e.g. :class:`repro.core.coord.SharedCounter`) that
+      several *processes* increment for their in-flight transfers, modelling
+      many loader hosts behind ONE physical NIC: the bandwidth divisor
+      becomes the fleet-wide active count instead of this process's.
+    * ``overload_penalty`` — congestion-collapse exponent: when the active
+      transfer count exceeds the NIC's saturation point
+      (``nic_bandwidth / bandwidth_per_conn``), service time additionally
+      scales by ``oversubscription ** overload_penalty`` (queueing /
+      bufferbloat tail).  With the default 0 extra concurrency never hurts
+      throughput, which is exactly the monotone regime where uncoordinated
+      autotuners look harmless; a positive penalty reproduces the collapse
+      that multi-host coordination exists to prevent.
     """
 
     def __init__(
@@ -169,6 +185,8 @@ class SimulatedS3Store(ObjectStore):
         failure_rate: float = 0.0,
         seed: int = 0,
         time_scale: float = 1.0,
+        overload_penalty: float = 0.0,
+        shared_active=None,
     ) -> None:
         self.base = base
         self.latency_mean_s = latency_mean_s
@@ -179,6 +197,8 @@ class SimulatedS3Store(ObjectStore):
         self.failure_rate = failure_rate
         self.seed = seed
         self.time_scale = time_scale
+        self.overload_penalty = overload_penalty
+        self.shared_active = shared_active
         self._sem = threading.BoundedSemaphore(max_connections)
         self._async_sems: Dict[int, asyncio.Semaphore] = {}
         self._active = 0
@@ -207,19 +227,31 @@ class SimulatedS3Store(ObjectStore):
         rng = self._rng(key, attempt)
         fail = rng.random() < self.failure_rate
         lat = rng.lognormvariate(0.0, self.latency_sigma) * self.latency_mean_s
-        with self._active_lock:
-            active = max(self._active, 1)
+        if self.shared_active is not None:
+            active = max(self.shared_active.value(), 1)
+        else:
+            with self._active_lock:
+                active = max(self._active, 1)
         bw = min(self.bandwidth_per_conn, self.nic_bandwidth / active)
         xfer = size / bw
-        return (lat + xfer) * self.time_scale, fail
+        dt = lat + xfer
+        if self.overload_penalty:
+            saturation = max(self.nic_bandwidth / self.bandwidth_per_conn, 1.0)
+            if active > saturation:
+                dt *= (active / saturation) ** self.overload_penalty
+        return dt * self.time_scale, fail
 
     def _enter(self) -> None:
         with self._active_lock:
             self._active += 1
+        if self.shared_active is not None:
+            self.shared_active.add(1)
 
     def _exit(self) -> None:
         with self._active_lock:
             self._active -= 1
+        if self.shared_active is not None:
+            self.shared_active.add(-1)
 
     def _bump(self, size: int, wait: float, failed: bool) -> None:
         with self._stats_lock:
@@ -286,6 +318,7 @@ class SimulatedS3Store(ObjectStore):
 # Caches — implemented in repro.data.cache; re-exported here for back-compat
 # ---------------------------------------------------------------------------
 
+from repro.core.coord import SharedDiskJournal  # noqa: E402
 from repro.data.cache import (  # noqa: E402
     CachedStore,
     DiskCacheStore,
@@ -331,30 +364,48 @@ def build_store(cfg: StoreConfig, base: Optional[ObjectStore] = None,
             failure_rate=cfg.failure_rate,
             seed=seed,
             time_scale=time_scale,
+            overload_penalty=cfg.overload_penalty,
         )
     if cfg.cache_dir and cfg.cache_bytes:
         # both tiers configured: a single two-tier store (memory over disk)
         store = TieredCacheStore(
             store,
             memory=MemoryTierCache(cfg.cache_bytes, shards=cfg.cache_shards),
-            disk=DiskTierCache(
-                cfg.cache_dir,
-                cfg.disk_cache_bytes,
-                make_admission(cfg.cache_admission, cfg.admission_max_item_bytes),
-            ),
+            disk=_build_disk_tier(cfg),
             admission_max_item_bytes=cfg.admission_max_item_bytes,
         )
     elif cfg.cache_dir:
-        store = DiskCacheStore(
+        store = TieredCacheStore(
             store,
-            cfg.cache_dir,
-            capacity_bytes=cfg.disk_cache_bytes,
-            admission=make_admission(
-                cfg.cache_admission, cfg.admission_max_item_bytes
-            ),
+            disk=_build_disk_tier(cfg),
+            admission_max_item_bytes=cfg.admission_max_item_bytes,
         )
     elif cfg.cache_bytes:
         store = CachedStore(store, cfg.cache_bytes)
     if tracer is not None and isinstance(store, TieredCacheStore):
         store.tracer = tracer
     return store
+
+
+def _build_disk_tier(cfg: StoreConfig) -> DiskTierCache:
+    """Disk tier per StoreConfig, including the multi-host coordination mode
+    (``cache_coord``): "" = private in-process accounting (single host),
+    "journal" = shared byte journal under ``cache_dir/.coord``, "shard" =
+    ``host_shard``-partitioned keyspace (per-host capacity)."""
+    journal = None
+    shard = None
+    if cfg.cache_coord == "journal":
+        journal = SharedDiskJournal(cfg.cache_dir, cfg.disk_cache_bytes)
+    elif cfg.cache_coord == "shard":
+        shard = (cfg.cache_coord_host_id, cfg.cache_coord_num_hosts)
+    elif cfg.cache_coord:
+        raise ValueError(
+            f"unknown cache_coord {cfg.cache_coord!r}; known: '', 'journal', 'shard'"
+        )
+    return DiskTierCache(
+        cfg.cache_dir,
+        cfg.disk_cache_bytes,
+        make_admission(cfg.cache_admission, cfg.admission_max_item_bytes),
+        journal=journal,
+        shard=shard,
+    )

@@ -115,6 +115,14 @@ def _make_ring(loader, depth: int, tracer) -> DevicePrefetchRing:
     return ring
 
 
+def _release_coordination(loader) -> None:
+    """End-of-fit courtesy for multi-host runs: hand back any held up-probe
+    lease so co-located hosts don't wait out the crash TTL before climbing."""
+    release = getattr(loader, "release_coordination", None)
+    if callable(release):
+        release()
+
+
 class Trainer:
     def __init__(
         self,
@@ -176,6 +184,7 @@ class Trainer:
             if done:
                 break
         self._hook("on_train_end")
+        _release_coordination(loader)
         return TrainResult(
             steps=self.global_step,
             epochs=epoch + 1,
@@ -216,6 +225,8 @@ def raw_train_loop(
             steps += 1
             if max_steps is not None and steps >= max_steps:
                 ring.close()
+                _release_coordination(loader)
                 return TrainResult(steps, epoch + 1, time.time() - t0, metrics, history)
         ring.close()
+    _release_coordination(loader)
     return TrainResult(steps, epochs, time.time() - t0, metrics, history)

@@ -176,15 +176,45 @@ def test_disk_tier_item_larger_than_capacity_rejected(tmp_path):
 def test_disk_tier_purges_orphan_tmp_files_on_init(tmp_path):
     d1 = DiskTierCache(str(tmp_path))
     d1.put("keep", b"payload")
-    # simulate a crashed writer: a stale tmp file next to a valid entry
+    # simulate a crashed writer: a STALE tmp file next to a valid entry
+    # (mtime backdated past the live-writer grace window)
     orphan = tmp_path / "deadbeef.tmp12345"
     orphan.write_bytes(b"partial write")
+    stale = time.time() - 3600
+    os.utime(orphan, (stale, stale))
     d2 = DiskTierCache(str(tmp_path))
     assert d2.orphans_removed == 1
     assert not orphan.exists()
     # the surviving entry was re-indexed (served without touching the origin)
     assert d2.get("keep") == b"payload"
     assert d2.used_bytes == len(b"payload")
+
+
+def test_disk_tier_init_spares_live_writers_fresh_tmp(tmp_path):
+    """Regression: on a directory shared with a LIVE process, a concurrent
+    writer's fresh tmp file must not be mis-counted as a crash orphan and
+    yanked out from under it mid-write."""
+    fresh = tmp_path / "cafebabe.tmp999"
+    fresh.write_bytes(b"another process is mid-write")
+    d = DiskTierCache(str(tmp_path))
+    assert d.orphans_removed == 0
+    assert fresh.exists()
+    # the in-flight entry is not adopted into the byte accounting either
+    assert d.used_bytes == 0
+    # ...but an explicit zero grace treats every tmp as orphaned (legacy)
+    d2 = DiskTierCache(str(tmp_path), tmp_grace_s=0.0)
+    assert d2.orphans_removed == 1 and not fresh.exists()
+
+
+def test_disk_tier_init_adopts_peer_written_final_entry(tmp_path):
+    """A finalized (atomically renamed) entry dropped in by another live
+    process is a valid cache entry, not an orphan: re-index must count it."""
+    d1 = DiskTierCache(str(tmp_path))
+    d1.put("peer-key", b"peer payload")
+    d2 = DiskTierCache(str(tmp_path))
+    assert d2.get("peer-key") == b"peer payload"
+    assert d2.used_bytes == len(b"peer payload")
+    assert d2.orphans_removed == 0
 
 
 def test_disk_tier_reload_respects_shrunk_capacity(tmp_path):

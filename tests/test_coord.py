@@ -1,0 +1,467 @@
+"""Multi-host coordination tests (repro.core.coord): file locks, key
+sharding, TTL leases, the shared disk journal under multiprocessing writers,
+cooperative up-probe gating in the autotuner, and the loader wiring."""
+import json
+import multiprocessing
+import os
+import threading
+import time
+
+import pytest
+
+from repro.config import AutotuneConfig, LoaderConfig, StoreConfig
+from repro.core.autotune import AutotuneController, Knob
+from repro.core.coord import (
+    FileLock,
+    SharedCounter,
+    SharedDiskJournal,
+    UpProbeLease,
+    host_shard,
+    validate_lease_events,
+)
+from repro.core.loader import ConcurrentDataLoader
+from repro.data.cache import DiskTierCache, MemoryTierCache, TieredCacheStore
+from repro.data.dataset import ImageDataset
+from repro.data.imagenet_synth import SyntheticImageStore
+from repro.data.store import InMemoryStore, build_store
+
+
+# ---------------------------------------------------------------------------
+# primitives
+# ---------------------------------------------------------------------------
+
+
+def test_file_lock_excludes_threads(tmp_path):
+    lock = FileLock(str(tmp_path / "l.lock"))
+    counter = {"v": 0, "max_inside": 0, "inside": 0}
+
+    def work():
+        for _ in range(50):
+            with lock:
+                counter["inside"] += 1
+                counter["max_inside"] = max(counter["max_inside"], counter["inside"])
+                v = counter["v"]
+                counter["v"] = v + 1
+                counter["inside"] -= 1
+
+    ts = [threading.Thread(target=work) for _ in range(4)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    assert counter["v"] == 200
+    assert counter["max_inside"] == 1
+
+
+def test_host_shard_stable_and_in_range():
+    for n in (1, 2, 3, 7):
+        for k in ("a", "img/000123.jpg", "x" * 100):
+            s = host_shard(k, n)
+            assert 0 <= s < n
+            assert s == host_shard(k, n)  # stable
+    # spread: 100 keys over 4 hosts should hit every shard
+    assert {host_shard(f"k{i}", 4) for i in range(100)} == {0, 1, 2, 3}
+
+
+def _count_worker(path, n):
+    c = SharedCounter(path)
+    for _ in range(n):
+        c.add(1)
+
+
+def test_shared_counter_across_processes(tmp_path):
+    path = str(tmp_path / "nic.count")
+    ctx = multiprocessing.get_context("spawn")
+    procs = [ctx.Process(target=_count_worker, args=(path, 25)) for _ in range(2)]
+    for p in procs:
+        p.start()
+    for p in procs:
+        p.join(timeout=60)
+    c = SharedCounter(path)
+    assert c.value() == 50
+    assert c.add(-50) == 0
+
+
+# ---------------------------------------------------------------------------
+# up-probe lease
+# ---------------------------------------------------------------------------
+
+
+def test_lease_mutual_exclusion_and_release(tmp_path):
+    a = UpProbeLease(str(tmp_path), owner="a", ttl_s=30)
+    b = UpProbeLease(str(tmp_path), owner="b", ttl_s=30)
+    assert a.try_acquire()
+    assert a.try_acquire()  # re-entrant for the holder
+    assert not b.try_acquire()
+    assert a.renew()
+    assert not b.renew()  # renew never steals
+    a.release()
+    assert b.try_acquire()
+    audit = validate_lease_events(a.read_events())
+    assert audit.ok and audit.holders == 2 and audit.acquisitions == 2
+
+
+def test_lease_ttl_expiry_heals_crashed_holder(tmp_path):
+    a = UpProbeLease(str(tmp_path), owner="crashed", ttl_s=0.2)
+    b = UpProbeLease(str(tmp_path), owner="survivor", ttl_s=30)
+    assert a.try_acquire()
+    assert not b.try_acquire()
+    time.sleep(0.25)  # "crashed" never releases; TTL lapses
+    assert b.try_acquire()
+    assert not a.renew()  # the old holder cannot resurrect its lease
+    audit = validate_lease_events(b.read_events())
+    assert audit.ok, audit.violations
+
+
+def test_lease_audit_flags_real_overlap(tmp_path):
+    a = UpProbeLease(str(tmp_path), owner="a", ttl_s=30)
+    assert a.try_acquire()
+    # forge a concurrent acquisition by a second owner (bypassing the lock
+    # discipline) — the auditor must catch it
+    with open(a.events_path, "a") as f:
+        f.write(json.dumps({"owner": "rogue", "event": "acquire",
+                            "t": time.time(), "expires_at": time.time() + 30}) + "\n")
+    audit = validate_lease_events(a.read_events())
+    assert not audit.ok and audit.violations
+
+
+# ---------------------------------------------------------------------------
+# shared disk journal: cross-process byte accounting (the tentpole bound)
+# ---------------------------------------------------------------------------
+
+
+def _journal_writer(cache_dir, capacity, wid, n_items, item_size, out_path):
+    tier = DiskTierCache(
+        cache_dir, capacity, journal=SharedDiskJournal(cache_dir, capacity)
+    )
+    for i in range(n_items):
+        tier.put(f"w{wid}-item{i}", bytes([wid]) * item_size)
+    s = tier.stats()
+    with open(out_path, "w") as f:
+        json.dump({"admitted": s.admitted, "evictions": s.evictions,
+                   "bytes_admitted": s.bytes_admitted,
+                   "bytes_evicted": s.bytes_evicted}, f)
+
+
+def _dir_bytes(d):
+    total = 0
+    for f in os.listdir(d):
+        if f.startswith("."):
+            continue
+        try:  # tmp files vanish between listdir and stat (live writers)
+            total += os.path.getsize(os.path.join(d, f))
+        except OSError:
+            pass
+    return total
+
+
+def test_two_process_writers_never_overshoot_capacity(tmp_path):
+    """Satellite: two multiprocessing writers against ONE shared disk tier
+    stay within capacity_bytes and converge to consistent stats."""
+    cache_dir = str(tmp_path / "shared")
+    os.makedirs(cache_dir)
+    capacity = 20_000
+    ctx = multiprocessing.get_context("spawn")
+    outs = [str(tmp_path / f"w{i}.json") for i in range(2)]
+    procs = [
+        ctx.Process(
+            target=_journal_writer,
+            args=(cache_dir, capacity, i, 30, 1_500, outs[i]),
+        )
+        for i in range(2)
+    ]
+    for p in procs:
+        p.start()
+    peak = 0
+    while any(p.is_alive() for p in procs):
+        peak = max(peak, _dir_bytes(cache_dir))
+        time.sleep(0.005)
+    for p in procs:
+        p.join(timeout=60)
+        assert p.exitcode == 0
+    peak = max(peak, _dir_bytes(cache_dir))
+    assert peak <= capacity, f"disk overshot: {peak} > {capacity}"
+
+    journal = SharedDiskJournal(cache_dir, capacity)
+    assert journal.used_bytes() <= capacity
+    # journal accounting agrees with the directory
+    assert journal.used_bytes() == _dir_bytes(cache_dir)
+    # stats converge: fleet-wide admitted - evicted bytes == bytes on disk
+    stats = [json.load(open(o)) for o in outs]
+    admitted = sum(s["bytes_admitted"] for s in stats)
+    evicted = sum(s["bytes_evicted"] for s in stats)
+    assert admitted - evicted == journal.used_bytes()
+
+
+def test_journal_reserve_expiry_reclaims_crashed_writer(tmp_path):
+    cache_dir = str(tmp_path)
+    j = SharedDiskJournal(cache_dir, 1_000, reserve_ttl_s=0.1)
+    assert j.reserve("dead", 900).ok  # reserved, then the "writer crashes"
+    # a live writer can't fit until the stale reservation expires
+    assert not j.reserve("live", 900).ok
+    time.sleep(0.15)
+    res = j.reserve("live", 900)
+    assert res.ok and res.evicted == 1
+    assert j.used_bytes() == 900
+
+
+def test_journal_rereserve_same_key_after_writer_crash(tmp_path):
+    """Regression: an EXPIRED provisional reservation for key K must not be
+    treated as a dedup hit — that would return True with no file ever
+    written, permanently blocking K from the cache (and pinning phantom
+    bytes under no capacity pressure)."""
+    cache_dir = str(tmp_path)
+    j = SharedDiskJournal(cache_dir, 0, reserve_ttl_s=0.05)  # unbounded
+    assert j.reserve("f", 100).ok  # writer crashes before writing
+    time.sleep(0.1)
+    res = j.reserve("f", 100)  # a live writer retries the same key
+    assert res.ok and not res.dedup  # fresh reservation, not a phantom hit
+    assert j.finalize("f")
+    assert j.used_bytes() == 100  # no double accounting
+
+
+def test_journal_eviction_reclaims_stalled_writers_tmp_bytes(tmp_path):
+    """A writer that stalls after writing its tmp file but past its
+    reservation TTL must not leave unaccounted bytes on disk when a peer
+    evicts the expired reservation (the fleet byte bound would be wrong)."""
+    cache_dir = str(tmp_path)
+    j = SharedDiskJournal(cache_dir, 1_000, reserve_ttl_s=0.05)
+    assert j.reserve("deadf00d", 900).ok
+    stalled_tmp = tmp_path / "deadf00d.tmp1234-5678"
+    stalled_tmp.write_bytes(b"s" * 900)  # stalled writer got this far
+    time.sleep(0.1)
+    res = j.reserve("11ve", 900)  # peer evicts the expired reservation
+    assert res.ok and res.evicted == 1
+    assert not stalled_tmp.exists()  # tmp bytes reclaimed with the budget
+
+
+def test_shard_mode_rejects_out_of_range_host_id(tmp_path):
+    with pytest.raises(ValueError, match="0-based"):
+        DiskTierCache(str(tmp_path), 1_000, shard=(3, 3))
+
+
+def test_journal_mode_tier_survives_reinit_and_external_delete(tmp_path):
+    cache_dir = str(tmp_path)
+    t1 = DiskTierCache(cache_dir, 10_000, journal=SharedDiskJournal(cache_dir, 10_000))
+    t1.put("k", b"v" * 100)
+    # a second process arrives: reconcile adopts nothing, keeps accounting
+    t2 = DiskTierCache(cache_dir, 10_000, journal=SharedDiskJournal(cache_dir, 10_000))
+    assert t2.used_bytes == 100
+    assert t2.get("k") == b"v" * 100
+    # external delete: first get repairs the shared accounting
+    os.remove(os.path.join(cache_dir, t2._fname("k")))
+    assert t2.get("k") is None
+    assert t2.used_bytes == 0
+
+
+# ---------------------------------------------------------------------------
+# shard mode
+# ---------------------------------------------------------------------------
+
+
+def test_shard_mode_partitions_accounting_but_shares_reads(tmp_path):
+    cache_dir = str(tmp_path)
+    hosts = [DiskTierCache(cache_dir, 100_000, shard=(i, 2)) for i in range(2)]
+    keys = [f"k{i}" for i in range(40)]
+    for k in keys:
+        owner = host_shard(k, 2)
+        assert hosts[owner].put(k, k.encode())
+        # the non-owner skips the write (peer's budget) but reads the entry
+        other = hosts[1 - owner]
+        assert not other.put(k, k.encode())
+        assert other.get(k) == k.encode()
+    for i, h in enumerate(hosts):
+        own = [k for k in keys if host_shard(k, 2) == i]
+        assert h.used_bytes == sum(len(k) for k in own)
+        assert h.stats().shard_foreign == len(keys) - len(own)
+    # re-init only adopts the host's own shard
+    h0b = DiskTierCache(cache_dir, 100_000, shard=(0, 2))
+    assert h0b.used_bytes == hosts[0].used_bytes
+
+
+# ---------------------------------------------------------------------------
+# cooperative autotune: the up-probe token serializes upward probes
+# ---------------------------------------------------------------------------
+
+
+def _mk_ctrl(tmp_path, name, vals):
+    def setter(v):
+        vals["fetch"] = max(1, min(int(v), 64))
+        return vals["fetch"]
+
+    cfg = AutotuneConfig(enabled=True, interval_batches=1, min_window_s=0.0,
+                         warmup_windows=1, coord_dir=str(tmp_path))
+    lease = UpProbeLease(str(tmp_path), owner=name, ttl_s=30)
+    knobs = [Knob("fetch", lambda: vals["fetch"], setter, 1, 64)]
+    return AutotuneController(cfg, knobs, probe_lease=lease)
+
+
+def test_cooperative_controllers_serialize_up_probes(tmp_path):
+    va, vb = {"fetch": 4}, {"fetch": 4}
+    a = _mk_ctrl(tmp_path, "host-a", va)
+    b = _mk_ctrl(tmp_path, "host-b", vb)
+    now = 0.0
+    for _ in range(3):  # a: anchor, warmup, baseline -> probe (acquires)
+        now += 1.0
+        a.on_batch(1, now=now)
+    assert any(e.action == "probe" for e in a.events)
+    assert a._lease_held
+    for _ in range(3):  # b wants up but the token is taken -> "lease" skip
+        now += 1.0
+        b.on_batch(1, now=now)
+    assert any(e.action == "lease" for e in b.events)
+    assert not any(e.action == "probe" for e in b.events)
+    assert vb["fetch"] == 4  # b never moved
+    # a reverts (simulated regression -> tput 0-ish) and releases the token
+    a.on_batch(1, now=now + 1)   # settle window passes
+    a.on_batch(1, now=now + 100)  # measured window: terrible tput -> revert
+    assert any(e.action == "revert" for e in a.events)
+    assert not a._lease_held
+    # now b's next window can climb
+    b.on_batch(1, now=now + 101)
+    assert any(e.action == "probe" for e in b.events)
+    audit = validate_lease_events(a.probe_lease.read_events())
+    assert audit.ok, audit.violations
+
+
+def test_release_coordination_is_idempotent_and_frees_peers(tmp_path):
+    v = {"fetch": 4}
+    a = _mk_ctrl(tmp_path, "host-a", v)
+    now = 0.0
+    for _ in range(3):
+        now += 1.0
+        a.on_batch(1, now=now)
+    assert a._lease_held
+    a.release_coordination()
+    a.release_coordination()
+    assert not a._lease_held
+    b = UpProbeLease(str(tmp_path), owner="host-b", ttl_s=30)
+    assert b.try_acquire()
+
+
+def test_controller_without_lease_is_unchanged(tmp_path):
+    """coord off => no lease object is ever consulted (bit-identical path)."""
+    cfg = AutotuneConfig(enabled=True, interval_batches=1, min_window_s=0.0,
+                         warmup_windows=1)
+    vals = {"fetch": 4}
+    ctrl = AutotuneController(
+        cfg,
+        [Knob("fetch", lambda: vals["fetch"],
+              lambda v: vals.update(fetch=int(v)) or vals["fetch"], 1, 64)],
+    )
+    assert ctrl.probe_lease is None
+    for i in range(10):
+        ctrl.on_batch(1, now=float(i))
+    assert any(e.action == "probe" for e in ctrl.events)
+    assert not os.listdir(str(tmp_path))  # nothing was written anywhere
+
+
+# ---------------------------------------------------------------------------
+# wiring: build_store coord modes + loader lease + epoch cache cadence
+# ---------------------------------------------------------------------------
+
+
+def test_build_store_journal_and_shard_modes(tmp_path):
+    base = InMemoryStore()
+    base.put("k", b"v" * 10)
+    cfg_j = StoreConfig(kind="memory", cache_dir=str(tmp_path / "j"),
+                        disk_cache_bytes=1_000, cache_coord="journal")
+    st = build_store(cfg_j, base=base)
+    assert st.get("k") == b"v" * 10
+    assert st.disk.journal is not None
+    cfg_s = StoreConfig(kind="memory", cache_dir=str(tmp_path / "s"),
+                        disk_cache_bytes=1_000, cache_coord="shard",
+                        cache_coord_host_id=1, cache_coord_num_hosts=4)
+    st2 = build_store(cfg_s, base=base)
+    assert st2.disk.shard == (1, 4)
+    with pytest.raises(ValueError):
+        build_store(
+            StoreConfig(kind="memory", cache_dir=str(tmp_path / "x"),
+                        cache_coord="bogus"),
+            base=base,
+        )
+
+
+def _tiny_loader(tmp_path, **auto_kw):
+    n = 48
+    store = SyntheticImageStore(n, seed=0, avg_kb=2)
+    cache = TieredCacheStore(
+        store,
+        memory=MemoryTierCache(4 << 10),
+        disk=DiskTierCache(str(tmp_path / "cache"), 1 << 20),
+    )
+    ds = ImageDataset(cache, n, out_size=8)
+    cfg = LoaderConfig(
+        impl="threaded", batch_size=8, num_workers=2, prefetch_factor=2,
+        num_fetch_workers=2,
+        autotune=AutotuneConfig(enabled=True, interval_batches=2,
+                                min_window_s=0.0, **auto_kw),
+    )
+    return ConcurrentDataLoader(ds, cfg)
+
+
+def test_loader_wires_probe_lease_from_coord_dir(tmp_path):
+    coord = tmp_path / "coord"
+    loader = _tiny_loader(tmp_path, coord_dir=str(coord))
+    assert loader.autotuner.probe_lease is not None
+    for _ in iter(loader):
+        pass
+    loader.release_coordination()
+    # the coord dir exists and the lease is free for a peer
+    peer = UpProbeLease(str(coord), owner="peer", ttl_s=30)
+    assert peer.try_acquire()
+
+
+def test_loader_epoch_cadence_runs_cache_knobs_on_second_controller(tmp_path):
+    loader = _tiny_loader(
+        tmp_path,
+        cache_cadence="epoch",
+        cache_epoch_windows=1,
+        max_memory_cache_bytes=1 << 20,
+    )
+    assert loader.cache_autotuner is not None
+    # the per-batch controller got NO cache knobs (they live on the epoch one)
+    for epoch in range(4):
+        if epoch:
+            loader.set_epoch(epoch)
+        for _ in iter(loader):
+            pass
+        assert all("cache" not in k.name for k in loader.autotuner.knobs)
+    cache_knobs = {k.name for k in loader.cache_autotuner.knobs}
+    assert "cache_mem_bytes" in cache_knobs
+    # fed once per epoch: anchor + 3 windows -> the controller probed
+    assert any(e.action == "probe" for e in loader.cache_autotuner.events)
+
+
+def test_loader_batch_cadence_keeps_cache_knobs_on_main_controller(tmp_path):
+    loader = _tiny_loader(tmp_path, max_memory_cache_bytes=1 << 20)
+    assert loader.cache_autotuner is None
+    it = iter(loader)
+    assert any(k.name == "cache_mem_bytes" for k in loader.autotuner.knobs)
+    for _ in it:
+        pass
+
+
+def test_loader_rejects_unknown_cache_cadence(tmp_path):
+    with pytest.raises(ValueError, match="cache_cadence"):
+        _tiny_loader(tmp_path, cache_cadence="epochs")
+
+
+def test_controller_aborts_up_probe_when_lease_renewal_lost(tmp_path):
+    """A TTL lapse mid-probe hands the token to a peer; the orphaned upward
+    move must be rolled back, not silently continued (two live up-probes)."""
+    vals = {"fetch": 4}
+    a = _mk_ctrl(tmp_path, "host-a", vals)
+    a.probe_lease.ttl_s = 0.05  # lapse between windows
+    now = 0.0
+    for _ in range(3):
+        now += 1.0
+        a.on_batch(1, now=now)
+    assert a._lease_held and vals["fetch"] > 4
+    time.sleep(0.1)  # TTL lapses...
+    b = UpProbeLease(str(tmp_path), owner="host-b", ttl_s=30)
+    assert b.try_acquire()  # ...and a peer takes the token
+    a.on_batch(1, now=now + 1.0)  # next window: renewal fails -> abort
+    assert not a._lease_held
+    assert vals["fetch"] == 4  # the orphaned up-move was rolled back
+    assert any(e.action == "revert" for e in a.events)
