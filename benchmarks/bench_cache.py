@@ -38,7 +38,6 @@ from benchmarks.common import (
     make_store,
 )
 from repro.config import AutotuneConfig
-from repro.core.autotune import AutotuneController, build_cache_knobs
 from repro.data.store import CachedStore
 
 NAME = "cache"
@@ -84,39 +83,43 @@ class _TierCell:
             cache_shards=4,
         )
         ds = make_image_dataset(self.store, scale)
-        self.loader = make_loader(ds, "threaded", scale, batch_size=16,
-                                  num_workers=2, prefetch_factor=2,
-                                  num_fetch_workers=16)
-        self.epoch = 0
-        self.ctrl = None
+        loader_kw = dict(batch_size=16, num_workers=2, prefetch_factor=2,
+                         num_fetch_workers=16)
         if autotuned:
             # Cache capacity pays off one epoch LATER (a full shuffled pass
-            # has no intra-epoch repeats), so the controller measures
-            # TWO-EPOCH windows: the same hill climber + knob surfaces the
-            # loader wires in, fed at the timescale on which this knob's
-            # reward actually materializes.  The dead-band ratchet (holds
-            # keep the probed value) walks capacity 0.05x -> 1.3x of the
-            # dataset within ~5 probe cycles, then parks at the wall.
-            # collapse_restore is off: on a shared 2-vCPU runner a slow
-            # *machine* phase would otherwise be blamed on the knobs.
-            # rel_improvement 0.25: on a noisy shared runner most probes
-            # land in the dead-band (hold keeps the value -> upward
-            # ratchet) instead of noise-reverting; the knob floor is the
-            # starting capacity so a bad revert can't walk below start
+            # has no intra-epoch repeats), so the knob is judged on
+            # TWO-EPOCH windows — exactly the loader's
+            # ``cache_cadence="epoch"`` wiring (a second controller fed once
+            # per completed epoch, cache_epoch_windows epochs per window),
+            # which this bench used to hand-roll around the loader.
+            # collapse_restore is forced off by that wiring: on a shared
+            # 2-vCPU runner a slow *machine* phase would otherwise be blamed
+            # on the knobs.  rel_improvement 0.25: on a noisy shared runner
+            # most probes land in the dead-band (hold keeps the value ->
+            # upward ratchet) instead of noise-reverting; the knob floor is
+            # the starting capacity so a bad revert can't walk below start.
+            # The loader-level knobs are pinned at their static values so
+            # the per-batch controller has nothing to move — this cell
+            # measures cache sizing, not fetch concurrency.
             at = AutotuneConfig(
-                enabled=True, interval_batches=2, min_window_s=0.0,
-                warmup_windows=1, rel_improvement=0.25, patience=100,
-                collapse_restore=False,
+                enabled=True, rel_improvement=0.25, patience=100,
+                cache_cadence="epoch", cache_epoch_windows=2,
+                min_fetch_workers=16, max_fetch_workers=16,
+                min_outstanding=4, max_outstanding=4,
                 min_memory_cache_bytes=int(0.05 * self.dataset_bytes),
                 max_memory_cache_bytes=int(1.3 * self.dataset_bytes),
                 min_disk_cache_bytes=disk_cap,
                 max_disk_cache_bytes=disk_cap,
                 tune_admission=False,
             )
-            self.ctrl = AutotuneController(at, build_cache_knobs(at, self.store))
+            loader_kw["autotune"] = at
+        self.loader = make_loader(ds, "threaded", scale, **loader_kw)
+        self.epoch = 0
+        self.ctrl = self.loader.cache_autotuner  # None unless autotuned
 
     def run_epoch(self) -> float:
-        """Drain one epoch; feed the controller (if any); return img/s."""
+        """Drain one epoch (the loader feeds its epoch-cadence cache
+        controller at the end of each pass); return img/s."""
         if self.epoch:
             self.loader.set_epoch(self.epoch)
         self.epoch += 1
@@ -124,10 +127,7 @@ class _TierCell:
         items = 0
         for batch in self.loader:
             items += len(batch["label"])
-        tput = items / (time.monotonic() - t0)
-        if self.ctrl is not None:
-            self.ctrl.on_batch(self.scale.dataset_items, now=time.monotonic())
-        return tput
+        return items / (time.monotonic() - t0)
 
     def row(self, steady: float) -> dict:
         disk = self.store.disk
@@ -197,7 +197,7 @@ def run(scale: Scale) -> Result:
             # span the other cells' epochs — an apparent 5x collapse that
             # would re-arm the controller and move knobs during the very
             # epochs the claim is judged on.
-            tuned_cell.ctrl = None
+            tuned_cell.loader.cache_autotuner = None
             # settle at the final capacity: residency takes one full pass
             # to build, and the fixed cells got that via their warm-up
             for _ in range(SETTLE_EPOCHS):
@@ -219,7 +219,7 @@ def run(scale: Scale) -> Result:
             # walk (same spirit as bench_autotune's best-of-3 attempts) —
             # drop the paused window and give the controller another round
             ctrl.reset_window()
-            tuned_cell.ctrl = ctrl
+            tuned_cell.loader.cache_autotuner = ctrl
         rows.extend(c.row(steady[c.label]) for c in all_cells)
         bounded_ok = all(c.bounded() for c in all_cells)
         tuned_row = rows[-2]

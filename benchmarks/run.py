@@ -24,6 +24,7 @@ BENCHES = [
     "bench_cache",         # Fig 9
     "bench_heatmap",       # Figs 10/11
     "bench_autotune",      # Figs 10/11, online (closed-loop knob control)
+    "bench_pipeline",      # beyond paper: staged streaming pipeline (stages)
     "bench_multihost",     # beyond paper: multi-host coordination (coord)
     "bench_dataset_pool",  # Fig 12
     "bench_e2e",           # Figs 13/14/15

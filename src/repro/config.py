@@ -193,7 +193,7 @@ class StoreConfig:
     # largest cacheable item at cache_bytes // cache_shards — opt in only
     # when single objects are far smaller than the memory budget.
     cache_shards: int = 1
-    # disk-tier admission: admit-all | size-threshold | second-hit
+    # disk-tier admission: admit-all | size-threshold | second-hit | tinylfu
     cache_admission: str = "admit-all"
     admission_max_item_bytes: int = 1 << 20  # size-threshold policy cutoff
     # multi-host disk-tier coordination (repro.core.coord) when several
@@ -306,6 +306,14 @@ class AutotuneConfig:
     # expires after coord_ttl_s.
     coord_dir: str = ""
     coord_ttl_s: float = 30.0
+    # staged-pipeline stage knobs (LoaderConfig.pipeline): CPU executor width
+    # and the fetch->decode queue depth.  The IO executor reuses the
+    # min/max_fetch_workers bounds above — it gates the same resource (in-
+    # flight GETs) the per-worker fetch pool gated in the legacy path.
+    min_cpu_workers: int = 1
+    max_cpu_workers: int = 32
+    min_stage_queue: int = 4
+    max_stage_queue: int = 512
 
 
 @dataclass(frozen=True)
@@ -327,6 +335,32 @@ class LoaderConfig:
     hedge_factor: float = 3.0
     hedge_min_s: float = 0.05
     timeout_s: float = 120.0
+    # staged streaming pipeline (repro.core.pipeline): replaces the
+    # worker/fetcher path with an explicit stage graph (fetch-raw -> decode
+    # -> augment -> collate) on dedicated IO and CPU executors with sample-
+    # level out-of-order completion.  Off by default: the legacy path runs
+    # untouched and bit-identically.
+    pipeline: bool = False
+    # batch-assembly policy when the pipeline is on:
+    #   "strict" — every batch holds exactly its sampler-assigned samples in
+    #              sampler order, delivered in batch order (bit-identical to
+    #              the legacy loader's stream)
+    #   "window" — within each aligned group of `reorder_window` batches,
+    #              batch slots are filled by whichever of the group's samples
+    #              finish first (first-N-ready composition); a straggler only
+    #              delays the last batch of its group, not its own batch
+    reorder: str = "strict"
+    reorder_window: int = 4
+    # pipeline stage sizing.  0 = derive: io_workers defaults to
+    # num_workers * num_fetch_workers (the legacy loader's total fetch
+    # thread count, so pipeline-vs-legacy comparisons run at equal
+    # concurrency); cpu_workers defaults to 4.
+    io_workers: int = 0
+    cpu_workers: int = 0
+    # bounded fetch->decode queue (in samples).  A full queue blocks the IO
+    # threads that try to feed it — that stall is the pipeline's
+    # backpressure, and the depth is an autotune knob.
+    stage_queue_depth: int = 64
     # online knob control (off by default: behaviour is bit-identical to a
     # statically configured loader when disabled)
     autotune: AutotuneConfig = AutotuneConfig()

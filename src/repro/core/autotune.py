@@ -667,6 +667,74 @@ def build_loader_knobs(
     return knobs
 
 
+def build_pipeline_knobs(
+    cfg: AutotuneConfig,
+    *,
+    get_io: Callable[[], int],
+    set_io: Callable[[int], int],
+    get_cpu: Callable[[], int],
+    set_cpu: Callable[[int], int],
+    get_outstanding: Callable[[], int],
+    set_outstanding: Callable[[int], int],
+    get_queue: Callable[[], int],
+    set_queue: Callable[[int], int],
+    hedge: Optional[Any] = None,
+    max_io: Optional[int] = None,
+    max_cpu: Optional[int] = None,
+    max_outstanding: Optional[int] = None,
+    max_queue: Optional[int] = None,
+) -> List[Knob]:
+    """Per-stage knob set for a staged-pipeline ``_PipelineIter``: IO
+    executor width, CPU executor width, the outstanding sample window (in
+    batches) and the fetch->decode queue depth — each stage tuned
+    independently, which is the point of splitting the stages at all.
+
+    ``max_*`` widen the configured ceilings when the static config already
+    sits above them (enabling autotune must never cap the loader); IO
+    workers share the ``min/max_fetch_workers`` bounds since they gate the
+    same resource the legacy per-worker fetch pools did."""
+    knobs = [
+        Knob(
+            name="io_workers",
+            get=get_io,
+            set=set_io,
+            lo=cfg.min_fetch_workers,
+            hi=max(cfg.max_fetch_workers, max_io or 0),
+        ),
+        Knob(
+            name="cpu_workers",
+            get=get_cpu,
+            set=set_cpu,
+            lo=cfg.min_cpu_workers,
+            hi=max(cfg.max_cpu_workers, max_cpu or 0),
+        ),
+        Knob(
+            name="outstanding",
+            get=get_outstanding,
+            set=set_outstanding,
+            lo=cfg.min_outstanding,
+            hi=max(cfg.max_outstanding, max_outstanding or 0),
+        ),
+        Knob(
+            name="stage_queue",
+            get=get_queue,
+            set=set_queue,
+            lo=cfg.min_stage_queue,
+            hi=max(cfg.max_stage_queue, max_queue or 0),
+        ),
+    ]
+    if cfg.tune_hedge and hedge is not None:
+        def _get_hedge() -> int:
+            return int(hedge.enabled)
+
+        def _set_hedge(v: int) -> int:
+            hedge.enabled = bool(v)
+            return int(hedge.enabled)
+
+        knobs.append(Knob("hedge", _get_hedge, _set_hedge, 0, 1))
+    return knobs
+
+
 def build_cache_knobs(cfg: AutotuneConfig, cache: Any) -> List[Knob]:
     """Knobs for a ``TieredCacheStore``-shaped object (duck-typed so
     ``repro.core`` never imports ``repro.data``): memory capacity, disk

@@ -30,7 +30,7 @@ import threading
 import time
 from collections import deque
 from concurrent.futures import FIRST_COMPLETED, Future, ThreadPoolExecutor, wait
-from typing import Any, List, Optional, Sequence
+from typing import Any, Callable, List, Optional, Sequence
 
 from repro.data.dataset import Item, MapDataset
 from repro.data.store import TransientStoreError
@@ -121,14 +121,32 @@ class HedgeTracker:
         return max(self.min_s, p95 * self.factor)
 
 
-def _fetch_one_with_retry(dataset: MapDataset, index: int) -> Item:
+def retry_transient(fn: Callable[[int], Any], index: int) -> Any:
+    """Call ``fn(index)`` retrying transient store errors — the single
+    definition of the data-layer retry policy (shared with the staged
+    pipeline's get_raw/monolithic fetch paths)."""
     err: Optional[Exception] = None
     for _ in range(MAX_RETRIES):
         try:
-            return dataset[index]
+            return fn(index)
         except TransientStoreError as e:  # injected/transient — retry
             err = e
     raise FetchError(f"item {index} failed after {MAX_RETRIES} retries") from err
+
+
+async def aretry_transient(coro_fn: Callable[[int], Any], index: int) -> Any:
+    """Async twin of :func:`retry_transient` (``coro_fn(index)`` awaited)."""
+    err: Optional[Exception] = None
+    for _ in range(MAX_RETRIES):
+        try:
+            return await coro_fn(index)
+        except TransientStoreError as e:
+            err = e
+    raise FetchError(f"item {index} failed after {MAX_RETRIES} retries") from err
+
+
+def _fetch_one_with_retry(dataset: MapDataset, index: int) -> Item:
+    return retry_transient(dataset.__getitem__, index)
 
 
 class Fetcher:
@@ -299,14 +317,8 @@ class AsyncioFetcher(Fetcher):
 
     async def _afetch_one(self, dataset: MapDataset, index: int,
                           sem: asyncio.Semaphore) -> Item:
-        err: Optional[Exception] = None
         async with sem:
-            for _ in range(MAX_RETRIES):
-                try:
-                    return await dataset.aget_item(index)
-                except TransientStoreError as e:
-                    err = e
-        raise FetchError(f"item {index} failed after {MAX_RETRIES} retries") from err
+            return await aretry_transient(dataset.aget_item, index)
 
     async def _afetch(self, dataset: MapDataset, indices: Sequence[int]) -> List[Item]:
         sem = asyncio.Semaphore(self._num_fetch_workers)

@@ -25,6 +25,7 @@ import os
 import queue
 import threading
 import time
+import weakref
 from dataclasses import replace
 from typing import Any, Callable, Dict, Iterator, List, Optional
 
@@ -82,6 +83,25 @@ class ConcurrentDataLoader:
     ) -> None:
         if cfg.impl not in ("vanilla", "threaded", "asyncio"):
             raise ValueError(f"unknown loader impl {cfg.impl!r}")
+        if cfg.reorder not in ("strict", "window"):
+            raise ValueError(
+                f"unknown reorder {cfg.reorder!r}; known: 'strict', 'window'"
+            )
+        if cfg.pipeline:
+            # fail at construction, naming the field — not at first iter()
+            # with an opaque semaphore error from deep inside a stage
+            if cfg.impl == "vanilla":
+                raise ValueError(
+                    "pipeline=True requires impl 'threaded' or 'asyncio' "
+                    "(vanilla's sequential fetch has no staged equivalent)"
+                )
+            if cfg.reorder_window < 1:
+                raise ValueError("reorder_window must be >= 1")
+            for field in ("io_workers", "cpu_workers"):
+                if getattr(cfg, field) < 0:
+                    raise ValueError(f"{field} must be >= 0 (0 = derive)")
+            if cfg.stage_queue_depth < 1:
+                raise ValueError("stage_queue_depth must be >= 1")
         self.dataset = dataset
         self.cfg = cfg
         self.host_id = host_id
@@ -195,8 +215,50 @@ class ConcurrentDataLoader:
     def __len__(self) -> int:
         return len(self.sampler)
 
-    def __iter__(self) -> "_LoaderIter":
-        return _LoaderIter(self)
+    def __iter__(self):
+        if self.cfg.pipeline:
+            # staged streaming path (repro.core.pipeline): stage graph with
+            # dedicated IO/CPU executors + out-of-order sample completion
+            from repro.core.pipeline import _PipelineIter
+
+            it = _PipelineIter(self)
+        else:
+            it = _LoaderIter(self)
+        # weakref: observability must not pin an abandoned iterator (and its
+        # worker/stage threads) past the consumer dropping it — __del__-based
+        # shutdown relies on refcount collection
+        self._active_iter = weakref.ref(it)
+        return it
+
+    def stage_stats(self) -> Optional[Dict[str, Any]]:
+        """Per-stage snapshot of the most recent pipeline iterator (queue
+        occupancy, executor widths, hedges), plus the device-prefetch ring
+        depth when the trainer attached one.  None outside pipeline mode."""
+        ref = getattr(self, "_active_iter", None)
+        it = ref() if ref is not None else None
+        stats_fn = getattr(it, "stage_stats", None)
+        if stats_fn is None:
+            # iterator already collected (or legacy mode): fall back to the
+            # final snapshot the pipeline iterator left at shutdown
+            out = getattr(self, "_last_stage_stats", None)
+            if out is None:
+                return None
+            out = dict(out)
+        else:
+            out = stats_fn()
+        ring_ref = getattr(self, "_device_ring", None)
+        ring = ring_ref() if ring_ref is not None else None
+        if ring is not None:
+            out["device_prefetch_depth"] = ring.depth
+        return out
+
+    def note_device_ring(self, ring: Any) -> None:
+        """Trainer hook: the device-prefetch ring is the pipeline's final
+        stage; remembering it folds its depth into ``stage_stats``.  Held
+        weakly — the ring owns ``iter(loader)``, so a strong reference here
+        would pin each epoch's iterator (and its stage threads) past the
+        trainer dropping the ring."""
+        self._device_ring = weakref.ref(ring)
 
     def _note_epoch_end(self) -> None:
         """Feed the epoch-cadence cache controller one completed epoch
@@ -210,6 +272,27 @@ class ConcurrentDataLoader:
         for ctrl in (self.autotuner, self.cache_autotuner):
             if ctrl is not None:
                 ctrl.release_coordination()
+
+
+def deliver_traced(it) -> Any:
+    """Shared ``__next__`` body for ``_LoaderIter`` and the pipeline's
+    iterator: one ``get_batch`` span per delivered batch (tagged with the
+    batch's byte count) and the autotuner's ``on_batch`` at the safe
+    between-batch boundary — knob moves only affect how FUTURE work is
+    dispatched, never delivery order.  The end-of-epoch drain (sampler
+    exhausted, window shrinking) is excluded: its throughput says nothing
+    about the knobs.  One definition so the two iterators can never
+    desynchronize on this contract."""
+    t0 = time.monotonic()
+    batch = it._next_impl()  # StopIteration passes through untraced
+    args = {}
+    if isinstance(batch, dict) and "nbytes" in batch:
+        args["nbytes"] = int(batch["nbytes"].sum())
+    it.tracer.record(GET_BATCH, t0, time.monotonic(), **args)
+    auto = it.loader.autotuner
+    if auto is not None and not it._exhausted:
+        auto.on_batch()
+    return batch
 
 
 class _LoaderIter:
@@ -366,20 +449,7 @@ class _LoaderIter:
         return self
 
     def __next__(self) -> Any:
-        t0 = time.monotonic()
-        batch = self._next_impl()  # StopIteration passes through untraced
-        args = {}
-        if isinstance(batch, dict) and "nbytes" in batch:
-            args["nbytes"] = int(batch["nbytes"].sum())
-        self.tracer.record(GET_BATCH, t0, time.monotonic(), **args)
-        auto = self.loader.autotuner
-        if auto is not None and not self._exhausted:
-            # safe boundary: the batch is already delivered; knob moves only
-            # affect how FUTURE work is dispatched, never delivery order.
-            # The end-of-epoch drain (sampler exhausted, window shrinking) is
-            # excluded — its throughput says nothing about the knobs.
-            auto.on_batch()
-        return batch
+        return deliver_traced(self)
 
     def _next_impl(self) -> Any:
         if self._shutdown:

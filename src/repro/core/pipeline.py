@@ -1,0 +1,823 @@
+"""Staged streaming pipeline — the loader behind ``LoaderConfig.pipeline``.
+
+The legacy worker/fetcher path treats ``dataset[i]`` as one opaque unit, so
+network fetch, decode and augmentation all run on the same fetch thread:
+slow CPU preprocessing blocks IO concurrency, a straggler GET parks the
+CPU, and a worker's whole thread pool idles through the tail of every batch
+(head-of-line blocking at the batch boundary).  This module splits the item
+path into an explicit stage graph::
+
+    sampler -> [fetch-raw | IO executor] -> bounded queue
+            -> [decode -> augment | CPU executor] -> completion queue
+            -> [assembler: collate] -> consumer (-> device-prefetch ring)
+
+* **IO executor** — thread pool or asyncio event loop (``LoaderConfig.impl``)
+  whose effective concurrency is an :class:`AdjustableSemaphore` gate, with
+  optional hedged duplicates for straggler GETs (reusing
+  :class:`~repro.core.fetcher.HedgeTracker`).
+* **CPU executor** — a separate gated thread pool running
+  ``decode_raw`` + ``augment_item`` (datasets exposing the split path;
+  see :class:`repro.data.dataset.MapDataset`).  Datasets that cannot split
+  fall back to the monolithic ``__getitem__`` on the IO executor.
+* **Out-of-order completion** — samples finish in whatever order storage and
+  CPU allow; the assembler composes batches per ``LoaderConfig.reorder``:
+  ``"strict"`` rebuilds exactly the legacy stream (same samples, same order,
+  bit-identical), ``"window"`` fills each aligned group of
+  ``reorder_window`` batch slots with whichever of the group's samples
+  finish first, so a straggler only delays the *last* batch of its group.
+* **Per-stage observability** — every sample records ``stage_fetch`` /
+  ``stage_decode`` / ``stage_augment`` spans and every batch a
+  ``stage_collate`` span; inter-stage queues track occupancy
+  (:meth:`_PipelineIter.stage_stats`), which is how ``bench_pipeline``
+  proves decode/IO overlap.
+* **Per-stage tuning** — io workers, cpu workers, the outstanding sample
+  window and the fetch->decode queue depth are live knobs registered with
+  the loader's :class:`~repro.core.autotune.AutotuneController`
+  (:func:`~repro.core.autotune.build_pipeline_knobs`).
+"""
+from __future__ import annotations
+
+import asyncio
+import queue
+import threading
+import time
+import weakref
+from collections import deque
+from concurrent.futures import ThreadPoolExecutor
+from typing import Any, Dict, List, Optional, Tuple
+
+from repro.core.fetcher import (
+    AdjustableSemaphore,
+    aretry_transient,
+    retry_transient,
+)
+from repro.core.sampler import BatchIndices
+from repro.core.tracing import (
+    STAGE_AUGMENT,
+    STAGE_COLLATE,
+    STAGE_DECODE,
+    STAGE_FETCH,
+)
+
+
+class _Sample:
+    """One flattened unit of work flowing through the stage graph."""
+
+    __slots__ = ("batch_id", "pos", "index", "raw")
+
+    def __init__(self, batch_id: int, pos: int, index: int) -> None:
+        self.batch_id = batch_id
+        self.pos = pos
+        self.index = index
+        self.raw: Any = None
+
+
+class _Failure:
+    """Exception carrier routed through the completion queue."""
+
+    __slots__ = ("exc",)
+
+    def __init__(self, exc: BaseException) -> None:
+        self.exc = exc
+
+
+class _BoundedQ:
+    """FIFO whose capacity is an :class:`AdjustableSemaphore`, so queue depth
+    is a live autotune knob.  ``put`` blocks while the downstream stage is
+    full (polling the pipeline stop event) — that stall, propagating back to
+    the IO gate, is the pipeline's backpressure.  Tracks occupancy so the
+    bottleneck stage is visible (a full fetch->decode queue = CPU-bound, an
+    empty one = IO-bound)."""
+
+    def __init__(self, depth: int, stop: threading.Event) -> None:
+        self._q: "queue.Queue" = queue.Queue()
+        self._cap = AdjustableSemaphore(max(1, depth))
+        self._stop = stop
+        self._lock = threading.Lock()
+        self._occ_sum = 0
+        self._occ_n = 0
+        self._occ_max = 0
+
+    @property
+    def depth(self) -> int:
+        return self._cap.limit
+
+    def resize(self, depth: int, hi: int) -> int:
+        d = max(1, min(int(depth), hi))
+        self._cap.set_limit(d)
+        return d
+
+    def _note(self) -> None:
+        size = self._q.qsize()
+        with self._lock:
+            self._occ_sum += size
+            self._occ_n += 1
+            self._occ_max = max(self._occ_max, size)
+
+    def put(self, item: Any) -> bool:
+        while not self._cap.acquire(timeout=0.1):
+            if self._stop.is_set():
+                return False
+        self._q.put(item)
+        self._note()
+        return True
+
+    def get(self, timeout: float = 0.1) -> Any:
+        item = self._q.get(timeout=timeout)  # queue.Empty passes through
+        self._cap.release()
+        self._note()
+        return item
+
+    def occupancy(self) -> Dict[str, float]:
+        with self._lock:
+            mean = self._occ_sum / self._occ_n if self._occ_n else 0.0
+            return {
+                "depth": self._cap.limit,
+                "now": self._q.qsize(),
+                "mean": round(mean, 2),
+                "max": self._occ_max,
+            }
+
+
+# ---------------------------------------------------------------------------
+# IO stage
+# ---------------------------------------------------------------------------
+
+
+class _IOStage:
+    """Fetch-raw stage: a dedicated IO executor (thread pool or asyncio loop)
+    gated by an :class:`AdjustableSemaphore`.
+
+    Admission is caller-side: :meth:`submit` parks samples in a pending deque
+    and ``_kick`` moves them onto the executor only when a gate permit is
+    free, so idle executor threads never pile up behind the gate and a
+    ``resize`` takes effect at the next admission.  The gate permit is held
+    across the fetch AND the (possibly blocking) hand-off into the
+    fetch->decode queue: when decode backs up, IO concurrency drains to zero
+    instead of buffering unboundedly.
+
+    Hedging (threaded mode, reusing :class:`HedgeTracker`): the assembler
+    loop calls :meth:`hedge_scan`; any in-flight fetch older than the p95
+    deadline gets one ungated duplicate on the pool's headroom threads, and
+    the first completion wins.
+    """
+
+    def __init__(
+        self,
+        dataset,
+        *,
+        mode: str,  # "threaded" | "asyncio"
+        width: int,
+        hard_cap: int,
+        split: bool,
+        decode_q: _BoundedQ,
+        done_q: "queue.Queue",
+        stop: threading.Event,
+        tracer,
+        hedge=None,
+    ) -> None:
+        self.dataset = dataset
+        self.mode = mode
+        self.split = split
+        self.decode_q = decode_q
+        self.done_q = done_q
+        self.stop = stop
+        self.tracer = tracer
+        self.hedge = hedge if mode == "threaded" else None
+        self.hard_cap = max(width, hard_cap)
+        self.gate = AdjustableSemaphore(width)
+        self._pending: deque = deque()
+        self._lock = threading.Lock()
+        # in-flight registry: id(sample) -> (sample, t0).  Doubles as the
+        # first-response-wins arbiter for hedged fetches: whichever copy
+        # pops the entry owns the sample; the loser finds it gone and drops
+        # its result.
+        self._inflight: Dict[int, Tuple[_Sample, float]] = {}
+        if mode == "asyncio":
+            self._loop = asyncio.new_event_loop()
+            self._thread = threading.Thread(
+                target=self._loop.run_forever, name="pipe-io-loop", daemon=True
+            )
+            self._thread.start()
+            self._pool = None
+        else:
+            self._loop = None
+            # +2 headroom threads so hedge duplicates can run while every
+            # gated slot is busy with stragglers
+            self._pool = ThreadPoolExecutor(
+                max_workers=self.hard_cap + 2, thread_name_prefix="pipe-io"
+            )
+
+    # -- admission -----------------------------------------------------------
+    def submit(self, sample: _Sample) -> None:
+        with self._lock:
+            self._pending.append(sample)
+        self._kick()
+
+    def _kick(self) -> None:
+        while True:
+            with self._lock:
+                if not self._pending or not self.gate.acquire(timeout=0):
+                    return
+                s = self._pending.popleft()
+            if self._loop is not None:
+                asyncio.run_coroutine_threadsafe(self._afetch(s), self._loop)
+            else:
+                self._pool.submit(self._run_fetch, s)
+
+    def resize(self, width: int) -> int:
+        w = max(1, min(int(width), self.hard_cap))
+        self.gate.set_limit(w)
+        self._kick()  # a raised limit admits parked samples immediately
+        return w
+
+    # -- completion (first response wins when hedged) ------------------------
+    def _complete(self, s: _Sample, raw: Any) -> bool:
+        """Route a finished fetch downstream; returns False when the other
+        copy of a hedged fetch already claimed the sample."""
+        with self._lock:
+            if self._inflight.pop(id(s), None) is None:
+                return False
+        if self.split:
+            s.raw = raw
+            self.decode_q.put(s)
+        else:
+            self.done_q.put((s, raw))  # raw IS the finished item (monolithic)
+        return True
+
+    def _fail(self, s: _Sample, exc: BaseException) -> None:
+        with self._lock:
+            if self._inflight.pop(id(s), None) is None:
+                return  # a hedge duplicate already delivered this sample
+        self.done_q.put((s, _Failure(exc)))
+
+    # -- threaded fetch ------------------------------------------------------
+    def _fetch_value(self, s: _Sample) -> Any:
+        if self.split:
+            return retry_transient(self.dataset.get_raw, s.index)
+        return retry_transient(self.dataset.__getitem__, s.index)
+
+    def _run_fetch(self, s: _Sample) -> None:
+        t0 = time.monotonic()
+        with self._lock:
+            self._inflight[id(s)] = (s, t0)
+        try:
+            raw = self._fetch_value(s)
+            t1 = time.monotonic()
+            self.tracer.record(STAGE_FETCH, t0, t1, index=s.index,
+                               batch_id=s.batch_id)
+            if self.hedge is not None:
+                self.hedge.observe(t1 - t0)
+            self._complete(s, raw)
+        except BaseException as e:
+            self._fail(s, e)
+        finally:
+            self.gate.release()
+            self._kick()
+
+    def _run_hedge(self, s: _Sample) -> None:
+        """Ungated duplicate of a straggling fetch; first completion wins."""
+        t0 = time.monotonic()
+        try:
+            raw = self._fetch_value(s)
+            self.tracer.record(STAGE_FETCH, t0, time.monotonic(),
+                               index=s.index, batch_id=s.batch_id, hedge=True)
+            if self._complete(s, raw) and self.hedge is not None:
+                self.hedge.hedges_won += 1
+        except BaseException:
+            pass  # the original is still in flight; let it decide the outcome
+
+    def hedge_scan(self) -> None:
+        """Issue duplicates for fetches past the p95 deadline (called from
+        the assembler loop, so hedging needs no dedicated timer thread)."""
+        if self.hedge is None or not self.hedge.enabled or self._pool is None:
+            return
+        deadline = self.hedge.deadline()
+        now = time.monotonic()
+        stale: List[_Sample] = []
+        with self._lock:
+            for s, t0 in self._inflight.values():
+                if now - t0 > deadline:
+                    stale.append(s)
+            for s in stale:  # re-arm so one straggler hedges only once
+                self._inflight[id(s)] = (s, now + 3600.0)
+        for s in stale:
+            self.hedge.hedges_issued += 1
+            self._pool.submit(self._run_hedge, s)
+
+    # -- asyncio fetch -------------------------------------------------------
+    async def _afetch(self, s: _Sample) -> None:
+        t0 = time.monotonic()
+        with self._lock:
+            # registered so _fail's first-wins pop finds an entry (asyncio
+            # never hedges, but the completion protocol is shared)
+            self._inflight[id(s)] = (s, t0)
+        try:
+            fetch = self.dataset.aget_raw if self.split else self.dataset.aget_item
+            raw = await aretry_transient(fetch, s.index)
+            self.tracer.record(STAGE_FETCH, t0, time.monotonic(),
+                               index=s.index, batch_id=s.batch_id)
+            with self._lock:
+                self._inflight.pop(id(s), None)
+            if self.split:
+                s.raw = raw
+                # the decode queue put can block (backpressure); keep it off
+                # the event loop so other in-flight GETs continue
+                await asyncio.get_running_loop().run_in_executor(
+                    None, self.decode_q.put, s
+                )
+            else:
+                self.done_q.put((s, raw))
+        except BaseException as e:
+            self._fail(s, e)
+        finally:
+            self.gate.release()
+            self._kick()
+
+    def close(self) -> None:
+        if self._pool is not None:
+            self._pool.shutdown(wait=False, cancel_futures=True)
+        if self._loop is not None:
+            self._loop.call_soon_threadsafe(self._loop.stop)
+            self._thread.join(timeout=5)
+            if not self._loop.is_running():
+                self._loop.close()
+
+
+# ---------------------------------------------------------------------------
+# CPU stage
+# ---------------------------------------------------------------------------
+
+
+class _CPUStage:
+    """decode + augment on a dedicated gated thread pool.
+
+    ``hard_cap`` threads exist; effective parallelism is the gate, so the
+    autotuner resizes without thread churn.  The gate is acquired BEFORE
+    pulling from the fetch->decode queue — a surplus thread waits empty-
+    handed rather than holding a sample hostage behind the gate."""
+
+    def __init__(
+        self,
+        dataset,
+        *,
+        width: int,
+        hard_cap: int,
+        decode_q: _BoundedQ,
+        done_q: "queue.Queue",
+        stop: threading.Event,
+        tracer,
+    ) -> None:
+        self.dataset = dataset
+        self.decode_q = decode_q
+        self.done_q = done_q
+        self.stop = stop
+        self.tracer = tracer
+        self.hard_cap = max(width, hard_cap)
+        self.gate = AdjustableSemaphore(width)
+        # threads are spawned lazily up to the CURRENT gate width (mirroring
+        # ThreadPoolExecutor's lazy growth in the IO stage): a hard_cap of 32
+        # must not cost 32 polling threads while the tuned width is 2
+        self.threads: List[threading.Thread] = []
+        self._spawn_lock = threading.Lock()
+        self._ensure_threads(width)
+
+    def _ensure_threads(self, width: int) -> None:
+        with self._spawn_lock:
+            while len(self.threads) < min(max(width, 1), self.hard_cap):
+                t = threading.Thread(
+                    target=self._run, name=f"pipe-cpu-{len(self.threads)}",
+                    daemon=True,
+                )
+                self.threads.append(t)
+                t.start()
+
+    def resize(self, width: int) -> int:
+        w = max(1, min(int(width), self.hard_cap))
+        self.gate.set_limit(w)
+        self._ensure_threads(w)
+        return w
+
+    def _run(self) -> None:
+        while not self.stop.is_set():
+            if not self.gate.acquire(timeout=0.1):
+                continue
+            try:
+                try:
+                    s: _Sample = self.decode_q.get(timeout=0.1)
+                except queue.Empty:
+                    continue
+                self._process(s)
+            finally:
+                self.gate.release()
+
+    def _process(self, s: _Sample) -> None:
+        try:
+            raw, s.raw = s.raw, None
+            with self.tracer.span(STAGE_DECODE, index=s.index,
+                                  batch_id=s.batch_id):
+                decoded = self.dataset.decode_raw(raw, s.index)
+            with self.tracer.span(STAGE_AUGMENT, index=s.index,
+                                  batch_id=s.batch_id):
+                item = self.dataset.augment_item(decoded, s.index)
+            self.done_q.put((s, item))
+        except BaseException as e:
+            self.done_q.put((s, _Failure(e)))
+
+    def join(self, timeout: float = 2.0) -> None:
+        for t in self.threads:
+            t.join(timeout=timeout)
+
+
+# ---------------------------------------------------------------------------
+# assembler / iterator
+# ---------------------------------------------------------------------------
+
+
+class _Group:
+    """Window-mode assembly state for ``reorder_window`` consecutive batches:
+    the group's batch slots are emitted in batch order, each filled with the
+    first ``size`` of the group's samples to complete."""
+
+    __slots__ = ("sizes", "buffer", "emitted")
+
+    def __init__(self) -> None:
+        self.sizes: List[int] = []  # batch sizes, in dispatched batch order
+        self.buffer: List[Any] = []  # completed items, in completion order
+        self.emitted = 0  # batch slots already emitted
+
+
+class _PipelineIter:
+    """Iterator over a :class:`~repro.core.loader.ConcurrentDataLoader` in
+    pipeline mode — same external contract as ``_LoaderIter`` (ordered or
+    windowed delivery, epoch accounting, autotune ``on_batch`` at the safe
+    between-batch boundary, shutdown semantics)."""
+
+    def __init__(self, loader) -> None:
+        self.loader = loader
+        cfg = loader.cfg
+        self.cfg = cfg
+        self.tracer = loader.tracer
+        at = cfg.autotune
+        dataset = loader.dataset
+        self.split = bool(dataset.supports_split())
+        self.strict = cfg.reorder == "strict"
+        self.window = 1 if self.strict else max(1, cfg.reorder_window)
+
+        # stage sizing: 0 derives io_workers from the legacy loader's total
+        # fetch-thread count so pipeline-vs-legacy runs at equal concurrency
+        io_workers = cfg.io_workers or max(1, cfg.num_workers * cfg.num_fetch_workers)
+        cpu_workers = cfg.cpu_workers or 4
+        queue_depth = max(1, cfg.stage_queue_depth)
+        self.max_outstanding = max(1, cfg.num_workers * cfg.prefetch_factor)
+        # knob ceilings widen over the static config (enabling autotune must
+        # never cap the loader below its autotune=off operating point)
+        self._max_io_bound = max(at.max_fetch_workers, io_workers)
+        self._max_cpu_bound = max(at.max_cpu_workers, cpu_workers)
+        self._max_queue_bound = max(at.max_stage_queue, queue_depth)
+        self._max_outstanding_bound = max(at.max_outstanding, self.max_outstanding)
+        if at.enabled:
+            # resume from values the controller already learned (prev epoch)
+            tuned = loader._tuned
+            io_workers = min(
+                max(tuned.get("io_workers", io_workers), at.min_fetch_workers),
+                self._max_io_bound,
+            )
+            cpu_workers = min(
+                max(tuned.get("cpu_workers", cpu_workers), at.min_cpu_workers),
+                self._max_cpu_bound,
+            )
+            queue_depth = min(
+                max(tuned.get("stage_queue", queue_depth), at.min_stage_queue),
+                self._max_queue_bound,
+            )
+            self.max_outstanding = min(
+                max(tuned.get("outstanding", self.max_outstanding),
+                    at.min_outstanding),
+                self._max_outstanding_bound,
+            )
+
+        self._stop = threading.Event()
+        self.decode_q = _BoundedQ(queue_depth, self._stop)
+        self.done_q: "queue.Queue" = queue.Queue()
+        self.io = _IOStage(
+            dataset,
+            mode="asyncio" if cfg.impl == "asyncio" else "threaded",
+            width=io_workers,
+            hard_cap=self._max_io_bound if at.enabled else io_workers,
+            split=self.split,
+            decode_q=self.decode_q,
+            done_q=self.done_q,
+            stop=self._stop,
+            tracer=self.tracer,
+            hedge=loader.hedge,
+        )
+        cpu_hard = self._max_cpu_bound if at.enabled else cpu_workers
+        if not self.split:
+            # monolithic fallback: the fetch stage already produces finished
+            # items, so the CPU stage processes nothing — don't spin up an
+            # idle thread pool for it
+            cpu_workers = cpu_hard = 1
+        self.cpu = _CPUStage(
+            dataset,
+            width=cpu_workers,
+            hard_cap=cpu_hard,
+            decode_q=self.decode_q,
+            done_q=self.done_q,
+            stop=self._stop,
+            tracer=self.tracer,
+        )
+
+        self._sampler_iter = iter(loader.sampler)
+        self._exhausted = False
+        self._shutdown = False
+        self._lock = threading.Lock()
+        self._dispatched_samples = 0
+        self._completed_samples = 0
+        self._dispatched_batches = 0
+        self._emitted_batches = 0
+        self._bid_base = 0  # first dispatched batch_id (resume offsets it)
+        self._max_bid = -1  # highest dispatched batch_id (group closure)
+        # samples per batch, learned from the first dispatched task: sharded
+        # batches hold batch_size/num_hosts indices, so sizing the window
+        # from cfg.batch_size would admit num_hosts x more batches than the
+        # legacy loader's prefetch window
+        self._per_batch: Optional[int] = None
+        # strict-mode assembly: per-batch positional slots + ready buffer
+        self._slots: Dict[int, List[Any]] = {}
+        self._remaining: Dict[int, int] = {}
+        self._ready: Dict[int, Any] = {}
+        self._next_bid: Optional[int] = None
+        # window-mode assembly: per-group first-N-ready composition
+        self._groups: Dict[int, _Group] = {}
+        self._cur_group = 0
+
+        if loader.autotuner is not None:
+            from repro.core.autotune import build_pipeline_knobs
+
+            # knob callbacks reach this iterator through a weakref: the
+            # autotuner outlives every epoch's iterator, and a strong
+            # closure would pin an abandoned iterator (and its stage
+            # threads) until the next bind() — the __del__-based shutdown
+            # relies on refcount collection.  A dead ref makes get report 0
+            # and set echo the request; nothing real moves, and the next
+            # epoch's bind() replaces these callbacks wholesale.
+            ref = weakref.ref(self)
+
+            def _wget(fn):
+                return lambda: (lambda it: fn(it) if it is not None else 0)(ref())
+
+            def _wset(fn):
+                return lambda n: (
+                    lambda it: fn(it, n) if it is not None else int(n)
+                )(ref())
+
+            knobs = build_pipeline_knobs(
+                at,
+                get_io=_wget(lambda it: it.io.gate.limit),
+                set_io=_wset(lambda it, n: it._set_io_workers(n)),
+                get_cpu=_wget(lambda it: it.cpu.gate.limit),
+                set_cpu=_wset(lambda it, n: it._set_cpu_workers(n)),
+                get_outstanding=_wget(lambda it: it.max_outstanding),
+                set_outstanding=_wset(lambda it, n: it._set_outstanding(n)),
+                get_queue=_wget(lambda it: it.decode_q.depth),
+                set_queue=_wset(lambda it, n: it._set_stage_queue(n)),
+                hedge=loader.hedge,
+                max_io=self._max_io_bound,
+                max_cpu=self._max_cpu_bound,
+                max_outstanding=self._max_outstanding_bound,
+                max_queue=self._max_queue_bound,
+            )
+            if not self.split:
+                # nothing flows through the CPU stage or its queue — inert
+                # knobs would waste the controller's probe windows
+                knobs = [k for k in knobs
+                         if k.name not in ("cpu_workers", "stage_queue")]
+            loader.autotuner.bind(knobs)
+            for knob in loader._cache_knobs:
+                loader.autotuner.attach_knob(knob)
+
+        self._pump()
+
+    # -- autotuner control surfaces (applied between batches) ----------------
+    def _set_io_workers(self, n: int) -> int:
+        n = max(self.cfg.autotune.min_fetch_workers, int(n))
+        applied = self.io.resize(n)
+        self.loader._tuned["io_workers"] = applied
+        return applied
+
+    def _set_cpu_workers(self, n: int) -> int:
+        n = max(self.cfg.autotune.min_cpu_workers, int(n))
+        applied = self.cpu.resize(n)
+        self.loader._tuned["cpu_workers"] = applied
+        return applied
+
+    def _set_outstanding(self, n: int) -> int:
+        at = self.cfg.autotune
+        n = max(at.min_outstanding, min(int(n), self._max_outstanding_bound))
+        self.max_outstanding = n
+        self.loader._tuned["outstanding"] = n
+        return n
+
+    def _set_stage_queue(self, n: int) -> int:
+        n = max(self.cfg.autotune.min_stage_queue, int(n))
+        applied = self.decode_q.resize(n, self._max_queue_bound)
+        self.loader._tuned["stage_queue"] = applied
+        return applied
+
+    # -- dispatch ------------------------------------------------------------
+    def _pump(self) -> None:
+        """Flatten sampler batches into sample tasks while the in-flight
+        sample window has room (the batch-level ``outstanding`` knob times
+        the actual per-batch sample count, matching the legacy prefetch
+        window even when host sharding shrinks each batch's index list)."""
+        if self._exhausted:
+            return
+        while (
+            self._per_batch is None  # first batch sizes the window
+            or self._dispatched_samples - self._completed_samples
+            < self.max_outstanding * self._per_batch
+        ):
+            try:
+                task: BatchIndices = next(self._sampler_iter)
+            except StopIteration:
+                self._exhausted = True
+                return
+            if self._per_batch is None:
+                self._per_batch = max(len(task.indices), 1)
+            if self._next_bid is None:
+                self._next_bid = task.batch_id
+                self._bid_base = task.batch_id
+                self._cur_group = task.batch_id // self.window
+            self._max_bid = max(self._max_bid, task.batch_id)
+            n = len(task.indices)
+            if self.strict:
+                self._slots[task.batch_id] = [None] * n
+                self._remaining[task.batch_id] = n
+            else:
+                g = self._groups.setdefault(task.batch_id // self.window, _Group())
+                g.sizes.append(n)
+            self._dispatched_batches += 1
+            self._dispatched_samples += n
+            for pos, index in enumerate(task.indices):
+                self.io.submit(_Sample(task.batch_id, pos, index))
+
+    # -- assembly ------------------------------------------------------------
+    def _absorb(self, s: _Sample, item: Any) -> None:
+        self._completed_samples += 1
+        if self.strict:
+            slots = self._slots[s.batch_id]
+            slots[s.pos] = item
+            self._remaining[s.batch_id] -= 1
+            if self._remaining[s.batch_id] == 0:
+                del self._remaining[s.batch_id]
+                self._ready[s.batch_id] = self._slots.pop(s.batch_id)
+        else:
+            self._groups[s.batch_id // self.window].buffer.append(item)
+
+    def _pop_ready(self) -> Optional[List[Any]]:
+        """Return the next deliverable batch's items, or None."""
+        if self.strict:
+            if self._next_bid is not None and self._next_bid in self._ready:
+                items = self._ready.pop(self._next_bid)
+                self._next_bid += 1
+                return items
+            return None
+        g = self._groups.get(self._cur_group)
+        if g is None:
+            return None
+        if g.emitted < len(g.sizes):
+            need = g.sizes[g.emitted]
+            if len(g.buffer) >= need:
+                items, g.buffer = g.buffer[:need], g.buffer[need:]
+                g.emitted += 1
+                return items
+            return None
+        # every dispatched slot of this group emitted; the group is complete
+        # once a later group's batch was dispatched (dispatch is in batch-id
+        # order) or the sampler is exhausted — then advance
+        group_closed = (
+            self._exhausted
+            or self._max_bid >= (self._cur_group + 1) * self.window
+        )
+        if group_closed and not g.buffer:
+            del self._groups[self._cur_group]
+            self._cur_group += 1
+            return self._pop_ready()
+        return None
+
+    def _emit(self, items: List[Any]) -> Any:
+        # absolute batch id, same coordinate space as the per-sample stage
+        # spans (which carry the sampler's batch_id) — joinable after resume
+        with self.tracer.span(STAGE_COLLATE,
+                              batch_id=self._bid_base + self._emitted_batches):
+            batch = self.loader.collate_fn(items)
+        self._emitted_batches += 1
+        # consumer cursor in absolute batch ids (resume starts past 0), same
+        # contract as the legacy iterator's _next_bid bookkeeping
+        consumed = self._bid_base + self._emitted_batches
+        if not self.strict:
+            # a windowed batch holds first-N-ready samples from its whole
+            # group, so a mid-group cursor would resume with some samples
+            # dropped and others duplicated; round down to the last complete
+            # group boundary — a restart replays the partial group, which is
+            # the legacy "prefetched-but-unconsumed batches are replayed"
+            # contract, and no sample is ever lost
+            consumed = max((consumed // self.window) * self.window,
+                           self._bid_base)
+        self.loader._consumed = consumed
+        return batch
+
+    # -- iteration -----------------------------------------------------------
+    def __iter__(self) -> "_PipelineIter":
+        return self
+
+    def __next__(self) -> Any:
+        from repro.core.loader import deliver_traced  # here to avoid a cycle
+
+        return deliver_traced(self)
+
+    def _next_impl(self) -> Any:
+        if self._shutdown:
+            raise StopIteration
+        from repro.core.loader import LoaderTimeout  # here to avoid a cycle
+
+        deadline = time.monotonic() + self.cfg.timeout_s
+        while True:
+            items = self._pop_ready()
+            if items is not None:
+                self._pump()
+                return self._emit(items)
+            if (
+                self._exhausted
+                and self._completed_samples >= self._dispatched_samples
+                and self._emitted_batches >= self._dispatched_batches
+            ):
+                self._finish_epoch()
+                raise StopIteration
+            self._pump()
+            self.io.hedge_scan()
+            try:
+                s, payload = self.done_q.get(timeout=0.1)
+            except queue.Empty:
+                if time.monotonic() > deadline:
+                    self.shutdown()
+                    raise LoaderTimeout(
+                        f"no sample within {self.cfg.timeout_s}s (dispatched="
+                        f"{self._dispatched_samples}, "
+                        f"completed={self._completed_samples})"
+                    )
+                continue
+            if isinstance(payload, _Failure):
+                self.shutdown()
+                raise payload.exc
+            self._absorb(s, payload)
+
+    def _finish_epoch(self) -> None:
+        self.shutdown()
+        self.loader._note_epoch_end()
+
+    # -- observability -------------------------------------------------------
+    def stage_stats(self) -> Dict[str, Any]:
+        """Live per-stage snapshot: executor widths, queue occupancy, flow
+        counters — the queue numbers are what identify the bottleneck stage
+        (and what bench_pipeline asserts overlap with)."""
+        out: Dict[str, Any] = {
+            "io_workers": self.io.gate.limit,
+            "cpu_workers": self.cpu.gate.limit,
+            "outstanding_batches": self.max_outstanding,
+            "decode_queue": self.decode_q.occupancy(),
+            "done_queue": self.done_q.qsize(),
+            "in_flight_samples": self._dispatched_samples - self._completed_samples,
+            "emitted_batches": self._emitted_batches,
+            "split": self.split,
+            "reorder": "strict" if self.strict else f"window={self.window}",
+        }
+        hedge = self.io.hedge
+        if hedge is not None:
+            out["hedges_issued"] = hedge.hedges_issued
+            out["hedges_won"] = hedge.hedges_won
+        return out
+
+    # -- shutdown ------------------------------------------------------------
+    def shutdown(self) -> None:
+        with self._lock:
+            if self._shutdown:
+                return
+            self._shutdown = True
+        # final snapshot for post-epoch observability: the loader holds this
+        # iterator only weakly (so threads are never pinned), but callers
+        # still want stage_stats() after the epoch ends
+        try:
+            self.loader._last_stage_stats = self.stage_stats()
+        except Exception:  # pragma: no cover - stats must never block exit
+            pass
+        self._stop.set()
+        self.io.close()
+        self.cpu.join()
+
+    def __del__(self) -> None:  # pragma: no cover - best effort
+        try:
+            self.shutdown()
+        except Exception:
+            pass

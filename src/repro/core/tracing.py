@@ -23,6 +23,14 @@ RUN_TRAINING_BATCH = "run_training_batch"
 # cache-subsystem lane: one span per TieredCacheStore GET, tagged with the
 # serving tier (memory | disk | origin)
 CACHE_GET = "cache_get"
+# staged-pipeline lanes (repro.core.pipeline): one span per sample per stage
+# (fetch on the IO executor, decode/augment on the CPU executor) and one
+# collate span per assembled batch — the overlap evidence bench_pipeline
+# computes union durations over
+STAGE_FETCH = "stage_fetch"
+STAGE_DECODE = "stage_decode"
+STAGE_AUGMENT = "stage_augment"
+STAGE_COLLATE = "stage_collate"
 
 
 @dataclass

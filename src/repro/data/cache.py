@@ -31,7 +31,11 @@ I/O *and* evicts something useful):
 * ``size-threshold``  — only items below a byte threshold (huge objects
   would sweep the whole tier for one future hit),
 * ``second-hit``      — admit on the second sighting of a key (Bloom-filter
-  based; one-touch scans never pollute the cache).
+  based; one-touch scans never pollute the cache),
+* ``tinylfu``         — hit-rate-aware frequency admission: a count-min
+  sketch with periodic aging estimates each key's recency-weighted access
+  frequency (tier hits feed it too), and a miss is admitted only once the
+  estimate clears a threshold.
 
 Capacities and the admission policy are runtime-adjustable
 (``set_memory_capacity`` / ``set_disk_capacity`` / ``set_admission``), which
@@ -150,7 +154,90 @@ class SecondHitAdmission(AdmissionPolicy):
         return self._seen.test_and_add(key)
 
 
-ADMISSION_KINDS = ("admit-all", "size-threshold", "second-hit")
+# translate table halving every byte — ages the whole sketch in one C pass
+_HALVE = bytes(b >> 1 for b in range(256))
+
+
+class _FreqSketch:
+    """Count-min sketch with saturating 4-bit-style counters and periodic
+    aging (every counter halves once ``sample_window`` increments have been
+    observed) — the TinyLFU frequency estimator.  Aging is what makes the
+    estimate *recency-weighted*: a key hot last epoch but cold since decays
+    back toward zero instead of staying admitted forever."""
+
+    _MAX = 15
+
+    def __init__(self, num_counters: int = 1 << 16, num_hashes: int = 4,
+                 sample_window: int = 0) -> None:
+        self._n = num_counters
+        self._k = num_hashes
+        self._counts = bytearray(num_counters)
+        self._window = sample_window or 8 * num_counters
+        self._ops = 0
+        self._ages = 0
+        self._lock = threading.Lock()
+
+    def _indices(self, key: str) -> List[int]:
+        h = hashlib.blake2b(key.encode(), digest_size=4 * self._k).digest()
+        return [
+            int.from_bytes(h[4 * i: 4 * i + 4], "little") % self._n
+            for i in range(self._k)
+        ]
+
+    def add(self, key: str) -> int:
+        """Count one access; return the post-increment min estimate."""
+        idxs = self._indices(key)
+        with self._lock:
+            self._ops += 1
+            if self._ops >= self._window:
+                self._counts = bytearray(self._counts.translate(_HALVE))
+                self._ops = 0
+                self._ages += 1
+            for i in idxs:
+                if self._counts[i] < self._MAX:
+                    self._counts[i] += 1
+            return min(self._counts[i] for i in idxs)
+
+    def estimate(self, key: str) -> int:
+        idxs = self._indices(key)
+        with self._lock:
+            return min(self._counts[i] for i in idxs)
+
+
+class TinyLFUAdmission(AdmissionPolicy):
+    """Hit-rate-aware TinyLFU-style admission: a miss earns a slot only once
+    the key's *recency-weighted* access frequency clears ``threshold``.
+
+    Differences from :class:`SecondHitAdmission` (the Bloom doorkeeper):
+
+    * the frequency sketch **ages** — counters halve every ``sample_window``
+      observations, so a key that stopped being accessed has to re-prove
+      itself instead of staying admitted on ancient history;
+    * tier **hits feed the sketch too** (:meth:`record`, wired by
+      ``DiskTierCache.get``), so the estimate tracks the key's real access
+      rate, not just how often it missed.
+    """
+
+    name = "tinylfu"
+
+    def __init__(self, num_counters: int = 1 << 16, threshold: int = 2,
+                 sample_window: int = 0) -> None:
+        self._sketch = _FreqSketch(num_counters, sample_window=sample_window)
+        self.threshold = threshold
+
+    def admit(self, key: str, size: int) -> bool:
+        return self._sketch.add(key) >= self.threshold
+
+    def record(self, key: str) -> None:
+        """Count a tier hit (keeps resident keys' frequency warm across
+        aging — the 'hit-rate-aware' half of the policy)."""
+        self._sketch.add(key)
+
+    def estimate(self, key: str) -> int:
+        return self._sketch.estimate(key)
+
+
+ADMISSION_KINDS = ("admit-all", "size-threshold", "second-hit", "tinylfu")
 
 
 def make_admission(kind: str, max_item_bytes: int = 1 << 20) -> AdmissionPolicy:
@@ -160,6 +247,8 @@ def make_admission(kind: str, max_item_bytes: int = 1 << 20) -> AdmissionPolicy:
         return SizeThresholdAdmission(max_item_bytes)
     if kind == "second-hit":
         return SecondHitAdmission()
+    if kind == "tinylfu":
+        return TinyLFUAdmission()
     raise ValueError(f"unknown admission policy {kind!r}; known: {ADMISSION_KINDS}")
 
 
@@ -515,11 +604,22 @@ class DiskTierCache:
             self._hits += 1
         return data
 
+    def _note_hit(self, key: str) -> None:
+        """Feed hit-rate-aware admission policies (TinyLFU) the hit stream;
+        duck-typed so the stateless policies cost nothing."""
+        rec = getattr(self.admission, "record", None)
+        if rec is not None:
+            rec(key)
+
     def get(self, key: str) -> Optional[bytes]:
         fname = self._fname(key)
         if self.journal is not None:
-            return self._get_journal(fname)
+            data = self._get_journal(fname)
+            if data is not None:
+                self._note_hit(key)
+            return data
         if not self._owns(fname):
+            # a peer host's key: its owner does the admission accounting
             return self._get_foreign(fname)
         try:
             with open(self._path(fname), "rb") as f:
@@ -569,6 +669,7 @@ class DiskTierCache:
             # and leave the index alone (externally placed files are only
             # adopted by _recover at init).
             self._hits += 1
+        self._note_hit(key)
         return data
 
     def _put_journal(self, fname: str, data: bytes) -> bool:

@@ -17,7 +17,7 @@ from __future__ import annotations
 
 import hashlib
 import time
-from typing import Dict, Sequence
+from typing import Dict, Sequence, Tuple
 
 import numpy as np
 
@@ -31,7 +31,22 @@ Item = Dict[str, np.ndarray]
 
 
 class MapDataset:
-    """Minimal map-style dataset protocol."""
+    """Minimal map-style dataset protocol.
+
+    Datasets that can separate their storage read from their CPU work
+    additionally expose the *split* path (``supports_split() -> True``)::
+
+        raw     = get_raw(i)            # IO only: bytes off the store
+        decoded = decode_raw(raw, i)    # CPU: codec work
+        item    = augment_item(decoded, i)  # CPU: augmentation / normalize
+
+    ``__getitem__`` must equal ``augment_item(decode_raw(get_raw(i), i), i)``
+    bit-for-bit — the staged pipeline (:mod:`repro.core.pipeline`) runs the
+    three stages on different executors and relies on that equivalence for
+    its ``reorder="strict"`` guarantee.  Datasets that cannot split keep the
+    default ``supports_split() -> False`` and the pipeline falls back to the
+    monolithic ``__getitem__`` on its IO executor.
+    """
 
     def __len__(self) -> int:
         raise NotImplementedError
@@ -45,6 +60,28 @@ class MapDataset:
 
     def set_epoch(self, epoch: int) -> None:
         """Hook for per-epoch augmentation determinism."""
+
+    # -- split (staged-pipeline) path ---------------------------------------
+    def supports_split(self) -> bool:
+        """Whether the get_raw/decode_raw/augment_item stages are available."""
+        return False
+
+    def get_raw(self, index: int) -> bytes:
+        """Storage read only — no decode, no augmentation."""
+        raise NotImplementedError
+
+    async def aget_raw(self, index: int) -> bytes:
+        """Async variant of :meth:`get_raw`; default wraps the sync path."""
+        return self.get_raw(index)
+
+    def decode_raw(self, raw: bytes, index: int):
+        """Codec stage: bytes -> decoded intermediate (dataset-defined)."""
+        raise NotImplementedError
+
+    def augment_item(self, decoded, index: int) -> Item:
+        """Augment stage: decoded intermediate -> final Item.  Identity by
+        default for datasets whose decode already yields the Item."""
+        return decoded
 
 
 def _aug_rng(seed: int, epoch: int, index: int) -> np.random.Generator:
@@ -82,11 +119,24 @@ class ImageDataset(MapDataset):
     def __len__(self) -> int:
         return self.num_items
 
-    def _decode(self, raw: bytes, index: int) -> Item:
+    # -- split path (one stage per pipeline executor) ------------------------
+    def supports_split(self) -> bool:
+        return True
+
+    def get_raw(self, index: int) -> bytes:
+        return self.store.get(item_key(index, self.prefix))
+
+    async def aget_raw(self, index: int) -> bytes:
+        return await self.store.aget(item_key(index, self.prefix))
+
+    def decode_raw(self, raw: bytes, index: int) -> Tuple[codec.ImageRecord, int]:
         if self.sim_decode_s_per_mb:
             # emulated C-decoder cost: sleeps release the GIL like libjpeg
             time.sleep(self.sim_decode_s_per_mb * len(raw) / 1e6)
-        rec = codec.decode_image(raw)
+        return codec.decode_image(raw), len(raw)
+
+    def augment_item(self, decoded: Tuple[codec.ImageRecord, int], index: int) -> Item:
+        rec, nbytes = decoded
         if self.augment:
             rng = _aug_rng(self.seed, self._epoch, index)
             img = imagenet_transform(rec.pixels, rng, self.out_size)
@@ -100,19 +150,20 @@ class ImageDataset(MapDataset):
         return {
             "image": img,
             "label": np.int32(rec.label),
-            "nbytes": np.int64(len(raw)),
+            "nbytes": np.int64(nbytes),
         }
 
+    def _decode(self, raw: bytes, index: int) -> Item:
+        return self.augment_item(self.decode_raw(raw, index), index)
+
     def __getitem__(self, index: int) -> Item:
-        key = item_key(index, self.prefix)
         with self.tracer.span(GET_ITEM, index=index):
-            raw = self.store.get(key)
+            raw = self.get_raw(index)
             return self._decode(raw, index)
 
     async def aget_item(self, index: int) -> Item:
-        key = item_key(index, self.prefix)
         with self.tracer.span(GET_ITEM, index=index):
-            raw = await self.store.aget(key)
+            raw = await self.aget_raw(index)
             return self._decode(raw, index)
 
     def get_random_item(self, rng: np.random.Generator) -> Item:
@@ -152,13 +203,26 @@ class TokenDataset(MapDataset):
             "nbytes": np.int64(len(raw)),
         }
 
+    # -- split path (augment stage is the identity: tokens have none) --------
+    def supports_split(self) -> bool:
+        return True
+
+    def get_raw(self, index: int) -> bytes:
+        return self.store.get(self.key(index))
+
+    async def aget_raw(self, index: int) -> bytes:
+        return await self.store.aget(self.key(index))
+
+    def decode_raw(self, raw: bytes, index: int) -> Item:
+        return self._decode(raw)
+
     def __getitem__(self, index: int) -> Item:
         with self.tracer.span(GET_ITEM, index=index):
-            return self._decode(self.store.get(self.key(index)))
+            return self._decode(self.get_raw(index))
 
     async def aget_item(self, index: int) -> Item:
         with self.tracer.span(GET_ITEM, index=index):
-            return self._decode(await self.store.aget(self.key(index)))
+            return self._decode(await self.aget_raw(index))
 
 
 class SyntheticTokenDataset(MapDataset):

@@ -81,6 +81,17 @@ def main() -> int:
     ap.add_argument("--fetchers", type=int, default=16)
     ap.add_argument("--hedge", action="store_true",
                     help="hedged requests (straggler mitigation)")
+    ap.add_argument("--pipeline", action="store_true",
+                    help="staged streaming pipeline (fetch/decode/augment on "
+                         "dedicated IO+CPU executors)")
+    ap.add_argument("--reorder", choices=["strict", "window"], default="strict",
+                    help="pipeline batch assembly: strict (bit-identical "
+                         "stream) or window (first-N-ready composition)")
+    ap.add_argument("--reorder-window", type=int, default=4)
+    ap.add_argument("--io-workers", type=int, default=0,
+                    help="pipeline IO executor width (0 = workers*fetchers)")
+    ap.add_argument("--cpu-workers", type=int, default=0,
+                    help="pipeline CPU executor width (0 = 4)")
     ap.add_argument("--optimizer", default="adamw")
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--microbatches", type=int, default=1)
@@ -111,6 +122,11 @@ def main() -> int:
             num_workers=args.workers,
             num_fetch_workers=args.fetchers,
             hedge_requests=args.hedge,
+            pipeline=args.pipeline,
+            reorder=args.reorder,
+            reorder_window=args.reorder_window,
+            io_workers=args.io_workers,
+            cpu_workers=args.cpu_workers,
             seed=args.seed,
         ),
         tracer=tracer,
@@ -165,6 +181,9 @@ def main() -> int:
         f"accelerator: util_zero={util.util_zero_pct:.1f}% "
         f"util_pos_avg={util.util_pos_avg:.1f}% busy={100 * util.busy_fraction:.1f}%"
     )
+    stages = loader.stage_stats()
+    if stages is not None:
+        print(f"pipeline stages: {stages}")
     return 0
 
 

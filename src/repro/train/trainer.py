@@ -112,6 +112,11 @@ def _make_ring(loader, depth: int, tracer) -> DevicePrefetchRing:
         auto.attach_ring(ring)
         if tracer is not NULL_TRACER and auto.util_fn is None:
             auto.util_fn = lambda: recent_busy_fraction(tracer)
+    note = getattr(loader, "note_device_ring", None)
+    if callable(note):
+        # the ring is the staged pipeline's final (device-prefetch) stage;
+        # registering it folds its depth into loader.stage_stats()
+        note(ring)
     return ring
 
 

@@ -19,6 +19,7 @@ from repro.data.cache import (
     SecondHitAdmission,
     SizeThresholdAdmission,
     TieredCacheStore,
+    TinyLFUAdmission,
     make_admission,
 )
 from repro.data.dataset import ImageDataset
@@ -606,3 +607,62 @@ def test_tiered_cache_under_loader_stays_bounded(tmp_path):
     s.join()
     assert peak[0] <= cap
     assert tiered.disk.used_bytes <= cap
+
+
+# -- TinyLFU admission -------------------------------------------------------
+
+
+def test_tinylfu_rejects_one_touch_admits_repeats(tmp_path):
+    d = DiskTierCache(
+        str(tmp_path), capacity_bytes=1 << 20, admission=TinyLFUAdmission()
+    )
+    assert not d.put("k", b"x")  # first sighting: freq 1 < threshold
+    assert d.get("k") is None
+    assert d.put("k", b"x")  # second sighting: freq 2 -> admitted
+    assert d.get("k") == b"x"
+    # a one-touch scan over fresh keys admits nothing
+    for i in range(50):
+        assert not d.put(f"scan/{i}", b"y")
+
+
+def test_tinylfu_hits_feed_the_sketch(tmp_path):
+    pol = TinyLFUAdmission()
+    d = DiskTierCache(str(tmp_path), capacity_bytes=1 << 20, admission=pol)
+    d.put("k", b"x"), d.put("k", b"x")  # admitted on the second miss
+    before = pol.estimate("k")
+    for _ in range(3):
+        assert d.get("k") == b"x"  # each hit records into the sketch
+    assert pol.estimate("k") >= before + 3
+
+
+def test_tinylfu_aging_decays_stale_frequency():
+    pol = TinyLFUAdmission(sample_window=20)
+    for _ in range(4):
+        pol.record("hot")
+    assert pol.estimate("hot") >= 4
+    for i in range(40):  # two full aging windows of other traffic
+        pol.record(f"noise/{i}")
+    # halved twice: the stale key must re-prove itself
+    assert pol.estimate("hot") <= 2
+
+
+def test_tinylfu_selectable_everywhere(tmp_path):
+    assert "tinylfu" in ADMISSION_KINDS
+    assert isinstance(make_admission("tinylfu"), TinyLFUAdmission)
+    # via StoreConfig/build_store
+    base = InMemoryStore()
+    base.put("a", bytes(50))
+    store = build_store(
+        StoreConfig(kind="memory", cache_dir=str(tmp_path),
+                    disk_cache_bytes=1 << 20, cache_admission="tinylfu"),
+        base=base,
+    )
+    assert isinstance(store.disk.admission, TinyLFUAdmission)
+    store.get("a"), store.get("a")
+    # and the autotune admission index covers it
+    tiered = TieredCacheStore(base, disk=DiskTierCache(str(tmp_path / "t")))
+    at = AutotuneConfig(enabled=True)
+    knobs = [k for k in build_cache_knobs(at, tiered) if k.name == "cache_admission"]
+    assert knobs and knobs[0].hi == len(ADMISSION_KINDS) - 1
+    assert tiered.set_admission(knobs[0].hi) == ADMISSION_KINDS.index("tinylfu")
+    assert tiered.disk.admission.name == "tinylfu"
