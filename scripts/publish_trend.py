@@ -26,6 +26,7 @@ import os
 import re
 import shutil
 import sys
+from html.parser import HTMLParser
 from typing import Any, Dict, List
 
 STAMP_RE = re.compile(r"^BENCH_(?P<name>.+)_(?P<stamp>\d{8})_run(?P<run>\d+)\.json$")
@@ -122,6 +123,124 @@ def publish(trend_dir: str, site_dir: str) -> int:
     print(f"published {copied} new file(s); site now tracks "
           f"{len(trend['benches'])} bench(es), {nruns} stored run(s)")
     return 0
+
+
+# ---------------------------------------------------------------------------
+# site validation (CI `dashboard-validate` job; see tests/test_trend_publish)
+# ---------------------------------------------------------------------------
+
+# HTML void elements never get a closing tag; everything else must balance
+_VOID_TAGS = frozenset(
+    "area base br col embed hr img input link meta param source track wbr".split()
+)
+
+
+class _TagBalanceChecker(HTMLParser):
+    """Cheap well-formedness check: every non-void open tag must be closed
+    in LIFO order.  Catches the truncated/mis-nested output of a broken
+    template edit, which a browser would silently 'repair' into a blank or
+    garbled dashboard."""
+
+    def __init__(self) -> None:
+        super().__init__(convert_charrefs=True)
+        self.stack: List[str] = []
+        self.problems: List[str] = []
+
+    def handle_starttag(self, tag: str, attrs) -> None:
+        if tag not in _VOID_TAGS:
+            self.stack.append(tag)
+
+    def handle_endtag(self, tag: str) -> None:
+        if tag in _VOID_TAGS:
+            return
+        if not self.stack:
+            self.problems.append(f"closing </{tag}> with no open tag")
+        elif self.stack[-1] != tag:
+            self.problems.append(
+                f"mis-nested </{tag}> (innermost open is <{self.stack[-1]}>)"
+            )
+            # recover if the tag is open somewhere: pop through it so one
+            # mis-nesting doesn't cascade into a report per following tag
+            if tag in self.stack:
+                while self.stack and self.stack.pop() != tag:
+                    pass
+        else:
+            self.stack.pop()
+
+
+def _embedded_trend(html: str) -> Any:
+    """Extract the inline TREND document the dashboard renders from."""
+    marker = "const TREND = "
+    start = html.index(marker) + len(marker)
+    end = html.index(";\n", start)
+    return json.loads(html[start:end])
+
+
+def validate_site(site_dir: str) -> List[str]:
+    """Return a list of problems with a published site (empty = valid).
+
+    Checks what the nightly publish step cannot see from its exit code: the
+    dashboard actually embeds the trend data (not the template's null
+    placeholder), the embedded copy matches ``trend.json``, every stored run
+    carries well-formed claim rows (a bench that stops reporting claims is a
+    dashboard regression, not a quiet success), and the HTML's tag tree
+    balances."""
+    problems: List[str] = []
+    trend_path = os.path.join(site_dir, "trend.json")
+    index_path = os.path.join(site_dir, "index.html")
+    try:
+        with open(trend_path) as f:
+            trend = json.load(f)
+    except (OSError, ValueError) as exc:
+        return [f"trend.json unreadable: {exc}"]
+    try:
+        with open(index_path) as f:
+            html = f.read()
+    except OSError as exc:
+        return [f"index.html unreadable: {exc}"]
+
+    benches = trend.get("benches")
+    if not isinstance(benches, dict) or not benches:
+        problems.append("trend.json holds no benches")
+        benches = {}
+    for name, bench in benches.items():
+        runs = bench.get("runs", [])
+        if not runs:
+            problems.append(f"bench {name!r} has no stored runs")
+        for run in runs:
+            claims = run.get("claims")
+            label = f"{name} {run.get('stamp')}#{run.get('run')}"
+            if not claims:
+                problems.append(f"run {label} has no claim rows")
+                continue
+            for c in claims:
+                if "claim" not in c or "ok" not in c:
+                    problems.append(f"run {label} has a malformed claim row: {c}")
+            if run.get("claims_total") != len(claims):
+                problems.append(
+                    f"run {label}: claims_total={run.get('claims_total')} "
+                    f"!= {len(claims)} claim rows"
+                )
+
+    if "/*__TREND_JSON__*/null" in html:
+        problems.append("index.html still holds the null data placeholder")
+    else:
+        try:
+            embedded = _embedded_trend(html)
+        except (ValueError, KeyError) as exc:
+            problems.append(f"index.html inline TREND data unparsable: {exc}")
+        else:
+            if embedded != trend:
+                problems.append("index.html inline TREND differs from trend.json")
+    checker = _TagBalanceChecker()
+    checker.feed(html)
+    checker.close()
+    problems.extend(f"index.html: {p}" for p in checker.problems)
+    if checker.stack:
+        problems.append(
+            f"index.html: unclosed tag(s) at EOF: {checker.stack}"
+        )
+    return problems
 
 
 # ---------------------------------------------------------------------------
@@ -495,8 +614,21 @@ def main() -> int:
                     help="directory with freshly stamped BENCH_*.json files")
     ap.add_argument("--site-dir", required=True,
                     help="gh-pages checkout to publish into")
+    ap.add_argument("--validate", action="store_true",
+                    help="after publishing, verify the generated site "
+                         "(claim rows present, inline data matches "
+                         "trend.json, HTML well-formed); non-zero exit on "
+                         "any problem — the CI dashboard-validate gate")
     args = ap.parse_args()
-    return publish(args.trend_dir, args.site_dir)
+    rc = publish(args.trend_dir, args.site_dir)
+    if rc == 0 and args.validate:
+        problems = validate_site(args.site_dir)
+        for p in problems:
+            print(f"VALIDATE FAIL: {p}", file=sys.stderr)
+        if problems:
+            return 1
+        print("site validation passed")
+    return rc
 
 
 if __name__ == "__main__":

@@ -314,6 +314,19 @@ class AutotuneConfig:
     max_cpu_workers: int = 32
     min_stage_queue: int = 4
     max_stage_queue: int = 512
+    # budget co-tuning (staged pipeline + split datasets only).  0 keeps the
+    # independent io_workers/cpu_workers knobs.  >0 fixes the TOTAL executor
+    # width at thread_budget and replaces those two knobs with one coupled
+    # "io_cpu_split" knob (value = IO width; CPU width = budget - value):
+    # instead of inflating both stages independently, the controller probes
+    # "where does the next thread help" under a fixed parallelism budget —
+    # the right question on a host whose cores are already spoken for.
+    thread_budget: int = 0
+    # with thread_budget set and a process-capable dataset (split path +
+    # picklable), also expose the CPU executor KIND (thread vs spawn-process)
+    # as a binary knob so the controller can buy the GIL escape only when the
+    # decode actually holds the GIL.
+    tune_cpu_executor: bool = True
 
 
 @dataclass(frozen=True)
@@ -357,6 +370,17 @@ class LoaderConfig:
     # concurrency); cpu_workers defaults to 4.
     io_workers: int = 0
     cpu_workers: int = 0
+    # CPU (decode+augment) stage executor:
+    #   "thread"  — gated thread pool (legacy; right for GIL-releasing C
+    #               decoders like libjpeg, zero serialization cost)
+    #   "process" — spawn-based worker-process pool (escapes the GIL for
+    #               pure-Python/GIL-holding decoders; requires the dataset's
+    #               split path AND a picklable dataset — see README).  The
+    #               pool persists across epochs on the loader; a crashed
+    #               worker is respawned and only its in-flight sample is
+    #               retried.  Datasets without the split path fall back to
+    #               monolithic fetch exactly as with "thread".
+    cpu_executor: str = "thread"
     # bounded fetch->decode queue (in samples).  A full queue blocks the IO
     # threads that try to feed it — that stall is the pipeline's
     # backpressure, and the depth is an autotune knob.

@@ -35,6 +35,7 @@ from repro.core.autotune import (
     Knob,
     build_cache_knobs,
     build_loader_knobs,
+    make_weak_knob_callbacks,
 )
 from repro.core.fetcher import HedgeTracker, make_fetcher
 from repro.core.sampler import BatchIndices, ShardedBatchSampler
@@ -87,6 +88,11 @@ class ConcurrentDataLoader:
             raise ValueError(
                 f"unknown reorder {cfg.reorder!r}; known: 'strict', 'window'"
             )
+        if cfg.cpu_executor not in ("thread", "process"):
+            raise ValueError(
+                f"unknown cpu_executor {cfg.cpu_executor!r}; "
+                "known: 'thread', 'process'"
+            )
         if cfg.pipeline:
             # fail at construction, naming the field — not at first iter()
             # with an opaque semaphore error from deep inside a stage
@@ -102,6 +108,15 @@ class ConcurrentDataLoader:
                     raise ValueError(f"{field} must be >= 0 (0 = derive)")
             if cfg.stage_queue_depth < 1:
                 raise ValueError("stage_queue_depth must be >= 1")
+            at_ = cfg.autotune
+            if at_.enabled and at_.thread_budget:
+                floor = at_.min_fetch_workers + max(at_.min_cpu_workers, 1)
+                if at_.thread_budget < floor:
+                    raise ValueError(
+                        f"thread_budget={at_.thread_budget} cannot cover "
+                        f"min_fetch_workers + min_cpu_workers (= {floor}): "
+                        "the io/cpu split needs at least one thread per stage"
+                    )
         self.dataset = dataset
         self.cfg = cfg
         self.host_id = host_id
@@ -152,6 +167,12 @@ class ConcurrentDataLoader:
             else None
         )
         self._tuned: Dict[str, int] = {}
+        # spawn-process CPU pool (pipeline cpu_executor="process"): owned by
+        # the loader because workers cost hundreds of ms to spawn — each
+        # epoch's _PipelineIter attaches/rebinds instead of respawning.
+        # Workers are daemon processes, so an exiting interpreter never
+        # blocks on them.
+        self._cpu_pool = None
         # cache-tier knobs: the cache outlives every _LoaderIter, so the knob
         # list is built once here and re-attached after each epoch's bind().
         # (The cache's tracer is NOT rebound here: the store may be shared
@@ -344,13 +365,19 @@ class _LoaderIter:
         self._lock = threading.Lock()
 
         if loader.autotuner is not None:
+            # knob callbacks reach this iterator through a weakref (same
+            # pattern as the pipeline iterator): bound-method closures would
+            # pin an abandoned iterator — and its worker threads — on the
+            # loader-lived autotuner until the next epoch's bind(), because
+            # __del__-based shutdown relies on refcount collection
+            _wget, _wset = make_weak_knob_callbacks(self)
             loader.autotuner.bind(
                 build_loader_knobs(
                     at,
-                    get_fetch=lambda: self._fetch_workers,
-                    set_fetch=self._set_fetch_workers,
-                    get_outstanding=lambda: self.max_outstanding,
-                    set_outstanding=self._set_outstanding,
+                    get_fetch=_wget(lambda it: it._fetch_workers),
+                    set_fetch=_wset(lambda it, n: it._set_fetch_workers(n)),
+                    get_outstanding=_wget(lambda it: it.max_outstanding),
+                    set_outstanding=_wset(lambda it, n: it._set_outstanding(n)),
                     hedge=loader.hedge,
                     max_fetch_workers=self._max_fetch_bound,
                     max_outstanding=self._max_outstanding_bound,

@@ -15,10 +15,15 @@ path into an explicit stage graph::
   whose effective concurrency is an :class:`AdjustableSemaphore` gate, with
   optional hedged duplicates for straggler GETs (reusing
   :class:`~repro.core.fetcher.HedgeTracker`).
-* **CPU executor** — a separate gated thread pool running
-  ``decode_raw`` + ``augment_item`` (datasets exposing the split path;
-  see :class:`repro.data.dataset.MapDataset`).  Datasets that cannot split
-  fall back to the monolithic ``__getitem__`` on the IO executor.
+* **CPU executor** — ``decode_raw`` + ``augment_item`` on a separate gated
+  executor (datasets exposing the split path; see
+  :class:`repro.data.dataset.MapDataset`): a thread pool
+  (``LoaderConfig.cpu_executor="thread"``, right for GIL-releasing C
+  decoders) or a spawn-based worker-process pool (``"process"``, the GIL
+  escape for pure-Python decoders — Appendix A.4's ceiling; requires a
+  picklable dataset, persists across epochs, respawns crashed workers and
+  retries only their in-flight sample).  Datasets that cannot split fall
+  back to the monolithic ``__getitem__`` on the IO executor.
 * **Out-of-order completion** — samples finish in whatever order storage and
   CPU allow; the assembler composes batches per ``LoaderConfig.reorder``:
   ``"strict"`` rebuilds exactly the legacy stream (same samples, same order,
@@ -38,13 +43,15 @@ path into an explicit stage graph::
 from __future__ import annotations
 
 import asyncio
+import multiprocessing
+import pickle
 import queue
 import threading
 import time
-import weakref
 from collections import deque
 from concurrent.futures import ThreadPoolExecutor
-from typing import Any, Dict, List, Optional, Tuple
+from multiprocessing.connection import wait as _mp_wait
+from typing import Any, Deque, Dict, List, Optional, Tuple
 
 from repro.core.fetcher import (
     AdjustableSemaphore,
@@ -355,7 +362,13 @@ class _CPUStage:
     ``hard_cap`` threads exist; effective parallelism is the gate, so the
     autotuner resizes without thread churn.  The gate is acquired BEFORE
     pulling from the fetch->decode queue — a surplus thread waits empty-
-    handed rather than holding a sample hostage behind the gate."""
+    handed rather than holding a sample hostage behind the gate.
+
+    ``active=False`` parks the stage (threads idle without pulling work):
+    the iterator flips it when the ``cpu_executor`` knob swaps the CPU stage
+    to the process pool — in-flight samples still finish here, new ones go
+    to whichever stage is active, and strict reorder is oblivious to which
+    executor produced a sample."""
 
     def __init__(
         self,
@@ -375,12 +388,17 @@ class _CPUStage:
         self.tracer = tracer
         self.hard_cap = max(width, hard_cap)
         self.gate = AdjustableSemaphore(width)
+        self.active = True
         # threads are spawned lazily up to the CURRENT gate width (mirroring
         # ThreadPoolExecutor's lazy growth in the IO stage): a hard_cap of 32
         # must not cost 32 polling threads while the tuned width is 2
         self.threads: List[threading.Thread] = []
         self._spawn_lock = threading.Lock()
         self._ensure_threads(width)
+
+    @property
+    def width(self) -> int:
+        return self.gate.limit
 
     def _ensure_threads(self, width: int) -> None:
         with self._spawn_lock:
@@ -400,6 +418,9 @@ class _CPUStage:
 
     def _run(self) -> None:
         while not self.stop.is_set():
+            if not self.active:
+                time.sleep(0.05)
+                continue
             if not self.gate.acquire(timeout=0.1):
                 continue
             try:
@@ -427,6 +448,399 @@ class _CPUStage:
     def join(self, timeout: float = 2.0) -> None:
         for t in self.threads:
             t.join(timeout=timeout)
+
+
+# ---------------------------------------------------------------------------
+# process-backed CPU stage (the GIL escape)
+# ---------------------------------------------------------------------------
+
+# attempts per sample across worker crashes: a dead worker fails only its
+# in-flight sample, and only after this many fresh workers also died on it
+# (then it is almost certainly the sample killing the worker, not bad luck)
+PROC_TASK_ATTEMPTS = 3
+
+
+def _cpu_proc_main(payload: bytes, conn) -> None:
+    """Spawn entry point for one CPU worker process.
+
+    Runs ONLY ``decode_raw`` + ``augment_item`` on tasks received over the
+    pipe; storage IO, assembly and tracing all stay in the parent.  Stage
+    endpoints are measured here with ``time.monotonic`` (system-wide
+    CLOCK_MONOTONIC) and shipped home so the parent can record real
+    per-worker decode/augment spans.  A ``bind`` message replaces the
+    dataset wholesale — how the parent pushes per-epoch state (e.g. the
+    augmentation epoch) into a pool that outlives iterators."""
+    try:
+        dataset = pickle.loads(payload)
+    except BaseException as e:  # exotic: parent pre-validated pickling
+        try:
+            conn.send(("crash", f"worker could not unpickle dataset: {e!r}"))
+        except OSError:
+            pass
+        conn.close()
+        return
+    while True:
+        try:
+            msg = conn.recv()
+        except (EOFError, OSError):
+            break
+        tag = msg[0]
+        if tag == "stop":
+            break
+        if tag == "bind":
+            try:
+                dataset = pickle.loads(msg[1])
+            except BaseException as e:
+                try:
+                    conn.send(("crash", f"worker could not rebind dataset: {e!r}"))
+                except OSError:
+                    pass
+                break
+            continue
+        _, sid, index, raw = msg
+        try:
+            t0 = time.monotonic()
+            decoded = dataset.decode_raw(raw, index)
+            t1 = time.monotonic()
+            item = dataset.augment_item(decoded, index)
+            t2 = time.monotonic()
+            conn.send(("done", sid, item, (t0, t1, t2)))
+        except BaseException as e:
+            try:
+                pickle.dumps(e)
+                exc: BaseException = e
+            except Exception:
+                exc = RuntimeError(
+                    f"cpu worker failed on sample {index}: {e!r}"
+                )
+            try:
+                conn.send(("err", sid, exc))
+            except OSError:
+                break
+    conn.close()
+
+
+# tasks in flight per worker: one EXECUTING plus one QUEUED in its pipe.
+# The prefilled task hides the parent round trip (result -> pump wakes ->
+# dispatch -> child recv), which on a saturated host costs whole scheduler
+# quanta — without it every worker idles that long between samples.
+PROC_PREFILL_DEPTH = 2
+
+
+class _ProcWorker:
+    """Parent-side handle: process + duplex pipe + in-flight task ids (FIFO:
+    the child answers in send order).  ``send_lock`` serializes writes to
+    the pipe: during an epoch takeover the outgoing pump can still be
+    mid-``send`` (pipe full behind a slow decode) when ``attach`` broadcasts
+    the rebind — unsynchronized interleaved writes would corrupt the pickle
+    stream."""
+
+    __slots__ = ("proc", "conn", "sids", "send_lock")
+
+    def __init__(self, proc, conn) -> None:
+        self.proc = proc
+        self.conn = conn
+        self.sids: List[int] = []  # at most PROC_PREFILL_DEPTH entries
+        self.send_lock = threading.Lock()
+
+    def send(self, msg: Tuple) -> None:
+        with self.send_lock:
+            self.conn.send(msg)
+
+
+class _CPUProcessPool:
+    """Spawn-based decode+augment worker pool, owned by the LOADER.
+
+    Spawning a worker costs hundreds of milliseconds (fresh interpreter +
+    numpy import), so unlike the per-epoch thread stages the pool PERSISTS
+    across epochs: each epoch's :class:`_ProcCPUStage` attaches to it,
+    re-``bind``s the freshly pickled dataset (carrying ``set_epoch`` state),
+    and detaches at shutdown without killing workers.  ``owner`` is the
+    takeover token — when a new epoch's stage attaches while an abandoned
+    iterator's pump thread is still unwinding, the old pump notices it lost
+    ownership and exits instead of racing the new one for the pipes.  Task
+    ids are pool-global and monotonic, so results from an abandoned epoch's
+    tasks are recognized and dropped by the next stage.  Workers are daemon
+    processes: an exiting interpreter never hangs on the pool."""
+
+    def __init__(self, payload: bytes, hard_cap: int) -> None:
+        self.ctx = multiprocessing.get_context("spawn")
+        self.payload = payload
+        self.hard_cap = max(1, hard_cap)
+        self.workers: List[_ProcWorker] = []
+        self.owner: Optional[Any] = None
+        self.crashes = 0  # workers that died unexpectedly
+        self.respawns = 0
+        # last child-reported diagnostic ("crash" message): without it, an
+        # unpickle/rebind failure in the child surfaces only as a generic
+        # "worker died" after the respawn churn burns every retry
+        self.last_error: Optional[str] = None
+        self._sid = 0
+        self._lock = threading.Lock()
+        self._closed = False
+
+    def next_sid(self) -> int:
+        with self._lock:
+            self._sid += 1
+            return self._sid
+
+    def attach(self, stage: Any, payload: bytes) -> None:
+        with self._lock:
+            self.owner = stage
+            rebind = payload != self.payload
+            self.payload = payload
+        if rebind:
+            for w in list(self.workers):  # snapshot: an old pump may mutate
+                try:
+                    w.send(("bind", payload))
+                except OSError:
+                    pass  # dead worker; the pump's reap pass replaces it
+
+    def spawn_one(self) -> None:
+        parent_conn, child_conn = self.ctx.Pipe()
+        proc = self.ctx.Process(
+            target=_cpu_proc_main,
+            args=(self.payload, child_conn),
+            name=f"pipe-cpu-proc-{len(self.workers)}",
+            daemon=True,
+        )
+        proc.start()
+        child_conn.close()  # the child holds its own copy
+        self.workers.append(_ProcWorker(proc, parent_conn))
+
+    def ensure(self, n: int) -> None:
+        # under the lock: during an epoch-boundary takeover the outgoing and
+        # incoming pump threads briefly coexist, and unsynchronized growth
+        # could overshoot hard_cap
+        with self._lock:
+            if self._closed:
+                return
+            while len(self.workers) < min(max(n, 1), self.hard_cap):
+                self.spawn_one()
+
+    def remove(self, w: _ProcWorker) -> None:
+        with self._lock:
+            if w in self.workers:
+                self.workers.remove(w)
+
+    def close(self) -> None:
+        """Terminate every worker (loader replacing the pool / tests).
+        Epoch-to-epoch shutdown never calls this — stages just detach."""
+        self._closed = True
+        for w in self.workers:
+            try:
+                w.send(("stop",))
+            except OSError:
+                pass
+            w.conn.close()
+        for w in self.workers:
+            w.proc.join(timeout=0.5)
+            if w.proc.is_alive():
+                w.proc.terminate()
+        self.workers.clear()
+
+
+class _ProcCPUStage:
+    """decode + augment in the spawn-process pool — same contract as
+    :class:`_CPUStage` (pull from ``decode_q``, deliver to ``done_q``,
+    gate-bounded parallelism, live resize, ``active`` pause flag) with the
+    work itself outside the GIL.
+
+    One parent-side pump thread does everything: it claims samples from the
+    fetch->decode queue under the :class:`AdjustableSemaphore` gate (a gate
+    permit is held from claim to final resolution, so resizes drain exactly
+    like the thread stage), assigns up to :data:`PROC_PREFILL_DEPTH` tasks
+    per worker over its pipe (one executing, one queued — the spare hides
+    the parent round trip between samples), multiplexes completions with
+    ``multiprocessing.connection.wait``, and records the shipped
+    decode/augment spans under the worker's pid lane.
+    Crash handling: a dead worker's in-flight sample is requeued ahead of
+    fresh work and retried on another worker up to ``PROC_TASK_ATTEMPTS``
+    total attempts (raw bytes are kept parent-side until success, so a retry
+    never refetches), the corpse is reaped and a replacement spawned — one
+    crash costs one sample at worst, never the epoch."""
+
+    def __init__(
+        self,
+        payload: bytes,
+        *,
+        pool: _CPUProcessPool,
+        width: int,
+        hard_cap: int,
+        decode_q: _BoundedQ,
+        done_q: "queue.Queue",
+        stop: threading.Event,
+        tracer,
+    ) -> None:
+        self.pool = pool
+        self.decode_q = decode_q
+        self.done_q = done_q
+        self.stop = stop
+        self.tracer = tracer
+        self.hard_cap = max(width, hard_cap)
+        # the gate bounds claimed-but-unresolved samples; it runs at
+        # PREFILL_DEPTH x width so every worker can hold a queued spare —
+        # `width` stays the stage's parallelism (worker count / knob value)
+        self._width = max(1, width)
+        self.gate = AdjustableSemaphore(PROC_PREFILL_DEPTH * self._width)
+        self.active = True
+        self.requeued = 0  # samples retried after a worker crash
+        self._inflight: Dict[int, _Sample] = {}
+        self._attempts: Dict[int, int] = {}
+        self._pending: Deque[int] = deque()  # crash-requeued sids, FIFO
+        pool.attach(self, payload)
+        pool.ensure(width)
+        self._thread = threading.Thread(
+            target=self._run, name="pipe-cpu-pool-pump", daemon=True
+        )
+        self._thread.start()
+
+    @property
+    def width(self) -> int:
+        return self._width
+
+    def resize(self, width: int) -> int:
+        w = max(1, min(int(width), self.hard_cap))
+        self._width = w
+        self.gate.set_limit(PROC_PREFILL_DEPTH * w)
+        self.pool.ensure(w)
+        return w
+
+    # -- pump ---------------------------------------------------------------
+    def _owned(self) -> bool:
+        return self.pool.owner is self and not self.stop.is_set()
+
+    def _run(self) -> None:
+        while self._owned():
+            self._reap()
+            self.pool.ensure(self._width)
+            self._dispatch()
+            workers = list(self.pool.workers)
+            busy = [w.conn for w in workers if w.sids]
+            if busy:
+                for conn in _mp_wait(busy, timeout=0.05):
+                    w = next(
+                        (x for x in workers if x.conn is conn), None
+                    )
+                    if w is None:
+                        continue
+                    try:
+                        self._resolve(w, w.conn.recv())
+                    except (EOFError, OSError):
+                        pass  # worker died mid-send; next reap handles it
+            # fully idle case: _dispatch's bounded blocking get is the only
+            # wait, so there is nothing further to sleep on here
+
+    def _dispatch(self) -> None:
+        while self._owned():
+            # emptiest eligible worker first: fill every idle worker before
+            # granting anyone its prefill spare
+            candidates = [x for x in list(self.pool.workers)
+                          if len(x.sids) < PROC_PREFILL_DEPTH
+                          and x.proc.is_alive()]
+            if not candidates:
+                return
+            w = min(candidates, key=lambda x: len(x.sids))
+            sid: Optional[int] = None
+            if self._pending:
+                sid = self._pending.popleft()  # retry holds its permit already
+            elif self.active and self.gate.acquire(timeout=0):
+                any_busy = any(x.sids for x in self.pool.workers)
+                try:
+                    # bounded blocking get when the whole stage is idle: the
+                    # pump's only sleep, released the instant a fetch lands
+                    s = self.decode_q.get(timeout=0.0 if any_busy else 0.05)
+                except queue.Empty:
+                    self.gate.release()
+                    return
+                sid = self.pool.next_sid()
+                self._inflight[sid] = s
+                self._attempts[sid] = 1
+            else:
+                if not self.active and not self._pending:
+                    time.sleep(0.02)  # paused: don't spin on the gate
+                return
+            s = self._inflight[sid]
+            w.sids.append(sid)
+            try:
+                w.send(("task", sid, s.index, s.raw))
+            except OSError:
+                w.sids.remove(sid)  # broken pipe = dead worker; reap + retry
+                self._retry_or_fail(
+                    sid, RuntimeError(
+                        f"cpu worker pid={w.proc.pid} lost sample {s.index} "
+                        "(pipe closed)"
+                    ),
+                )
+
+    def _reap(self) -> None:
+        dead = [w for w in list(self.pool.workers) if not w.proc.is_alive()]
+        for w in dead:
+            try:
+                while w.conn.poll():  # a result may have beaten the crash
+                    self._resolve(w, w.conn.recv())
+            except (EOFError, OSError):
+                pass
+            self.pool.crashes += 1
+            why = (f"; last worker diagnostic: {self.pool.last_error}"
+                   if self.pool.last_error else "")
+            for sid in w.sids:  # executing task + any prefilled spare
+                self._retry_or_fail(
+                    sid,
+                    RuntimeError(
+                        f"cpu worker pid={w.proc.pid} died "
+                        f"(exitcode={w.proc.exitcode}) while decoding{why}"
+                    ),
+                )
+            w.sids.clear()
+            w.conn.close()
+            self.pool.remove(w)
+            self.pool.respawns += 1
+
+    def _retry_or_fail(self, sid: int, exc: BaseException) -> None:
+        s = self._inflight.get(sid)
+        if s is None:
+            return  # an abandoned epoch's task: nothing to deliver to
+        if self._attempts.get(sid, 1) < PROC_TASK_ATTEMPTS:
+            self._attempts[sid] = self._attempts.get(sid, 1) + 1
+            self.requeued += 1
+            self._pending.append(sid)
+            return
+        del self._inflight[sid]
+        self._attempts.pop(sid, None)
+        self.done_q.put((s, _Failure(exc)))
+        self.gate.release()
+
+    def _resolve(self, w: _ProcWorker, msg: Tuple) -> None:
+        tag = msg[0]
+        if tag == "crash":
+            # the worker is about to exit; reap accounts for it and retries
+            # its task (if any).  Keep the child's diagnostic — it is the
+            # only evidence of e.g. an unpickle failure inside the worker.
+            self.pool.last_error = msg[1]
+            return
+        sid = msg[1]
+        if sid in w.sids:
+            w.sids.remove(sid)
+        s = self._inflight.pop(sid, None)
+        self._attempts.pop(sid, None)
+        if s is None:
+            return  # stale result from an abandoned epoch's stage
+        if tag == "done":
+            _, _, item, (t0, t1, t2) = msg
+            pid = w.proc.pid
+            self.tracer.record(STAGE_DECODE, t0, t1, tid=pid,
+                               index=s.index, batch_id=s.batch_id, proc=True)
+            self.tracer.record(STAGE_AUGMENT, t1, t2, tid=pid,
+                               index=s.index, batch_id=s.batch_id, proc=True)
+            s.raw = None
+            self.done_q.put((s, item))
+        else:  # "err": a dataset exception, not a crash — no retry
+            self.done_q.put((s, _Failure(msg[2])))
+        self.gate.release()
+
+    def join(self, timeout: float = 2.0) -> None:
+        self._thread.join(timeout=timeout)
 
 
 # ---------------------------------------------------------------------------
@@ -497,6 +911,62 @@ class _PipelineIter:
                 self._max_outstanding_bound,
             )
 
+        # budget co-tuning (AutotuneConfig.thread_budget): io and cpu widths
+        # are one coupled knob under a fixed total, so normalize the static
+        # shape onto the budget here — the split value is the IO width and
+        # the CPU stage always gets the remainder
+        self._budget = (
+            at.thread_budget
+            if at.enabled and at.thread_budget > 0 and self.split
+            else 0
+        )
+        if at.enabled and at.thread_budget > 0 and not self.split:
+            # monolithic fallback: no CPU stage to trade against, but the
+            # budget is still a promise about total width — cap the IO knob
+            # at it rather than silently reverting to the unbounded ceiling
+            self._max_io_bound = min(self._max_io_bound, at.thread_budget)
+            io_workers = min(io_workers, at.thread_budget)
+        self._split_lo = self._split_hi = 0
+        if self._budget:
+            b = self._budget
+            self._split_lo = max(at.min_fetch_workers, b - self._max_cpu_bound, 1)
+            self._split_hi = max(self._split_lo, b - max(at.min_cpu_workers, 1))
+            io_workers = min(
+                max(loader._tuned.get("io_cpu_split", io_workers),
+                    self._split_lo),
+                self._split_hi,
+            )
+            cpu_workers = b - io_workers
+
+        # CPU executor kind: static config, overridden by the tuned value
+        # when the budget co-tuner flipped it in a previous epoch
+        self.cpu_kind = cfg.cpu_executor if self.split else "thread"
+        if at.enabled and self.split and "cpu_executor" in loader._tuned:
+            self.cpu_kind = (
+                "process" if loader._tuned["cpu_executor"] else "thread"
+            )
+        # the process stage ships a pickled dataset copy to each spawn
+        # worker (decode/augment state only — see MapDataset's picklability
+        # contract).  Pickle once, up front: a clear construction-time error
+        # beats an opaque one from inside a worker.
+        self._proc_payload: Optional[bytes] = None
+        if self.split and (
+            self.cpu_kind == "process"
+            or (self._budget and at.tune_cpu_executor)
+        ):
+            try:
+                self._proc_payload = pickle.dumps(dataset)
+            except Exception as e:
+                if self.cpu_kind == "process":
+                    raise ValueError(
+                        "cpu_executor='process' requires a picklable dataset "
+                        "(the process CPU stage ships a pickled copy to each "
+                        "spawn worker; drop store/tracer members on pickle — "
+                        "see MapDataset's picklability contract): "
+                        f"pickling failed with {e!r}"
+                    ) from e
+                self._proc_payload = None  # exec-kind knob just unavailable
+
         self._stop = threading.Event()
         self.decode_q = _BoundedQ(queue_depth, self._stop)
         self.done_q: "queue.Queue" = queue.Queue()
@@ -516,17 +986,16 @@ class _PipelineIter:
         if not self.split:
             # monolithic fallback: the fetch stage already produces finished
             # items, so the CPU stage processes nothing — don't spin up an
-            # idle thread pool for it
+            # idle thread pool (much less a process pool) for it
             cpu_workers = cpu_hard = 1
-        self.cpu = _CPUStage(
-            dataset,
-            width=cpu_workers,
-            hard_cap=cpu_hard,
-            decode_q=self.decode_q,
-            done_q=self.done_q,
-            stop=self._stop,
-            tracer=self.tracer,
-        )
+        self._cpu_hard = cpu_hard
+        self._cpu_width = cpu_workers
+        # both CPU stage kinds share decode_q/done_q and are created lazily;
+        # the inactive one (if ever created) is paused, so the cpu_executor
+        # knob can swap kinds mid-epoch without disturbing in-flight samples
+        self._thread_cpu: Optional[_CPUStage] = None
+        self._proc_cpu: Optional[_ProcCPUStage] = None
+        self.cpu = self._make_cpu_stage(self.cpu_kind)
 
         self._sampler_iter = iter(loader.sampler)
         self._exhausted = False
@@ -553,51 +1022,115 @@ class _PipelineIter:
         self._cur_group = 0
 
         if loader.autotuner is not None:
-            from repro.core.autotune import build_pipeline_knobs
-
-            # knob callbacks reach this iterator through a weakref: the
-            # autotuner outlives every epoch's iterator, and a strong
-            # closure would pin an abandoned iterator (and its stage
-            # threads) until the next bind() — the __del__-based shutdown
-            # relies on refcount collection.  A dead ref makes get report 0
-            # and set echo the request; nothing real moves, and the next
-            # epoch's bind() replaces these callbacks wholesale.
-            ref = weakref.ref(self)
-
-            def _wget(fn):
-                return lambda: (lambda it: fn(it) if it is not None else 0)(ref())
-
-            def _wset(fn):
-                return lambda n: (
-                    lambda it: fn(it, n) if it is not None else int(n)
-                )(ref())
-
-            knobs = build_pipeline_knobs(
-                at,
-                get_io=_wget(lambda it: it.io.gate.limit),
-                set_io=_wset(lambda it, n: it._set_io_workers(n)),
-                get_cpu=_wget(lambda it: it.cpu.gate.limit),
-                set_cpu=_wset(lambda it, n: it._set_cpu_workers(n)),
-                get_outstanding=_wget(lambda it: it.max_outstanding),
-                set_outstanding=_wset(lambda it, n: it._set_outstanding(n)),
-                get_queue=_wget(lambda it: it.decode_q.depth),
-                set_queue=_wset(lambda it, n: it._set_stage_queue(n)),
-                hedge=loader.hedge,
-                max_io=self._max_io_bound,
-                max_cpu=self._max_cpu_bound,
-                max_outstanding=self._max_outstanding_bound,
-                max_queue=self._max_queue_bound,
+            from repro.core.autotune import (
+                build_budget_knobs,
+                build_pipeline_knobs,
+                make_weak_knob_callbacks,
             )
-            if not self.split:
-                # nothing flows through the CPU stage or its queue — inert
-                # knobs would waste the controller's probe windows
-                knobs = [k for k in knobs
-                         if k.name not in ("cpu_workers", "stage_queue")]
+
+            # knob callbacks reach this iterator through a weakref (see
+            # make_weak_knob_callbacks): the autotuner outlives every
+            # epoch's iterator, and a strong closure would pin an abandoned
+            # iterator (and its stage threads) until the next bind().
+            _wget, _wset = make_weak_knob_callbacks(self)
+            if self._budget:
+                # budget co-tuning: ONE coupled io/cpu split knob (+ the
+                # executor kind when the dataset is process-capable) instead
+                # of two independent width knobs
+                proc_ok = self._proc_payload is not None
+                knobs = build_budget_knobs(
+                    at,
+                    budget=self._budget,
+                    lo_split=self._split_lo,
+                    hi_split=self._split_hi,
+                    get_split=_wget(lambda it: it.io.gate.limit),
+                    set_split=_wset(lambda it, n: it._set_split(n)),
+                    get_outstanding=_wget(lambda it: it.max_outstanding),
+                    set_outstanding=_wset(lambda it, n: it._set_outstanding(n)),
+                    get_queue=_wget(lambda it: it.decode_q.depth),
+                    set_queue=_wset(lambda it, n: it._set_stage_queue(n)),
+                    get_cpu_executor=(
+                        _wget(lambda it: int(it.cpu_kind == "process"))
+                        if proc_ok else None
+                    ),
+                    set_cpu_executor=(
+                        _wset(lambda it, n: it._set_cpu_executor(n))
+                        if proc_ok else None
+                    ),
+                    hedge=loader.hedge,
+                    max_outstanding=self._max_outstanding_bound,
+                    max_queue=self._max_queue_bound,
+                )
+            else:
+                knobs = build_pipeline_knobs(
+                    at,
+                    get_io=_wget(lambda it: it.io.gate.limit),
+                    set_io=_wset(lambda it, n: it._set_io_workers(n)),
+                    get_cpu=_wget(lambda it: it.cpu.width),
+                    set_cpu=_wset(lambda it, n: it._set_cpu_workers(n)),
+                    get_outstanding=_wget(lambda it: it.max_outstanding),
+                    set_outstanding=_wset(lambda it, n: it._set_outstanding(n)),
+                    get_queue=_wget(lambda it: it.decode_q.depth),
+                    set_queue=_wset(lambda it, n: it._set_stage_queue(n)),
+                    hedge=loader.hedge,
+                    max_io=self._max_io_bound,
+                    max_cpu=self._max_cpu_bound,
+                    max_outstanding=self._max_outstanding_bound,
+                    max_queue=self._max_queue_bound,
+                )
+                if not self.split:
+                    # nothing flows through the CPU stage or its queue —
+                    # inert knobs would waste the controller's probe windows
+                    knobs = [k for k in knobs
+                             if k.name not in ("cpu_workers", "stage_queue")]
             loader.autotuner.bind(knobs)
             for knob in loader._cache_knobs:
                 loader.autotuner.attach_knob(knob)
 
         self._pump()
+
+    # -- CPU stage factory / executor swap -----------------------------------
+    def _make_cpu_stage(self, kind: str):
+        """Create (or reactivate) the CPU stage of the requested kind.  Both
+        kinds share decode_q/done_q/stop; the process kind attaches to the
+        loader-persistent :class:`_CPUProcessPool` (spawn cost is paid once,
+        not per epoch) and rebinding ships this epoch's dataset state."""
+        if kind == "process":
+            if self._proc_cpu is None:
+                pool = self.loader._cpu_pool
+                if pool is None or pool.hard_cap < self._cpu_hard or pool._closed:
+                    if pool is not None:
+                        pool.close()
+                    pool = _CPUProcessPool(self._proc_payload, self._cpu_hard)
+                    self.loader._cpu_pool = pool
+                self._proc_cpu = _ProcCPUStage(
+                    self._proc_payload,
+                    pool=pool,
+                    width=self._cpu_width,
+                    hard_cap=self._cpu_hard,
+                    decode_q=self.decode_q,
+                    done_q=self.done_q,
+                    stop=self._stop,
+                    tracer=self.tracer,
+                )
+            else:
+                self._proc_cpu.active = True
+                self._proc_cpu.resize(self._cpu_width)
+            return self._proc_cpu
+        if self._thread_cpu is None:
+            self._thread_cpu = _CPUStage(
+                self.loader.dataset,
+                width=self._cpu_width,
+                hard_cap=self._cpu_hard,
+                decode_q=self.decode_q,
+                done_q=self.done_q,
+                stop=self._stop,
+                tracer=self.tracer,
+            )
+        else:
+            self._thread_cpu.active = True
+            self._thread_cpu.resize(self._cpu_width)
+        return self._thread_cpu
 
     # -- autotuner control surfaces (applied between batches) ----------------
     def _set_io_workers(self, n: int) -> int:
@@ -606,10 +1139,50 @@ class _PipelineIter:
         self.loader._tuned["io_workers"] = applied
         return applied
 
+    def _resize_cpu(self, n: int) -> int:
+        applied = self.cpu.resize(n)
+        self._cpu_width = applied
+        return applied
+
     def _set_cpu_workers(self, n: int) -> int:
         n = max(self.cfg.autotune.min_cpu_workers, int(n))
-        applied = self.cpu.resize(n)
+        applied = self._resize_cpu(n)
         self.loader._tuned["cpu_workers"] = applied
+        return applied
+
+    def _set_split(self, n: int) -> int:
+        """Apply one value of the coupled io/cpu split (budget mode): IO gets
+        ``n``, the CPU stage gets ``budget - n``.  The shrinking side is
+        resized first so the LIMITS never sum above the budget, even
+        transiently (surplus in-flight work drains through its gate)."""
+        n = max(self._split_lo, min(int(n), self._split_hi))
+        cpu = self._budget - n
+        if n >= self.io.gate.limit:
+            self._resize_cpu(cpu)
+            self.io.resize(n)
+        else:
+            self.io.resize(n)
+            self._resize_cpu(cpu)
+        self.loader._tuned["io_cpu_split"] = n
+        return n
+
+    def _set_cpu_executor(self, v: int) -> int:
+        """Swap the CPU stage kind live (binary budget-mode knob).  The old
+        stage is paused, not torn down: its in-flight samples finish into
+        the shared done_q (strict reorder is executor-oblivious), and a
+        revert two windows later reactivates it for free."""
+        want = "process" if int(v) >= 1 else "thread"
+        cur = int(self.cpu_kind == "process")
+        if want == self.cpu_kind:
+            return cur
+        if want == "process" and self._proc_payload is None:
+            return cur  # not process-capable: echo so the controller skips
+        old = self.cpu
+        self.cpu = self._make_cpu_stage(want)
+        old.active = False
+        self.cpu_kind = want
+        applied = int(want == "process")
+        self.loader._tuned["cpu_executor"] = applied
         return applied
 
     def _set_outstanding(self, n: int) -> int:
@@ -784,7 +1357,8 @@ class _PipelineIter:
         (and what bench_pipeline asserts overlap with)."""
         out: Dict[str, Any] = {
             "io_workers": self.io.gate.limit,
-            "cpu_workers": self.cpu.gate.limit,
+            "cpu_workers": self.cpu.width,
+            "cpu_executor": self.cpu_kind,
             "outstanding_batches": self.max_outstanding,
             "decode_queue": self.decode_q.occupancy(),
             "done_queue": self.done_q.qsize(),
@@ -793,6 +1367,18 @@ class _PipelineIter:
             "split": self.split,
             "reorder": "strict" if self.strict else f"window={self.window}",
         }
+        if self._budget:
+            out["thread_budget"] = self._budget
+        if self._proc_cpu is not None:
+            pool = self._proc_cpu.pool
+            out["cpu_pool"] = {
+                "workers": len(pool.workers),
+                "crashes": pool.crashes,
+                "respawns": pool.respawns,
+                "requeued": self._proc_cpu.requeued,
+            }
+            if pool.last_error:
+                out["cpu_pool"]["last_error"] = pool.last_error
         hedge = self.io.hedge
         if hedge is not None:
             out["hedges_issued"] = hedge.hedges_issued
@@ -814,7 +1400,12 @@ class _PipelineIter:
             pass
         self._stop.set()
         self.io.close()
-        self.cpu.join()
+        # join every CPU stage ever created this epoch (an executor-kind
+        # flip leaves the paused one alive); the process POOL persists on
+        # the loader — only the pump thread belongs to this iterator
+        for stage in (self._thread_cpu, self._proc_cpu):
+            if stage is not None:
+                stage.join()
 
     def __del__(self) -> None:  # pragma: no cover - best effort
         try:

@@ -56,8 +56,18 @@ class Tracer:
         self._dropped = 0
         self.t_start = time.monotonic()
 
-    def record(self, name: str, t0: float, t1: float, **args: Any) -> None:
-        span = Span(name, t0, t1, threading.get_ident(), args)
+    def record(
+        self, name: str, t0: float, t1: float, *,
+        tid: Optional[int] = None, **args: Any,
+    ) -> None:
+        """Record one span.  ``tid`` overrides the recording thread's id —
+        used when the parent records a span ON BEHALF of a worker process
+        (the staged pipeline's process CPU stage ships ``time.monotonic``
+        endpoints home over the result pipe; CLOCK_MONOTONIC is system-wide
+        on the platforms we run, so the spans stay comparable), keeping each
+        worker its own lane in the Chrome trace."""
+        span = Span(name, t0, t1,
+                    threading.get_ident() if tid is None else int(tid), args)
         with self._lock:
             if len(self._spans) < self._max:
                 self._spans.append(span)
@@ -146,7 +156,10 @@ class _NullTracer(Tracer):
     def __init__(self) -> None:  # pragma: no cover - trivial
         super().__init__(max_spans=0)
 
-    def record(self, name: str, t0: float, t1: float, **args: Any) -> None:
+    def record(
+        self, name: str, t0: float, t1: float, *,
+        tid: Optional[int] = None, **args: Any,
+    ) -> None:
         pass
 
 

@@ -46,6 +46,15 @@ class MapDataset:
     its ``reorder="strict"`` guarantee.  Datasets that cannot split keep the
     default ``supports_split() -> False`` and the pipeline falls back to the
     monolithic ``__getitem__`` on its IO executor.
+
+    **Picklability contract** (``LoaderConfig.cpu_executor="process"``): the
+    pipeline's process CPU stage ships one pickled copy of the dataset to
+    each spawn-based worker, where ONLY ``decode_raw`` / ``augment_item``
+    run — ``get_raw`` always executes in the parent's IO stage.  A split
+    dataset is process-capable iff it pickles with its decode/augment state
+    intact; members those stages never touch (the store, the tracer) may be
+    dropped on pickle, which is exactly what :class:`ImageDataset` and
+    :class:`TokenDataset` do via ``__getstate__``.
     """
 
     def __len__(self) -> int:
@@ -89,7 +98,25 @@ def _aug_rng(seed: int, epoch: int, index: int) -> np.random.Generator:
     return np.random.default_rng(int.from_bytes(h, "little"))
 
 
-class ImageDataset(MapDataset):
+class _StripStoreOnPickle:
+    """Mixin implementing the process-CPU-stage picklability contract: a
+    pickled copy drops the store (locks, sockets, open files — and never
+    needed: ``get_raw`` runs in the parent) and the tracer (holds a lock;
+    worker-side spans are shipped home by the stage itself)."""
+
+    def __getstate__(self) -> Dict:
+        state = dict(self.__dict__)
+        state["store"] = None
+        state["tracer"] = None
+        return state
+
+    def __setstate__(self, state: Dict) -> None:
+        self.__dict__.update(state)
+        if self.__dict__.get("tracer") is None:
+            self.tracer = NULL_TRACER
+
+
+class ImageDataset(_StripStoreOnPickle, MapDataset):
     """ImageNet-style dataset over an ObjectStore (paper's setup)."""
 
     def __init__(
@@ -171,7 +198,7 @@ class ImageDataset(MapDataset):
         return self[int(rng.integers(0, self.num_items))]
 
 
-class TokenDataset(MapDataset):
+class TokenDataset(_StripStoreOnPickle, MapDataset):
     """Packed-sequence LM dataset: one object = one packed token sequence."""
 
     def __init__(
@@ -241,6 +268,69 @@ class SyntheticTokenDataset(MapDataset):
         rng = np.random.default_rng(self.seed * 1_000_003 + index)
         toks = rng.integers(0, self.vocab_size, size=self.seq_len + 1, dtype=np.int32)
         return {"tokens": toks[:-1], "targets": toks[1:], "nbytes": np.int64(toks.nbytes)}
+
+
+class SpinDataset(MapDataset):
+    """Split-path dataset whose decode stage genuinely HOLDS the GIL.
+
+    The simulated decoders elsewhere model C-library work with
+    ``time.sleep`` (which releases the GIL, like libjpeg) — fine for IO/CPU
+    overlap studies, but it *understates* GIL contention, the very ceiling
+    the paper's Appendix A.4 measures.  This dataset's decode is a pure-
+    Python byte-crunch busy loop: deterministic output (so strict-reorder
+    bit-identity claims hold across executors), ~``0.17 ms`` per 2048-byte
+    round, and no escape from the interpreter — the regime where the
+    pipeline's process CPU stage is the only way past single-core decode
+    speed.  ``io_s`` adds a GIL-releasing sleep in ``get_raw`` to stand in
+    for storage latency.  Fully picklable (no store, no locks), so it is
+    also the reference process-capable dataset for tests and
+    ``bench_procpool``.
+    """
+
+    def __init__(
+        self,
+        num_items: int,
+        item_bytes: int = 2048,
+        spin_rounds: int = 8,
+        io_s: float = 0.0,
+        seed: int = 0,
+    ) -> None:
+        self.num_items = num_items
+        self.item_bytes = item_bytes
+        self.spin_rounds = spin_rounds
+        self.io_s = io_s
+        self.seed = seed
+
+    def __len__(self) -> int:
+        return self.num_items
+
+    # -- split path -----------------------------------------------------------
+    def supports_split(self) -> bool:
+        return True
+
+    def get_raw(self, index: int) -> bytes:
+        if self.io_s:
+            time.sleep(self.io_s)  # releases the GIL, like a socket read
+        rng = np.random.default_rng(self.seed * 1_000_003 + index)
+        return rng.bytes(self.item_bytes)
+
+    def decode_raw(self, raw: bytes, index: int) -> Tuple[int, int]:
+        acc = index & 0xFFFFFFFF
+        for _ in range(self.spin_rounds):
+            for b in raw:  # pure Python: holds the GIL for the whole decode
+                acc = (acc * 1103515245 + b) & 0xFFFFFFFF
+        return acc, len(raw)
+
+    def augment_item(self, decoded: Tuple[int, int], index: int) -> Item:
+        acc, nbytes = decoded
+        return {
+            "x": np.int64(acc),
+            "label": np.int32(index),
+            "nbytes": np.int64(nbytes),
+        }
+
+    def __getitem__(self, index: int) -> Item:
+        return self.augment_item(self.decode_raw(self.get_raw(index), index), index)
 
 
 def build_token_store(

@@ -22,7 +22,13 @@ import jax
 import jax.random as jr
 import numpy as np
 
-from repro.config import LoaderConfig, StoreConfig, TrainConfig, get_arch
+from repro.config import (
+    AutotuneConfig,
+    LoaderConfig,
+    StoreConfig,
+    TrainConfig,
+    get_arch,
+)
 from repro.core.loader import ConcurrentDataLoader
 from repro.core.tracing import Tracer
 from repro.core.utilization import accelerator_stats
@@ -92,6 +98,19 @@ def main() -> int:
                     help="pipeline IO executor width (0 = workers*fetchers)")
     ap.add_argument("--cpu-workers", type=int, default=0,
                     help="pipeline CPU executor width (0 = 4)")
+    ap.add_argument("--cpu-executor", choices=["thread", "process"],
+                    default="thread",
+                    help="pipeline decode+augment executor: 'thread' (GIL-"
+                         "releasing C decoders) or 'process' (spawn pool — "
+                         "the GIL escape for Python-side decoders; needs a "
+                         "picklable split-path dataset)")
+    ap.add_argument("--autotune", action="store_true",
+                    help="online knob control (closed-loop io/cpu/queue/"
+                         "outstanding tuning)")
+    ap.add_argument("--thread-budget", type=int, default=0,
+                    help="co-tune the pipeline io/cpu split (and executor "
+                         "kind) as ONE knob under this fixed total width; "
+                         "implies --autotune (0 = independent knobs)")
     ap.add_argument("--optimizer", default="adamw")
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--microbatches", type=int, default=1)
@@ -105,6 +124,10 @@ def main() -> int:
     args = ap.parse_args()
 
     cfg = get_arch(args.arch, smoke=args.smoke)
+    atcfg = AutotuneConfig(
+        enabled=args.autotune or args.thread_budget > 0,
+        thread_budget=args.thread_budget,
+    )
     tcfg = TrainConfig(
         optimizer=args.optimizer,
         learning_rate=args.lr,
@@ -127,6 +150,8 @@ def main() -> int:
             reorder_window=args.reorder_window,
             io_workers=args.io_workers,
             cpu_workers=args.cpu_workers,
+            cpu_executor=args.cpu_executor,
+            autotune=atcfg,
             seed=args.seed,
         ),
         tracer=tracer,

@@ -529,3 +529,66 @@ def test_autotune_never_caps_static_config(dataset):
     assert it.max_outstanding == 16  # num_workers * prefetch_factor, uncapped
     assert it._fetch_workers == 8
     it.shutdown()
+
+
+def test_build_budget_knobs_shape_and_schedule():
+    from repro.core.autotune import (
+        budget_split_schedule,
+        build_budget_knobs,
+        make_weak_knob_callbacks,
+    )
+
+    cfg = AutotuneConfig(enabled=True, thread_budget=16)
+    state = {"split": 4, "out": 8, "q": 64, "exec": 0}
+
+    def setter(key):
+        def s(n):
+            state[key] = int(n)
+            return int(n)
+        return s
+
+    knobs = build_budget_knobs(
+        cfg, budget=16, lo_split=1, hi_split=15,
+        get_split=lambda: state["split"], set_split=setter("split"),
+        get_outstanding=lambda: state["out"], set_outstanding=setter("out"),
+        get_queue=lambda: state["q"], set_queue=setter("q"),
+        get_cpu_executor=lambda: state["exec"], set_cpu_executor=setter("exec"),
+    )
+    by_name = {k.name: k for k in knobs}
+    # the independent width knobs are replaced by the coupled split knob
+    assert set(by_name) == {"io_cpu_split", "outstanding", "stage_queue",
+                            "cpu_executor"}
+    split = by_name["io_cpu_split"]
+    assert (split.lo, split.hi) == (1, 15)
+    assert split.scale == "add"  # a +-budget/4 jump, not a x2 jump
+    assert split.step_schedule == budget_split_schedule(16) == (4, 2, 1)
+    assert by_name["cpu_executor"].is_binary
+    # tune_cpu_executor=False / no setter -> no executor knob
+    assert "cpu_executor" not in {
+        k.name for k in build_budget_knobs(
+            AutotuneConfig(enabled=True, thread_budget=16,
+                           tune_cpu_executor=False),
+            budget=16, lo_split=1, hi_split=15,
+            get_split=lambda: 4, set_split=setter("split"),
+            get_outstanding=lambda: 8, set_outstanding=setter("out"),
+            get_queue=lambda: 64, set_queue=setter("q"),
+            get_cpu_executor=lambda: 0, set_cpu_executor=setter("exec"),
+        )
+    }
+    assert budget_split_schedule(8) == (2, 1)
+    assert budget_split_schedule(3) == (1,)
+
+    # weak callbacks: once the owner dies, get reports 0 / set echoes
+    class Owner:
+        value = 5
+
+    owner = Owner()
+    wget, wset = make_weak_knob_callbacks(owner)
+    g = wget(lambda it: it.value)
+    s = wset(lambda it, n: n + it.value)
+    assert g() == 5 and s(2) == 7
+    del owner
+    import gc
+
+    gc.collect()
+    assert g() == 0 and s(2) == 2

@@ -239,3 +239,32 @@ def test_dispatch_spreads_batches_across_workers():
         pass
     workers = {s.args.get("worker") for s in tracer.spans(LOAD_BATCH)}
     assert len(workers) == 4, f"batches funneled to workers {workers}"
+
+
+def test_legacy_abandoned_iterator_collected_with_autotune(dataset):
+    """ROADMAP leak fix: the LEGACY iterator's knob callbacks must hold the
+    iterator only weakly — a strong closure on the loader-lived autotuner
+    pinned an abandoned ``_LoaderIter`` (and its worker threads) until the
+    next epoch's ``bind()``."""
+    import gc
+    import weakref
+
+    from repro.config import AutotuneConfig
+
+    at = AutotuneConfig(enabled=True)
+    cfg = LoaderConfig(impl="threaded", batch_size=BS, num_workers=2,
+                       num_fetch_workers=4, seed=1, autotune=at)
+    dl = ConcurrentDataLoader(dataset, cfg)
+    it = iter(dl)
+    next(it)
+    ref = weakref.ref(it)
+    workers = list(it.workers)
+    del it
+    gc.collect()
+    assert ref() is None, "knob callbacks still pin the abandoned iterator"
+    for w in workers:
+        w.join(timeout=5)
+        assert not w.thread.is_alive(), "worker threads leaked past abandonment"
+    # the dead callbacks are inert: a knob move echoes, nothing crashes
+    for k in dl.autotuner.knobs:
+        k.set(k.get() or 1)

@@ -17,7 +17,12 @@ from repro.core.tracing import (
     STAGE_FETCH,
     Tracer,
 )
-from repro.data.dataset import ImageDataset, SyntheticTokenDataset, TokenDataset
+from repro.data.dataset import (
+    ImageDataset,
+    SpinDataset,
+    SyntheticTokenDataset,
+    TokenDataset,
+)
 from repro.data.imagenet_synth import SyntheticImageStore
 from repro.data.store import InMemoryStore, SimulatedS3Store
 
@@ -324,3 +329,177 @@ def test_bad_reorder_config_rejected(dataset):
     with pytest.raises(ValueError, match="reorder_window"):
         ConcurrentDataLoader(
             dataset, LoaderConfig(pipeline=True, reorder_window=0))
+
+
+# -- process CPU stage (the GIL escape) --------------------------------------
+
+
+def spin_digest(ds, **kw):
+    base = dict(batch_size=8, num_workers=2, prefetch_factor=2,
+                seed=11, timeout_s=60)
+    base.update(kw)
+    return [(b["x"].tolist(), b["label"].tolist())
+            for b in ConcurrentDataLoader(ds, LoaderConfig(**base))]
+
+
+def test_process_cpu_stage_bit_identical_across_epochs():
+    ds = SpinDataset(48, item_bytes=256, spin_rounds=2)
+    cfg = LoaderConfig(batch_size=8, num_workers=2, seed=3, timeout_s=60)
+    proc_cfg = LoaderConfig(batch_size=8, num_workers=2, seed=3, timeout_s=60,
+                            pipeline=True, cpu_executor="process",
+                            cpu_workers=2)
+    ref_dl = ConcurrentDataLoader(ds, cfg)
+    dl = ConcurrentDataLoader(ds, proc_cfg)
+    for ep in range(2):  # epoch 2 exercises pool reuse + dataset rebind
+        ref_dl.set_epoch(ep)
+        dl.set_epoch(ep)
+        ref = [(b["x"].tolist(), b["label"].tolist()) for b in ref_dl]
+        got = [(b["x"].tolist(), b["label"].tolist()) for b in dl]
+        assert got == ref, f"epoch {ep} diverged"
+    stats = dl.stage_stats()
+    assert stats["cpu_executor"] == "process"
+    assert stats["cpu_pool"]["crashes"] == 0
+
+
+def test_process_worker_crash_retries_sample_and_strict_order_survives():
+    import os
+    import signal
+    import time
+
+    ds = SpinDataset(96, item_bytes=2048, spin_rounds=20)
+    cfg = LoaderConfig(batch_size=8, num_workers=2, seed=3, timeout_s=60,
+                       pipeline=True, cpu_executor="process", cpu_workers=2)
+    ref = [b["label"].tolist() for b in ConcurrentDataLoader(
+        ds, LoaderConfig(batch_size=8, num_workers=2, seed=3, timeout_s=60))]
+    dl = ConcurrentDataLoader(ds, cfg)
+    it = iter(dl)
+    got = [next(it)["label"].tolist()]
+    # kill a worker that is BUSY (has a task in flight) mid-epoch
+    deadline = time.monotonic() + 15
+    killed = False
+    while not killed and time.monotonic() < deadline:
+        for w in list(it.cpu.pool.workers):
+            if w.sids and w.proc.pid:
+                os.kill(w.proc.pid, signal.SIGKILL)
+                killed = True
+                break
+    assert killed, "no busy worker to kill — epoch finished too fast"
+    got += [b["label"].tolist() for b in it]
+    # the killed worker's sample was requeued onto a fresh worker: the
+    # stream is complete and still bit-exactly ordered
+    assert got == ref
+    pool = dl.stage_stats()["cpu_pool"]
+    assert pool["crashes"] >= 1
+    assert pool["respawns"] >= 1
+    assert pool["requeued"] >= 1
+
+
+def test_process_executor_requires_picklable_dataset():
+    class Unpicklable(SpinDataset):
+        def __init__(self):
+            super().__init__(16, item_bytes=64, spin_rounds=1)
+            self._fn = lambda x: x  # lambdas don't pickle
+
+    dl = ConcurrentDataLoader(
+        Unpicklable(),
+        LoaderConfig(batch_size=4, num_workers=1, pipeline=True,
+                     cpu_executor="process"),
+    )
+    with pytest.raises(ValueError, match="picklable"):
+        iter(dl)
+
+
+def test_image_dataset_pickles_without_store():
+    import pickle
+
+    store = SyntheticImageStore(8, seed=0, avg_kb=2)
+    ds = ImageDataset(store, 8, out_size=16, tracer=Tracer())
+    clone = pickle.loads(pickle.dumps(ds))
+    assert clone.store is None  # the CPU stages never touch it
+    raw = ds.get_raw(3)
+    a = ds.augment_item(ds.decode_raw(raw, 3), 3)
+    b = clone.augment_item(clone.decode_raw(raw, 3), 3)
+    assert (a["image"] == b["image"]).all()
+
+
+def test_bad_cpu_executor_rejected(dataset):
+    with pytest.raises(ValueError, match="cpu_executor"):
+        ConcurrentDataLoader(dataset, LoaderConfig(cpu_executor="fork"))
+
+
+# -- budget co-tuning --------------------------------------------------------
+
+
+def test_thread_budget_below_floor_rejected(dataset):
+    at = AutotuneConfig(enabled=True, thread_budget=1)
+    with pytest.raises(ValueError, match="thread_budget"):
+        ConcurrentDataLoader(
+            dataset, LoaderConfig(pipeline=True, autotune=at))
+
+
+def test_thread_budget_co_tunes_split_within_budget():
+    BUDGET = 6
+    ds = SpinDataset(96, item_bytes=256, spin_rounds=2, io_s=0.002)
+    at = AutotuneConfig(enabled=True, thread_budget=BUDGET,
+                        interval_batches=1, min_window_s=0.0,
+                        warmup_windows=0, tune_cpu_executor=False)
+    cfg = LoaderConfig(batch_size=4, num_workers=1, prefetch_factor=2,
+                       io_workers=1, pipeline=True, seed=5, timeout_s=60,
+                       autotune=at)
+    dl = ConcurrentDataLoader(ds, cfg)
+    for ep in range(3):
+        dl.set_epoch(ep)
+        it = iter(dl)
+        for _ in it:
+            # the invariant the co-tuner exists for: at EVERY step the two
+            # stage widths stay inside the budget
+            assert it.io.gate.limit + it.cpu.width <= BUDGET
+    knob_names = {k.name for k in dl.autotuner.knobs}
+    assert "io_cpu_split" in knob_names
+    # the independent width knobs are REPLACED, not supplemented
+    assert not knob_names & {"io_workers", "cpu_workers"}
+    probed = {e.knob for e in dl.autotuner.events if e.action == "probe"}
+    assert "io_cpu_split" in probed
+    assert "io_cpu_split" in dl._tuned
+
+
+def test_thread_budget_caps_io_for_unsplittable_dataset():
+    """A monolithic dataset has no CPU stage to trade against, but
+    thread_budget is still a promise about total width: the IO knob must be
+    capped at the budget, not silently unbounded."""
+    BUDGET = 3
+    ds = SyntheticTokenDataset(64, 16, 100)
+    at = AutotuneConfig(enabled=True, thread_budget=BUDGET,
+                        interval_batches=1, min_window_s=0.0,
+                        warmup_windows=0)
+    cfg = LoaderConfig(batch_size=4, num_workers=1, prefetch_factor=2,
+                       pipeline=True, seed=5, timeout_s=60, autotune=at)
+    dl = ConcurrentDataLoader(ds, cfg)
+    for ep in range(2):
+        dl.set_epoch(ep)
+        it = iter(dl)
+        assert not it.split and it._budget == 0
+        for _ in it:
+            assert it.io.gate.limit <= BUDGET
+
+
+def test_cpu_executor_knob_swaps_stage_mid_epoch():
+    ds = SpinDataset(64, item_bytes=256, spin_rounds=2)
+    at = AutotuneConfig(enabled=True, thread_budget=4)
+    cfg = LoaderConfig(batch_size=8, num_workers=1, prefetch_factor=2,
+                       seed=9, timeout_s=60, pipeline=True, autotune=at)
+    dl = ConcurrentDataLoader(ds, cfg)
+    it = iter(dl)
+    batches = [next(it)]
+    knob = next(k for k in dl.autotuner.knobs if k.name == "cpu_executor")
+    assert knob.get() == 0
+    assert knob.set(1) == 1  # thread -> process: spawns/attaches the pool
+    assert it.cpu_kind == "process"
+    batches.append(next(it))
+    assert knob.set(0) == 0  # and back; in-flight samples are unaffected
+    assert it.cpu_kind == "thread"
+    batches += list(it)
+    got = [(b["x"].tolist(), b["label"].tolist()) for b in batches]
+    ref = spin_digest(ds, batch_size=8, num_workers=1, prefetch_factor=2,
+                      seed=9)
+    assert got == ref  # strict reorder is executor-oblivious

@@ -1,0 +1,105 @@
+"""scripts/publish_trend.py publish + validate behaviour (the CI
+``dashboard-validate`` gate runs the same code against the same fixtures)."""
+import json
+import os
+import shutil
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "scripts"))
+from publish_trend import publish, validate_site  # noqa: E402
+
+FIXTURES = os.path.join(os.path.dirname(__file__), "data", "trend")
+
+
+@pytest.fixture()
+def site(tmp_path):
+    site_dir = str(tmp_path / "site")
+    assert publish(FIXTURES, site_dir) == 0
+    return site_dir
+
+
+def test_fixture_site_validates_clean(site):
+    assert validate_site(site) == []
+
+
+def test_publish_output_shape(site):
+    with open(os.path.join(site, "trend.json")) as f:
+        trend = json.load(f)
+    assert set(trend["benches"]) == {"procpool", "pipeline"}
+    runs = trend["benches"]["procpool"]["runs"]
+    assert [r["stamp"] for r in runs] == ["20260601", "20260602"]
+    # claim rows survive the aggregation (what the dashboard renders)
+    assert runs[-1]["claims_total"] == 4
+    assert all({"claim", "ok"} <= set(c) for c in runs[-1]["claims"])
+    # a failing claim is preserved, not laundered into a pass
+    pipe = trend["benches"]["pipeline"]["runs"][-1]
+    assert pipe["claims_passed"] == 1 and pipe["claims_total"] == 2
+    # stamped history files accumulate under data/
+    assert len(os.listdir(os.path.join(site, "data"))) == 3
+
+
+def test_validate_flags_null_placeholder(site):
+    index = os.path.join(site, "index.html")
+    with open(index) as f:
+        html = f.read()
+    start = html.index("const TREND = ")
+    end = html.index(";\n", start)
+    broken = html[:start] + "const TREND = /*__TREND_JSON__*/null" + html[end:]
+    with open(index, "w") as f:
+        f.write(broken)
+    assert any("placeholder" in p for p in validate_site(site))
+
+
+def test_validate_flags_missing_claim_rows(site, tmp_path):
+    # a bench that silently stops reporting claims must fail validation
+    doc = {"name": "procpool", "rows": [{"cell": "x", "img_per_s": 1.0}],
+           "claims": [], "wall_s": 1.0}
+    extra = tmp_path / "extra"
+    extra.mkdir()
+    with open(extra / "BENCH_procpool_20260603_run43.json", "w") as f:
+        json.dump(doc, f)
+    assert publish(str(extra), site) == 0
+    assert any("no claim rows" in p for p in validate_site(site))
+
+
+def test_validate_flags_malformed_html(site):
+    index = os.path.join(site, "index.html")
+    with open(index) as f:
+        html = f.read()
+    with open(index, "w") as f:
+        f.write(html.replace("</main>", "</div>", 1))
+    assert any("mis-nested" in p or "unclosed" in p
+               for p in validate_site(site))
+
+
+def test_validate_flags_diverged_inline_data(site):
+    # trend.json regenerated but index.html stale (or vice versa)
+    with open(os.path.join(site, "trend.json")) as f:
+        trend = json.load(f)
+    trend["benches"].pop("pipeline")
+    with open(os.path.join(site, "trend.json"), "w") as f:
+        json.dump(trend, f)
+    assert any("differs" in p for p in validate_site(site))
+
+
+def test_validate_flags_unreadable_site(tmp_path):
+    empty = str(tmp_path / "nosite")
+    os.makedirs(empty)
+    assert validate_site(empty)  # unreadable trend.json reported, no crash
+
+
+def test_publish_skips_unparsable_file(tmp_path):
+    bad_dir = tmp_path / "bad"
+    bad_dir.mkdir()
+    for f in os.listdir(FIXTURES):
+        shutil.copy2(os.path.join(FIXTURES, f), bad_dir / f)
+    with open(bad_dir / "BENCH_procpool_20260604_run44.json", "w") as f:
+        f.write("{not json")
+    site_dir = str(tmp_path / "site")
+    assert publish(str(bad_dir), site_dir) == 0
+    # the corrupt file is skipped with a warning; the rest still publish
+    with open(os.path.join(site_dir, "trend.json")) as f:
+        trend = json.load(f)
+    assert len(trend["benches"]["procpool"]["runs"]) == 2
