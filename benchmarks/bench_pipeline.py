@@ -30,7 +30,7 @@ from __future__ import annotations
 import statistics
 import time
 
-from benchmarks.common import Result, Scale
+from benchmarks.common import Result, Scale, nest_loader_kwargs
 from repro.config import AutotuneConfig, LoaderConfig
 from repro.core.loader import ConcurrentDataLoader
 from repro.core.tracing import (
@@ -81,7 +81,8 @@ class _Cell:
         self.dataset = _make_dataset(scale)
         self.loader = ConcurrentDataLoader(
             self.dataset,
-            LoaderConfig(batch_size=scale.batch_size, seed=7, **cfg),
+            LoaderConfig(batch_size=scale.batch_size, seed=7,
+                         **nest_loader_kwargs(cfg)),
             tracer=self.tracer,
         )
         self.epoch = 0
@@ -119,7 +120,8 @@ def _digest(batches) -> list:
 def _epoch_digest(dataset, **cfg) -> list:
     loader = ConcurrentDataLoader(
         dataset, LoaderConfig(batch_size=16, num_workers=2, prefetch_factor=2,
-                              num_fetch_workers=8, seed=11, **cfg)
+                              num_fetch_workers=8, seed=11,
+                              **nest_loader_kwargs(cfg))
     )
     return _digest(list(loader))
 

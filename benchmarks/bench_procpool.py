@@ -31,7 +31,7 @@ import multiprocessing
 import statistics
 import time
 
-from benchmarks.common import Result, Scale
+from benchmarks.common import Result, Scale, nest_loader_kwargs
 from repro.config import AutotuneConfig, LoaderConfig
 from repro.core.loader import ConcurrentDataLoader
 from repro.data.dataset import SpinDataset
@@ -124,7 +124,9 @@ class _Cell:
             dataset, LoaderConfig(batch_size=batch_size, seed=7,
                                   num_workers=num_workers,
                                   prefetch_factor=prefetch_factor,
-                                  pipeline=True, timeout_s=300.0, **cfg),
+                                  timeout_s=300.0,
+                                  **nest_loader_kwargs(
+                                      dict(cfg, pipeline=True))),
         )
         self.epoch = 0
         self.obs: list = []
@@ -161,7 +163,7 @@ class _Cell:
 def _digest(ds, **cfg) -> list:
     loader = ConcurrentDataLoader(
         ds, LoaderConfig(batch_size=8, num_workers=2, prefetch_factor=2,
-                         seed=11, **cfg),
+                         seed=11, **nest_loader_kwargs(cfg)),
     )
     return [(b["x"].tolist(), b["label"].tolist()) for b in loader]
 

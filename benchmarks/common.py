@@ -22,7 +22,8 @@ from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 
-from repro.config import LoaderConfig
+from repro.config import LoaderConfig, PipelineConfig
+from repro.core import make_loader as _core_make_loader
 from repro.core.loader import ConcurrentDataLoader
 from repro.core.tracing import NULL_TRACER, Tracer
 from repro.data.dataset import ImageDataset
@@ -174,6 +175,30 @@ def make_image_dataset(
     )
 
 
+_PIPELINE_KW = (
+    "reorder", "reorder_window", "io_workers", "cpu_workers",
+    "cpu_executor", "stage_queue_depth",
+)
+
+
+def nest_loader_kwargs(overrides: Dict[str, Any]) -> Dict[str, Any]:
+    """Nest the historical flat pipeline kwargs (bench tables keep the flat
+    spelling for brevity) into ``PipelineConfig``, so bench runs construct
+    the nested config directly instead of tripping the deprecation shim.
+    Returns a new kwargs dict; ``overrides`` is not mutated."""
+    out = dict(overrides)
+    pipe_kw = {k: out.pop(k) for k in _PIPELINE_KW if k in out}
+    pipeline = out.pop("pipeline", None)
+    if pipeline is None or isinstance(pipeline, bool):
+        pipeline = PipelineConfig(enabled=bool(pipeline), **pipe_kw)
+    elif pipe_kw:
+        import dataclasses
+
+        pipeline = dataclasses.replace(pipeline, **pipe_kw)
+    out["pipeline"] = pipeline
+    return out
+
+
 def make_loader(
     dataset: ImageDataset,
     impl: str,
@@ -182,6 +207,8 @@ def make_loader(
     tracer: Optional[Tracer] = None,
     **overrides: Any,
 ) -> ConcurrentDataLoader:
+    """Bench front-end over :func:`repro.core.make_loader`."""
+    overrides = nest_loader_kwargs(overrides)
     cfg = LoaderConfig(
         impl=impl,
         batch_size=overrides.pop("batch_size", scale.batch_size),
@@ -190,7 +217,7 @@ def make_loader(
         num_fetch_workers=overrides.pop("num_fetch_workers", 16),
         **overrides,
     )
-    return ConcurrentDataLoader(dataset, cfg, tracer=tracer or Tracer())
+    return _core_make_loader(cfg, dataset, tracer=tracer or Tracer())
 
 
 # --------------------------------------------------------------------------

@@ -13,7 +13,7 @@ import time
 import jax.random as jr
 
 from repro.config import LoaderConfig, ModelConfig, StoreConfig, TrainConfig
-from repro.core.loader import ConcurrentDataLoader
+from repro.core import make_loader
 from repro.core.tracing import Tracer
 from repro.core.utilization import accelerator_stats
 from repro.data.dataset import ImageDataset
@@ -57,10 +57,10 @@ def run(impl: str) -> dict:
     )
     dataset = ImageDataset(store, ITEMS, out_size=64, tracer=tracer,
                            sim_decode_s_per_mb=0.052)
-    loader = ConcurrentDataLoader(
-        dataset,
+    loader = make_loader(
         LoaderConfig(impl=impl, batch_size=BATCH, num_workers=4,
                      num_fetch_workers=16),
+        dataset,
         tracer=tracer,
     )
     state = init_resnet_train_state(MODEL, _TCFG, jr.PRNGKey(0))

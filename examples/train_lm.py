@@ -24,7 +24,7 @@ from repro.config import (
     StoreConfig,
     TrainConfig,
 )
-from repro.core.loader import ConcurrentDataLoader
+from repro.core import make_loader
 from repro.core.tracing import Tracer
 from repro.data.dataset import TokenDataset, build_token_store
 from repro.data.store import InMemoryStore, build_store
@@ -70,11 +70,11 @@ def main():
     build_token_store(base, args.items, args.seq_len, cfg.vocab_size)
     store = build_store(StoreConfig(kind="s3sim", latency_mean_s=0.02), base=base)
     dataset = TokenDataset(store, args.items, args.seq_len, tracer=tracer)
-    loader = ConcurrentDataLoader(
-        dataset,
+    loader = make_loader(
         LoaderConfig(impl="threaded", batch_size=args.batch_size,
                      num_workers=4, num_fetch_workers=16,
                      hedge_requests=True),
+        dataset,
         tracer=tracer,
     )
 

@@ -6,8 +6,10 @@ configs live in ``repro.configs`` and register themselves in ``ARCH_REGISTRY``.
 """
 from __future__ import annotations
 
+import functools
+import warnings
 from dataclasses import dataclass, field, replace  # noqa: F401  (replace re-exported)
-from typing import Callable, Mapping, Optional, Tuple
+from typing import Any, Callable, Mapping, Optional, Tuple
 
 # ---------------------------------------------------------------------------
 # Model configuration
@@ -330,31 +332,16 @@ class AutotuneConfig:
 
 
 @dataclass(frozen=True)
-class LoaderConfig:
-    impl: str = "threaded"  # vanilla | threaded | asyncio
-    batch_size: int = 256
-    num_workers: int = 4
-    prefetch_factor: int = 4
-    num_fetch_workers: int = 16
-    batch_pool: int = 0  # >0 enables batch disassembly (threaded impl only)
-    lazy_init: bool = True
-    pin_device: bool = False  # device prefetch ring (batch_to_device overlap)
-    device_prefetch: int = 2
-    drop_last: bool = True
-    shuffle: bool = True
-    seed: int = 0
-    # straggler mitigation: hedge a fetch when it exceeds p95 * hedge_factor
-    hedge_requests: bool = False
-    hedge_factor: float = 3.0
-    hedge_min_s: float = 0.05
-    timeout_s: float = 120.0
-    # staged streaming pipeline (repro.core.pipeline): replaces the
-    # worker/fetcher path with an explicit stage graph (fetch-raw -> decode
-    # -> augment -> collate) on dedicated IO and CPU executors with sample-
-    # level out-of-order completion.  Off by default: the legacy path runs
-    # untouched and bit-identically.
-    pipeline: bool = False
-    # batch-assembly policy when the pipeline is on:
+class PipelineConfig:
+    """Staged streaming pipeline (repro.core.pipeline): replaces the
+    worker/fetcher path with an explicit stage graph (fetch-raw -> decode ->
+    augment -> collate) on dedicated IO and CPU executors with sample-level
+    out-of-order completion.  ``enabled=False`` (the default) keeps the
+    legacy path untouched and bit-identical; the sub-config is truthy iff
+    enabled, so ``if cfg.pipeline:`` reads the same either way."""
+
+    enabled: bool = False
+    # batch-assembly policy:
     #   "strict" — every batch holds exactly its sampler-assigned samples in
     #              sampler order, delivered in batch order (bit-identical to
     #              the legacy loader's stream)
@@ -364,7 +351,7 @@ class LoaderConfig:
     #              delays the last batch of its group, not its own batch
     reorder: str = "strict"
     reorder_window: int = 4
-    # pipeline stage sizing.  0 = derive: io_workers defaults to
+    # stage sizing.  0 = derive: io_workers defaults to
     # num_workers * num_fetch_workers (the legacy loader's total fetch
     # thread count, so pipeline-vs-legacy comparisons run at equal
     # concurrency); cpu_workers defaults to 4.
@@ -385,9 +372,143 @@ class LoaderConfig:
     # threads that try to feed it — that stall is the pipeline's
     # backpressure, and the depth is an autotune knob.
     stage_queue_depth: int = 64
+
+    def __bool__(self) -> bool:
+        return self.enabled
+
+
+@dataclass(frozen=True)
+class DeliverySpec:
+    """How assembled batches reach the consumer (repro.core.delivery).
+
+    * ``host`` (default) — one host-resident numpy batch per step; the
+      consumer (or the device-prefetch ring) moves it to devices.
+    * ``sharded`` — one assembler lane per addressable slice of ``mesh``
+      along ``axis``; each lane collates its contiguous sub-batch and
+      device-puts it to its own device(s), and the lanes are composed into a
+      device-sharded global ``jax.Array`` via
+      ``jax.make_array_from_single_device_arrays`` (process-local shards
+      only — no gather).  Requires the staged pipeline with strict reorder.
+
+    ``mesh`` is a ``jax.sharding.Mesh`` (kept opaque here so the config
+    layer stays jax-free); ``coord_dir`` names a directory shared by
+    co-located hosts so per-lane resume cursors are pinned fleet-wide
+    (repro.core.delivery.ShardCursorBoard over the PR-3 coord layer)."""
+
+    kind: str = "host"  # host | sharded
+    axis: str = "data"  # mesh axis the global batch dim shards over
+    mesh: Any = None  # jax.sharding.Mesh (required for kind="sharded")
+    coord_dir: str = ""  # multi-host cursor alignment ("" = single host)
+
+    @staticmethod
+    def host() -> "DeliverySpec":
+        return DeliverySpec()
+
+    @staticmethod
+    def sharded(mesh: Any, axis: str = "data",
+                coord_dir: str = "") -> "DeliverySpec":
+        return DeliverySpec(kind="sharded", axis=axis, mesh=mesh,
+                            coord_dir=coord_dir)
+
+
+@dataclass(frozen=True)
+class LoaderConfig:
+    impl: str = "threaded"  # vanilla | threaded | asyncio
+    batch_size: int = 256
+    num_workers: int = 4
+    prefetch_factor: int = 4
+    num_fetch_workers: int = 16
+    batch_pool: int = 0  # >0 enables batch disassembly (threaded impl only)
+    lazy_init: bool = True
+    pin_device: bool = False  # device prefetch ring (batch_to_device overlap)
+    device_prefetch: int = 2
+    drop_last: bool = True
+    shuffle: bool = True
+    seed: int = 0
+    # straggler mitigation: hedge a fetch when it exceeds p95 * hedge_factor
+    hedge_requests: bool = False
+    hedge_factor: float = 3.0
+    hedge_min_s: float = 0.05
+    timeout_s: float = 120.0
+    # staged streaming pipeline (see PipelineConfig).  The legacy flat
+    # kwargs (pipeline=<bool>, reorder=..., io_workers=..., ...) still
+    # construct the nested form through a deprecation shim; reads of the old
+    # flat names delegate below.
+    pipeline: PipelineConfig = PipelineConfig()
+    # batch delivery contract (see DeliverySpec): host-resident batches
+    # (default) or device-sharded global arrays assembled per mesh lane
+    delivery: DeliverySpec = DeliverySpec()
     # online knob control (off by default: behaviour is bit-identical to a
     # statically configured loader when disabled)
     autotune: AutotuneConfig = AutotuneConfig()
+
+    # -- legacy flat reads (the write path is shimmed in __init__) ----------
+    @property
+    def reorder(self) -> str:
+        return self.pipeline.reorder
+
+    @property
+    def reorder_window(self) -> int:
+        return self.pipeline.reorder_window
+
+    @property
+    def io_workers(self) -> int:
+        return self.pipeline.io_workers
+
+    @property
+    def cpu_workers(self) -> int:
+        return self.pipeline.cpu_workers
+
+    @property
+    def cpu_executor(self) -> str:
+        return self.pipeline.cpu_executor
+
+    @property
+    def stage_queue_depth(self) -> int:
+        return self.pipeline.stage_queue_depth
+
+
+# Deprecation shim: LoaderConfig grew ~7 flat pipeline fields over PRs 4-5;
+# they now live in PipelineConfig.  Old call sites keep working — each flat
+# kwarg warns once and is folded into the nested sub-config — and
+# ``dataclasses.replace`` passes the nested fields straight through, so the
+# shim never re-fires on derived configs.  Removal note in README
+# ("Sharded delivery & the loader API").
+_LEGACY_PIPELINE_KWARGS = (
+    "reorder", "reorder_window", "io_workers", "cpu_workers",
+    "cpu_executor", "stage_queue_depth",
+)
+
+_loader_config_init = LoaderConfig.__init__
+
+
+@functools.wraps(_loader_config_init)
+def _loader_config_shim_init(self, *args: Any, **kwargs: Any) -> None:
+    legacy = {}
+    for name in _LEGACY_PIPELINE_KWARGS:
+        if name in kwargs:
+            warnings.warn(
+                f"LoaderConfig({name}=...) is deprecated and will be removed;"
+                f" pass pipeline=PipelineConfig({name}=...) instead",
+                DeprecationWarning, stacklevel=2,
+            )
+            legacy[name] = kwargs.pop(name)
+    pipe = kwargs.get("pipeline")
+    if isinstance(pipe, bool):
+        warnings.warn(
+            "LoaderConfig(pipeline=<bool>) is deprecated and will be removed;"
+            " pass pipeline=PipelineConfig(enabled=...) instead",
+            DeprecationWarning, stacklevel=2,
+        )
+        kwargs["pipeline"] = PipelineConfig(enabled=pipe, **legacy)
+    elif legacy:
+        kwargs["pipeline"] = replace(
+            pipe if pipe is not None else PipelineConfig(), **legacy
+        )
+    _loader_config_init(self, *args, **kwargs)
+
+
+LoaderConfig.__init__ = _loader_config_shim_init  # type: ignore[method-assign]
 
 
 @dataclass(frozen=True)
@@ -436,6 +557,29 @@ class RunConfig:
     train: TrainConfig = TrainConfig()
     mesh: MeshConfig = SINGLE_POD_MESH
 
+
+# public surface (tests/test_api_surface.py pins names + signatures)
+__all__ = [
+    "AttentionConfig",
+    "AutotuneConfig",
+    "DeliverySpec",
+    "LoaderConfig",
+    "MeshConfig",
+    "ModelConfig",
+    "MoEConfig",
+    "PipelineConfig",
+    "RunConfig",
+    "RWKVConfig",
+    "ShapeConfig",
+    "SSMConfig",
+    "StoreConfig",
+    "TrainConfig",
+    "arch_shapes",
+    "get_arch",
+    "list_archs",
+    "register_arch",
+    "replace",
+]
 
 # ---------------------------------------------------------------------------
 # Architecture registry

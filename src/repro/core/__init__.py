@@ -1,1 +1,15 @@
-"""Core: the paper's concurrent data-loading contribution."""
+"""Core: the paper's concurrent data-loading contribution.
+
+Documented construction surface (tests/test_api_surface.py pins it):
+:func:`make_loader` is the factory that wires config, dataset, mesh and
+delivery together; :class:`ConcurrentDataLoader` remains available for
+callers that want the raw constructor.
+"""
+from repro.core.factory import make_loader
+from repro.core.loader import ConcurrentDataLoader, LoaderTimeout
+
+__all__ = [
+    "ConcurrentDataLoader",
+    "LoaderTimeout",
+    "make_loader",
+]

@@ -1,0 +1,345 @@
+"""Device-sharded batch delivery — per-mesh-slice assembler lanes.
+
+The staged pipeline (:mod:`repro.core.pipeline`) completes samples out of
+order; the host path collects them into one host array and leaves the
+device placement to the consumer, which re-shards every global batch after
+the fact.  That final hop is serial: one collate over the whole batch on
+the consumer thread, one full-batch transfer on the prefetch-ring thread.
+"Hiding Latencies in Network-Based Image Loading" (PAPERS.md) shows the end
+state this module implements instead: decode + transfer overlapped *per
+device*.
+
+One assembler **lane** per data-axis slice of the mesh that this process
+addresses.  The pipeline's consumer routes each completed sample to its
+lane by batch position (lane ``l`` owns the ``l``-th contiguous slice,
+matching :func:`repro.core.sampler.shard_plan`'s host slicing, so the
+composed global array is bit-identical to the host path's row order).  As
+soon as a lane's slice of a batch is complete, the lane's own thread
+collates it and transfers it to the lane's devices — lanes of the same
+batch, and different batches across lanes, all overlap.  The last lane to
+finish composes the global array with
+``jax.make_array_from_single_device_arrays`` (metadata-only: the shards
+are already device-resident) and hands it back to the pipeline's
+completion queue as a :class:`~repro.core.pipeline._Composed` token, so
+strict in-order delivery is preserved end to end.
+
+Multi-host alignment reuses the PR-3 coord layer: each host publishes its
+per-shard cursor to a :class:`ShardCursorBoard` (flock + JSON under the
+shared coord dir, same substrate as ``SharedDiskJournal``), and a
+checkpoint resumes from the fleet-minimum batch boundary — the Uber
+distributed-pipeline property that per-shard cursors stay reproducible
+across a fleet without a gather.
+"""
+from __future__ import annotations
+
+import json
+import os
+import queue
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec
+
+from repro.core.pipeline import _Composed, _Failure
+from repro.core.tracing import (
+    LANE_COLLATE,
+    LANE_H2D,
+    NULL_TRACER,
+    STAGE_COMPOSE,
+    Tracer,
+)
+
+
+class LanePlan:
+    """Static mapping from host-batch positions to mesh data-axis lanes.
+
+    A lane is one coordinate along ``axis`` restricted to this process's
+    addressable devices; its device list is every addressable device with
+    that coordinate (the batch is replicated over the non-data axes, so
+    each of those devices holds an identical copy of the lane's shard).
+    """
+
+    def __init__(self, mesh: Any, axis: str, lanes: List[List[Any]],
+                 host_rows: int) -> None:
+        self.mesh = mesh
+        self.axis = axis
+        self.lanes = lanes
+        self.num_lanes = len(lanes)
+        self.host_rows = host_rows
+        self.axis_size = int(mesh.shape[axis])
+        # rows of the composed global array per host row: a process-local
+        # mesh (axis == local lanes) composes exactly the host batch; under
+        # jax.distributed the axis spans every host's lanes and the global
+        # array covers the full fleet batch
+        self.global_mult = self.axis_size // self.num_lanes
+
+    @staticmethod
+    def build(spec: Any, host_rows: int, *,
+              process_index: Optional[int] = None) -> "LanePlan":
+        mesh = spec.mesh
+        if mesh is None:
+            raise ValueError(
+                "DeliverySpec(kind='sharded') needs a mesh: pass "
+                "DeliverySpec.sharded(mesh, axis=...), or construct via "
+                "repro.core.make_loader which builds one from RunConfig.mesh"
+            )
+        if spec.axis not in mesh.axis_names:
+            raise ValueError(
+                f"delivery axis {spec.axis!r} is not a mesh axis "
+                f"{tuple(mesh.axis_names)}"
+            )
+        ax = list(mesh.axis_names).index(spec.axis)
+        pid = jax.process_index() if process_index is None else process_index
+        groups: Dict[int, List[Any]] = {}
+        for coords, d in np.ndenumerate(mesh.devices):
+            if d.process_index == pid:
+                groups.setdefault(int(coords[ax]), []).append(d)
+        if not groups:
+            raise ValueError(
+                "mesh has no devices addressable from this process"
+            )
+        lanes = [groups[k] for k in sorted(groups)]
+        if int(mesh.shape[spec.axis]) % len(lanes):
+            raise ValueError(
+                f"this process addresses {len(lanes)} slices of mesh axis "
+                f"{spec.axis!r} (size {mesh.shape[spec.axis]}), which do "
+                "not divide it evenly — sharded delivery needs a uniform "
+                "process layout along the data axis"
+            )
+        if host_rows % len(lanes):
+            raise ValueError(
+                f"host batch of {host_rows} rows does not divide evenly "
+                f"into the {len(lanes)} local slices of mesh axis "
+                f"{spec.axis!r}; pick batch_size so every lane gets an "
+                "equal shard"
+            )
+        return LanePlan(mesh, spec.axis, lanes, host_rows)
+
+    def sharding_for(self, ndim: int) -> NamedSharding:
+        """Batch-dim sharding over ``axis``, replicated elsewhere."""
+        return NamedSharding(
+            self.mesh, PartitionSpec(self.axis, *([None] * (ndim - 1)))
+        )
+
+    def global_rows(self, host_rows: int) -> int:
+        return host_rows * self.global_mult
+
+
+class _Assembly:
+    """Per-batch lane state.  ``lane_slots``/``lane_left`` are touched only
+    by the pipeline's consumer thread; ``shards``/``lanes_pending`` are
+    shared with the lane threads under the assembler lock."""
+
+    __slots__ = ("host_rows", "per", "lane_slots", "lane_left",
+                 "lanes_pending", "shards")
+
+    def __init__(self, num_lanes: int, host_rows: int) -> None:
+        self.host_rows = host_rows
+        self.per = host_rows // num_lanes
+        self.lane_slots: List[Optional[List[Any]]] = [
+            [None] * self.per for _ in range(num_lanes)
+        ]
+        self.lane_left = [self.per] * num_lanes
+        self.lanes_pending = num_lanes
+        self.shards: Dict[str, List[Any]] = {}
+
+
+class ShardedAssembler:
+    """Lane threads turning completed samples into composed sharded batches.
+
+    Contract with :class:`~repro.core.pipeline._PipelineIter`:
+
+    * ``begin_batch``/``add`` are called from the pipeline's consumer
+      thread only (the same thread that owns strict reorder state);
+    * finished batches come back through ``done_q`` as
+      ``(_Composed(batch_id), batch)`` — or ``(_Composed, _Failure)`` when
+      a lane fails, which the consumer raises exactly like a stage failure.
+    """
+
+    def __init__(
+        self,
+        plan: LanePlan,
+        collate_fn: Callable,
+        *,
+        done_q: "queue.Queue",
+        stop: threading.Event,
+        tracer: Tracer = NULL_TRACER,
+    ) -> None:
+        self.plan = plan
+        self.collate_fn = collate_fn
+        self.done_q = done_q
+        self.stop = stop
+        self.tracer = tracer
+        self._lock = threading.Lock()
+        self._batches: Dict[int, _Assembly] = {}
+        self._lane_qs: List["queue.Queue"] = [
+            queue.Queue() for _ in range(plan.num_lanes)
+        ]
+        self._composed = [0] * plan.num_lanes
+        self._collate_s = [0.0] * plan.num_lanes
+        self._h2d_s = [0.0] * plan.num_lanes
+        self._threads = [
+            threading.Thread(
+                target=self._lane_main, args=(i,),
+                name=f"delivery-lane-{i}", daemon=True,
+            )
+            for i in range(plan.num_lanes)
+        ]
+        for t in self._threads:
+            t.start()
+
+    # -- consumer-thread surface ---------------------------------------------
+    def begin_batch(self, batch_id: int, host_rows: int) -> None:
+        if host_rows % self.plan.num_lanes:
+            raise ValueError(
+                f"batch {batch_id} has {host_rows} rows, not divisible into "
+                f"{self.plan.num_lanes} lanes (a drop_last=False tail batch"
+                " — sharded delivery requires uniform shards)"
+            )
+        self._batches[batch_id] = _Assembly(self.plan.num_lanes, host_rows)
+
+    def add(self, batch_id: int, pos: int, item: Any) -> None:
+        a = self._batches[batch_id]
+        lane = pos // a.per
+        a.lane_slots[lane][pos - lane * a.per] = item
+        a.lane_left[lane] -= 1
+        if a.lane_left[lane] == 0:
+            items = a.lane_slots[lane]
+            a.lane_slots[lane] = None  # the lane thread owns these now
+            self._lane_qs[lane].put((batch_id, items))
+
+    # -- lane threads ---------------------------------------------------------
+    def _lane_main(self, lane: int) -> None:
+        devices = self.plan.lanes[lane]
+        q = self._lane_qs[lane]
+        while not self.stop.is_set():
+            try:
+                batch_id, items = q.get(timeout=0.1)
+            except queue.Empty:
+                continue
+            try:
+                t0 = time.monotonic()
+                sub = self.collate_fn(items)
+                t1 = time.monotonic()
+                self.tracer.record(
+                    LANE_COLLATE, t0, t1, lane=lane, batch_id=batch_id
+                )
+                shards: Dict[str, List[Any]] = {}
+                t1b = time.monotonic()
+                for key, arr in sub.items():
+                    shards[key] = [jax.device_put(arr, d) for d in devices]
+                for parts in shards.values():
+                    for part in parts:
+                        part.block_until_ready()
+                t2 = time.monotonic()
+                self.tracer.record(
+                    LANE_H2D, t1b, t2, lane=lane, batch_id=batch_id
+                )
+                with self._lock:
+                    self._collate_s[lane] += t1 - t0
+                    self._h2d_s[lane] += t2 - t1b
+                    self._composed[lane] += 1
+                    a = self._batches[batch_id]
+                    for key, parts in shards.items():
+                        a.shards.setdefault(key, []).extend(parts)
+                    a.lanes_pending -= 1
+                    last = a.lanes_pending == 0
+                if last:
+                    self._compose(batch_id)
+            except BaseException as e:  # surfaced on the consumer thread
+                self.done_q.put((_Composed(batch_id), _Failure(e)))
+
+    def _compose(self, batch_id: int) -> None:
+        with self._lock:
+            a = self._batches.pop(batch_id)
+        with self.tracer.span(STAGE_COMPOSE, batch_id=batch_id):
+            rows = self.plan.global_rows(a.host_rows)
+            batch: Dict[str, Any] = {}
+            for key, parts in a.shards.items():
+                ref = parts[0]
+                batch[key] = jax.make_array_from_single_device_arrays(
+                    (rows, *ref.shape[1:]),
+                    self.plan.sharding_for(ref.ndim),
+                    parts,
+                )
+        self.done_q.put((_Composed(batch_id), batch))
+
+    # -- observability / shutdown ---------------------------------------------
+    def stats(self) -> Dict[str, Any]:
+        with self._lock:
+            composed = list(self._composed)
+            collate_s = list(self._collate_s)
+            h2d_s = list(self._h2d_s)
+        lanes = []
+        for i in range(self.plan.num_lanes):
+            n = composed[i]
+            lanes.append({
+                "lane": i,
+                "devices": [d.id for d in self.plan.lanes[i]],
+                "composed": n,
+                "collate_mean_s": collate_s[i] / n if n else 0.0,
+                "h2d_mean_s": h2d_s[i] / n if n else 0.0,
+                "queued": self._lane_qs[i].qsize(),
+            })
+        return {
+            "axis": self.plan.axis,
+            "num_lanes": self.plan.num_lanes,
+            "lanes": lanes,
+            # lane skew in composed batches: >1 means one mesh slice is
+            # starving the compose barrier — the signal autotune watches
+            "lane_skew": max(composed) - min(composed) if composed else 0,
+        }
+
+    def close(self) -> None:
+        self.stop.set()
+        for t in self._threads:
+            t.join(timeout=2.0)
+
+
+class ShardCursorBoard:
+    """Fleet-wide per-shard cursor alignment (coord-layer substrate).
+
+    Every host publishes ``(epoch, next_batch)`` under one flock'd JSON
+    document; :meth:`aligned` is the fleet minimum — the newest batch
+    boundary every host has actually delivered.  A checkpoint cut on any
+    host resumes the whole fleet from that boundary, so the restored
+    device-sharded global batch is consistent without a gather (each
+    host's lanes re-derive their slice from the same sampler cursor).
+    """
+
+    def __init__(self, coord_dir: str, *, num_hosts: int = 1) -> None:
+        from repro.core.coord import FileLock  # lazy: fcntl-gated
+
+        os.makedirs(coord_dir, exist_ok=True)
+        self.num_hosts = max(int(num_hosts), 1)
+        self.path = os.path.join(coord_dir, "shard_cursors.json")
+        self._lock = FileLock(os.path.join(coord_dir, "shard_cursors.lock"))
+
+    def _read(self) -> Dict[str, Any]:
+        try:
+            with open(self.path, "r") as f:
+                return json.load(f)
+        except (FileNotFoundError, ValueError):
+            return {}
+
+    def publish(self, host_id: int, epoch: int, next_batch: int) -> None:
+        with self._lock:
+            doc = self._read()
+            doc[str(int(host_id))] = [int(epoch), int(next_batch)]
+            tmp = f"{self.path}.tmp{os.getpid()}"
+            with open(tmp, "w") as f:
+                json.dump(doc, f)
+            os.replace(tmp, self.path)
+
+    def aligned(self) -> Optional[Tuple[int, int]]:
+        """The ``(epoch, next_batch)`` every host has reached, or None
+        until all ``num_hosts`` cursors have been published."""
+        with self._lock:
+            doc = self._read()
+        if len(doc) < self.num_hosts:
+            return None
+        return min(tuple(int(x) for x in v) for v in doc.values())

@@ -82,31 +82,32 @@ class ConcurrentDataLoader:
         tracer: Tracer = NULL_TRACER,
         worker_startup_cost_s: float = 0.0,
     ) -> None:
+        pipe = cfg.pipeline
         if cfg.impl not in ("vanilla", "threaded", "asyncio"):
             raise ValueError(f"unknown loader impl {cfg.impl!r}")
-        if cfg.reorder not in ("strict", "window"):
+        if pipe.reorder not in ("strict", "window"):
             raise ValueError(
-                f"unknown reorder {cfg.reorder!r}; known: 'strict', 'window'"
+                f"unknown reorder {pipe.reorder!r}; known: 'strict', 'window'"
             )
-        if cfg.cpu_executor not in ("thread", "process"):
+        if pipe.cpu_executor not in ("thread", "process"):
             raise ValueError(
-                f"unknown cpu_executor {cfg.cpu_executor!r}; "
+                f"unknown cpu_executor {pipe.cpu_executor!r}; "
                 "known: 'thread', 'process'"
             )
-        if cfg.pipeline:
+        if pipe:
             # fail at construction, naming the field — not at first iter()
             # with an opaque semaphore error from deep inside a stage
             if cfg.impl == "vanilla":
                 raise ValueError(
-                    "pipeline=True requires impl 'threaded' or 'asyncio' "
+                    "pipeline requires impl 'threaded' or 'asyncio' "
                     "(vanilla's sequential fetch has no staged equivalent)"
                 )
-            if cfg.reorder_window < 1:
+            if pipe.reorder_window < 1:
                 raise ValueError("reorder_window must be >= 1")
             for field in ("io_workers", "cpu_workers"):
-                if getattr(cfg, field) < 0:
+                if getattr(pipe, field) < 0:
                     raise ValueError(f"{field} must be >= 0 (0 = derive)")
-            if cfg.stage_queue_depth < 1:
+            if pipe.stage_queue_depth < 1:
                 raise ValueError("stage_queue_depth must be >= 1")
             at_ = cfg.autotune
             if at_.enabled and at_.thread_budget:
@@ -117,6 +118,35 @@ class ConcurrentDataLoader:
                         f"min_fetch_workers + min_cpu_workers (= {floor}): "
                         "the io/cpu split needs at least one thread per stage"
                     )
+        spec = cfg.delivery
+        if spec.kind not in ("host", "sharded"):
+            raise ValueError(
+                f"unknown delivery kind {spec.kind!r}; known: 'host', 'sharded'"
+            )
+        self.delivery_plan = None
+        self._cursor_board = None
+        if spec.kind == "sharded":
+            if not pipe:
+                raise ValueError(
+                    "delivery='sharded' requires the staged pipeline "
+                    "(pipeline=PipelineConfig(enabled=True)): lane assembly "
+                    "consumes the pipeline's per-sample completion stream"
+                )
+            if pipe.reorder != "strict":
+                raise ValueError(
+                    "delivery='sharded' requires reorder='strict': per-lane "
+                    "cursors are only fleet-alignable when every host "
+                    "delivers in batch-id order"
+                )
+            from repro.core.delivery import LanePlan, ShardCursorBoard  # lazy: jax
+
+            self.delivery_plan = LanePlan.build(
+                spec, cfg.batch_size // max(num_hosts, 1)
+            )
+            if spec.coord_dir:
+                self._cursor_board = ShardCursorBoard(
+                    spec.coord_dir, num_hosts=num_hosts
+                )
         self.dataset = dataset
         self.cfg = cfg
         self.host_id = host_id
@@ -220,14 +250,80 @@ class ConcurrentDataLoader:
         self.sampler.set_epoch(epoch)
         self.dataset.set_epoch(epoch)
 
+    @property
+    def delivers_device_batches(self) -> bool:
+        """True when batches arrive already device-resident (sharded
+        delivery) — the prefetch ring must not re-transfer them."""
+        return self.delivery_plan is not None
+
     def state_dict(self) -> Dict[str, Any]:
         """Consumer position: (epoch, batches yielded).  Prefetched-but-
-        unconsumed batches are NOT counted — a restart replays them."""
-        return {"epoch": self._epoch, "next_batch": self._consumed}
+        unconsumed batches are NOT counted — a restart replays them.
+
+        Sharded delivery adds a per-lane cursor block.  Strict composition
+        delivers lanes in lockstep (a global batch only exists once every
+        lane contributed its shard), so each lane's cursor equals the
+        consumer cursor — recording them separately is what lets a restart
+        *verify* the mesh slicing still matches and what the fleet-alignment
+        board publishes per host."""
+        state: Dict[str, Any] = {
+            "epoch": self._epoch, "next_batch": self._consumed
+        }
+        plan = self.delivery_plan
+        if plan is not None:
+            epoch, consumed = self._epoch, self._consumed
+            if self._cursor_board is not None:
+                self._cursor_board.publish(self.host_id, epoch, consumed)
+                aligned = self._cursor_board.aligned()
+                if aligned is not None and aligned < (epoch, consumed):
+                    # resume from the newest batch boundary EVERY host has
+                    # delivered, so the restored global batch is consistent
+                    # fleet-wide without a gather
+                    epoch, consumed = aligned
+                    state["epoch"], state["next_batch"] = epoch, consumed
+            state["delivery"] = {
+                "kind": "sharded",
+                "axis": plan.axis,
+                "num_lanes": plan.num_lanes,
+                "lanes": [
+                    {
+                        "lane": i,
+                        "next_batch": consumed,
+                        "devices": [d.id for d in devs],
+                    }
+                    for i, devs in enumerate(plan.lanes)
+                ],
+            }
+        return state
 
     def load_state_dict(self, state: Dict[str, Any]) -> None:
         self._epoch = int(state["epoch"])
         self._consumed = int(state["next_batch"])
+        delivery = state.get("delivery")
+        if delivery is not None:
+            plan = self.delivery_plan
+            if plan is None:
+                raise ValueError(
+                    "checkpoint carries sharded-delivery lane cursors but "
+                    "this loader delivers host batches; restore with "
+                    "delivery=DeliverySpec.sharded(...)"
+                )
+            if int(delivery["num_lanes"]) != plan.num_lanes:
+                raise ValueError(
+                    f"checkpoint has {delivery['num_lanes']} delivery lanes "
+                    f"but the current mesh slices into {plan.num_lanes}; "
+                    "lane cursors are only portable across identical "
+                    "data-axis slicings"
+                )
+            lanes = delivery.get("lanes", [])
+            if lanes:
+                # lanes are delivered in lockstep, but a checkpoint cut by a
+                # crashing writer may carry a torn cursor set: resume from
+                # the minimum so no lane skips data
+                self._consumed = min(
+                    self._consumed,
+                    min(int(ln["next_batch"]) for ln in lanes),
+                )
         self.dataset.set_epoch(self._epoch)
         self.sampler.load_state_dict(
             {"epoch": self._epoch, "next_batch": self._consumed}

@@ -88,6 +88,18 @@ class _Failure:
         self.exc = exc
 
 
+class _Composed:
+    """Completion-queue token for a fully composed device-sharded batch
+    (sharded delivery, :mod:`repro.core.delivery`).  Defined here rather
+    than in the delivery module so the pipeline's hot loop can type-check
+    it without importing jax."""
+
+    __slots__ = ("batch_id",)
+
+    def __init__(self, batch_id: int) -> None:
+        self.batch_id = batch_id
+
+
 class _BoundedQ:
     """FIFO whose capacity is an :class:`AdjustableSemaphore`, so queue depth
     is a live autotune knob.  ``put`` blocks while the downstream stage is
@@ -874,15 +886,16 @@ class _PipelineIter:
         self.tracer = loader.tracer
         at = cfg.autotune
         dataset = loader.dataset
+        pipe = cfg.pipeline
         self.split = bool(dataset.supports_split())
-        self.strict = cfg.reorder == "strict"
-        self.window = 1 if self.strict else max(1, cfg.reorder_window)
+        self.strict = pipe.reorder == "strict"
+        self.window = 1 if self.strict else max(1, pipe.reorder_window)
 
         # stage sizing: 0 derives io_workers from the legacy loader's total
         # fetch-thread count so pipeline-vs-legacy runs at equal concurrency
-        io_workers = cfg.io_workers or max(1, cfg.num_workers * cfg.num_fetch_workers)
-        cpu_workers = cfg.cpu_workers or 4
-        queue_depth = max(1, cfg.stage_queue_depth)
+        io_workers = pipe.io_workers or max(1, cfg.num_workers * cfg.num_fetch_workers)
+        cpu_workers = pipe.cpu_workers or 4
+        queue_depth = max(1, pipe.stage_queue_depth)
         self.max_outstanding = max(1, cfg.num_workers * cfg.prefetch_factor)
         # knob ceilings widen over the static config (enabling autotune must
         # never cap the loader below its autotune=off operating point)
@@ -931,8 +944,18 @@ class _PipelineIter:
             b = self._budget
             self._split_lo = max(at.min_fetch_workers, b - self._max_cpu_bound, 1)
             self._split_hi = max(self._split_lo, b - max(at.min_cpu_workers, 1))
+            seed = io_workers
+            if pipe.io_workers == 0 and "io_cpu_split" not in loader._tuned:
+                # cores-aware split seed: the CPU stage is compute-bound, so
+                # start it near the cores this process may actually use
+                # (cgroup quota aware) and give IO the budget's remainder —
+                # the co-tuner then begins near the optimum instead of at a
+                # constant derived from fetch-thread counts
+                from repro.core.utilization import available_cpu_count
+
+                seed = b - available_cpu_count()
             io_workers = min(
-                max(loader._tuned.get("io_cpu_split", io_workers),
+                max(loader._tuned.get("io_cpu_split", seed),
                     self._split_lo),
                 self._split_hi,
             )
@@ -940,7 +963,7 @@ class _PipelineIter:
 
         # CPU executor kind: static config, overridden by the tuned value
         # when the budget co-tuner flipped it in a previous epoch
-        self.cpu_kind = cfg.cpu_executor if self.split else "thread"
+        self.cpu_kind = pipe.cpu_executor if self.split else "thread"
         if at.enabled and self.split and "cpu_executor" in loader._tuned:
             self.cpu_kind = (
                 "process" if loader._tuned["cpu_executor"] else "thread"
@@ -970,6 +993,20 @@ class _PipelineIter:
         self._stop = threading.Event()
         self.decode_q = _BoundedQ(queue_depth, self._stop)
         self.done_q: "queue.Queue" = queue.Queue()
+        # sharded delivery: lane threads collate + device-transfer each mesh
+        # slice of the batch and push the composed global array back into
+        # done_q as a (_Composed, batch) token (repro.core.delivery)
+        self._assembler = None
+        if loader.delivery_plan is not None:
+            from repro.core.delivery import ShardedAssembler  # lazy: jax
+
+            self._assembler = ShardedAssembler(
+                loader.delivery_plan,
+                loader.collate_fn,
+                done_q=self.done_q,
+                stop=self._stop,
+                tracer=self.tracer,
+            )
         self.io = _IOStage(
             dataset,
             mode="asyncio" if cfg.impl == "asyncio" else "threaded",
@@ -1224,7 +1261,9 @@ class _PipelineIter:
                 self._cur_group = task.batch_id // self.window
             self._max_bid = max(self._max_bid, task.batch_id)
             n = len(task.indices)
-            if self.strict:
+            if self._assembler is not None:
+                self._assembler.begin_batch(task.batch_id, n)
+            elif self.strict:
                 self._slots[task.batch_id] = [None] * n
                 self._remaining[task.batch_id] = n
             else:
@@ -1238,7 +1277,12 @@ class _PipelineIter:
     # -- assembly ------------------------------------------------------------
     def _absorb(self, s: _Sample, item: Any) -> None:
         self._completed_samples += 1
-        if self.strict:
+        if self._assembler is not None:
+            # lane routing: the assembler hands the sample to its lane's
+            # collate/h2d thread; the composed batch comes back through
+            # done_q as a _Composed token, landing in _ready below
+            self._assembler.add(s.batch_id, s.pos, item)
+        elif self.strict:
             slots = self._slots[s.batch_id]
             slots[s.pos] = item
             self._remaining[s.batch_id] -= 1
@@ -1280,11 +1324,19 @@ class _PipelineIter:
         return None
 
     def _emit(self, items: List[Any]) -> Any:
-        # absolute batch id, same coordinate space as the per-sample stage
-        # spans (which carry the sampler's batch_id) — joinable after resume
-        with self.tracer.span(STAGE_COLLATE,
-                              batch_id=self._bid_base + self._emitted_batches):
-            batch = self.loader.collate_fn(items)
+        if self._assembler is not None:
+            # sharded delivery: the lane threads already collated and
+            # device-transferred every shard — `items` IS the composed,
+            # device-resident global batch
+            batch = items
+        else:
+            # absolute batch id, same coordinate space as the per-sample
+            # stage spans (which carry the sampler's batch_id) — joinable
+            # after resume
+            with self.tracer.span(
+                STAGE_COLLATE, batch_id=self._bid_base + self._emitted_batches
+            ):
+                batch = self.loader.collate_fn(items)
         self._emitted_batches += 1
         # consumer cursor in absolute batch ids (resume starts past 0), same
         # contract as the legacy iterator's _next_bid bookkeeping
@@ -1344,6 +1396,11 @@ class _PipelineIter:
             if isinstance(payload, _Failure):
                 self.shutdown()
                 raise payload.exc
+            if isinstance(s, _Composed):
+                # a lane assembler finished a global batch out of band; park
+                # it for the strict in-order pop above
+                self._ready[s.batch_id] = payload
+                continue
             self._absorb(s, payload)
 
     def _finish_epoch(self) -> None:
@@ -1383,6 +1440,10 @@ class _PipelineIter:
         if hedge is not None:
             out["hedges_issued"] = hedge.hedges_issued
             out["hedges_won"] = hedge.hedges_won
+        if self._assembler is not None:
+            # per-lane composed counts / collate / h2d means — the lane-skew
+            # signal autotune and bench_sharded read
+            out["delivery"] = self._assembler.stats()
         return out
 
     # -- shutdown ------------------------------------------------------------
@@ -1399,6 +1460,8 @@ class _PipelineIter:
         except Exception:  # pragma: no cover - stats must never block exit
             pass
         self._stop.set()
+        if self._assembler is not None:
+            self._assembler.close()
         self.io.close()
         # join every CPU stage ever created this epoch (an executor-kind
         # flip leaves the paused one alive); the process POOL persists on

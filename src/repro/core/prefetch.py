@@ -38,13 +38,21 @@ class DevicePrefetchRing:
         *,
         depth: int = 2,
         max_depth: Optional[int] = None,
-        sharding: Optional[jax.sharding.Sharding] = None,
+        sharding: Optional[Any] = None,
+        transfer: bool = True,
         tracer: Tracer = NULL_TRACER,
     ) -> None:
         self.it = it
         depth = max(1, depth)
         self.max_depth = max(depth, max_depth or depth)
+        # sharding may be a jax Sharding applied uniformly, or a callable
+        # leaf -> Sharding for pytrees whose leaves differ in rank (a 1-d
+        # label next to a 4-d image can't share one PartitionSpec)
         self.sharding = sharding
+        # transfer=False turns the ring into pure pacing: sharded delivery
+        # hands over batches that are ALREADY device-resident, and a
+        # device_put here would gather the global array back to one device
+        self.transfer = transfer
         self.tracer = tracer
         self._slots = AdjustableSemaphore(depth)
         self._q: "queue.Queue" = queue.Queue()  # window bounded by _slots
@@ -63,8 +71,14 @@ class DevicePrefetchRing:
         return d
 
     def _put_device(self, batch: Any) -> Any:
+        if not self.transfer:
+            return batch
         with self.tracer.span(BATCH_TO_DEVICE):
-            if self.sharding is not None:
+            if callable(self.sharding):
+                dev = jax.tree.map(
+                    lambda x: jax.device_put(x, self.sharding(x)), batch
+                )
+            elif self.sharding is not None:
                 dev = jax.tree.map(lambda x: jax.device_put(x, self.sharding), batch)
             else:
                 dev = jax.tree.map(jax.device_put, batch)

@@ -31,6 +31,13 @@ STAGE_FETCH = "stage_fetch"
 STAGE_DECODE = "stage_decode"
 STAGE_AUGMENT = "stage_augment"
 STAGE_COLLATE = "stage_collate"
+# sharded-delivery lanes (repro.core.delivery): per lane, one collate span
+# and one host-to-device span per batch (tagged lane=i), plus one compose
+# span per global batch — the overlap evidence bench_sharded computes union
+# durations over
+LANE_COLLATE = "lane_collate"
+LANE_H2D = "lane_h2d"
+STAGE_COMPOSE = "stage_compose"
 
 
 @dataclass

@@ -24,12 +24,14 @@ import numpy as np
 
 from repro.config import (
     AutotuneConfig,
+    DeliverySpec,
     LoaderConfig,
+    PipelineConfig,
     StoreConfig,
     TrainConfig,
     get_arch,
 )
-from repro.core.loader import ConcurrentDataLoader
+from repro.core import make_loader
 from repro.core.tracing import Tracer
 from repro.core.utilization import accelerator_stats
 from repro.data.dataset import ImageDataset, TokenDataset, build_token_store
@@ -104,6 +106,13 @@ def main() -> int:
                          "releasing C decoders) or 'process' (spawn pool — "
                          "the GIL escape for Python-side decoders; needs a "
                          "picklable split-path dataset)")
+    ap.add_argument("--delivery", choices=["host", "sharded"], default="host",
+                    help="batch delivery: 'host' (one host array, consumer "
+                         "re-shards) or 'sharded' (per-mesh-slice assembler "
+                         "lanes compose a device-sharded global batch; "
+                         "requires --pipeline)")
+    ap.add_argument("--delivery-axis", default="data",
+                    help="mesh axis the batch dim is sharded over")
     ap.add_argument("--autotune", action="store_true",
                     help="online knob control (closed-loop io/cpu/queue/"
                          "outstanding tuning)")
@@ -137,23 +146,36 @@ def main() -> int:
     )
     tracer = Tracer()
     dataset = build_dataset(cfg, args, tracer)
-    loader = ConcurrentDataLoader(
-        dataset,
+    delivery = DeliverySpec.host()
+    if args.delivery == "sharded":
+        # one lane per local device along the data axis; multi-host runs
+        # pass a jax.distributed mesh here instead
+        from repro.launch.mesh import make_mesh
+
+        delivery = DeliverySpec.sharded(
+            make_mesh((jax.device_count(),), (args.delivery_axis,)),
+            axis=args.delivery_axis,
+        )
+    loader = make_loader(
         LoaderConfig(
             impl=args.loader,
             batch_size=args.batch_size,
             num_workers=args.workers,
             num_fetch_workers=args.fetchers,
             hedge_requests=args.hedge,
-            pipeline=args.pipeline,
-            reorder=args.reorder,
-            reorder_window=args.reorder_window,
-            io_workers=args.io_workers,
-            cpu_workers=args.cpu_workers,
-            cpu_executor=args.cpu_executor,
+            pipeline=PipelineConfig(
+                enabled=args.pipeline or args.delivery == "sharded",
+                reorder=args.reorder,
+                reorder_window=args.reorder_window,
+                io_workers=args.io_workers,
+                cpu_workers=args.cpu_workers,
+                cpu_executor=args.cpu_executor,
+            ),
+            delivery=delivery,
             autotune=atcfg,
             seed=args.seed,
         ),
+        dataset,
         tracer=tracer,
     )
 

@@ -104,7 +104,11 @@ def _make_ring(loader, depth: int, tracer) -> DevicePrefetchRing:
     if auto is not None:
         max_depth = max(depth, auto.cfg.max_device_prefetch)
     ring = DevicePrefetchRing(
-        iter(loader), depth=depth, max_depth=max_depth, tracer=tracer
+        iter(loader), depth=depth, max_depth=max_depth,
+        # sharded delivery hands over device-resident global arrays; the
+        # ring then only paces (a device_put would gather them back)
+        transfer=not getattr(loader, "delivers_device_batches", False),
+        tracer=tracer,
     )
     if auto is not None:
         # iter(loader) above re-bound the loader knobs; the ring knob rides

@@ -1,0 +1,72 @@
+"""Public-API snapshot: names and call signatures of ``repro.config`` and
+``repro.core`` pinned against ``tests/data/api_surface.json``.
+
+A failing diff here means the public surface changed.  If the change is
+intentional (an api-redesign PR), regenerate the snapshot and review the
+diff like any other contract change:
+
+    UPDATE_API_SURFACE=1 PYTHONPATH=src python -m pytest tests/test_api_surface.py
+"""
+import importlib
+import inspect
+import json
+import os
+import re
+
+MODULES = ("repro.config", "repro.core")
+SNAPSHOT = os.path.join(os.path.dirname(__file__), "data", "api_surface.json")
+
+
+def _sig(obj):
+    # instance/function default reprs embed memory addresses — strip them so
+    # the snapshot is stable across interpreters
+    return re.sub(r" at 0x[0-9a-fA-F]+", "", str(inspect.signature(obj)))
+
+
+def _describe(obj):
+    if inspect.isclass(obj):
+        try:
+            sig = _sig(obj)
+        except (ValueError, TypeError):  # C types without signatures
+            sig = None
+        return {"kind": "class", "signature": sig}
+    if callable(obj):
+        return {"kind": "function", "signature": _sig(obj)}
+    return {"kind": type(obj).__name__}
+
+
+def current_surface():
+    surface = {}
+    for modname in MODULES:
+        mod = importlib.import_module(modname)
+        names = sorted(mod.__all__)
+        assert len(names) == len(set(names)), f"duplicate __all__ in {modname}"
+        surface[modname] = {n: _describe(getattr(mod, n)) for n in names}
+    return surface
+
+
+def test_api_surface_matches_snapshot():
+    got = current_surface()
+    if os.environ.get("UPDATE_API_SURFACE"):
+        os.makedirs(os.path.dirname(SNAPSHOT), exist_ok=True)
+        with open(SNAPSHOT, "w") as f:
+            json.dump(got, f, indent=1, sort_keys=True)
+            f.write("\n")
+    with open(SNAPSHOT) as f:
+        want = json.load(f)
+    for modname in MODULES:
+        got_names = set(got.get(modname, {}))
+        want_names = set(want.get(modname, {}))
+        assert got_names == want_names, (
+            f"{modname}: public names changed "
+            f"(added={sorted(got_names - want_names)}, "
+            f"removed={sorted(want_names - got_names)}); if intentional, "
+            "regenerate with UPDATE_API_SURFACE=1 (see module docstring)"
+        )
+        for name in sorted(got_names):
+            assert got[modname][name] == want[modname][name], (
+                f"{modname}.{name} signature changed:\n"
+                f"  was: {want[modname][name]}\n"
+                f"  now: {got[modname][name]}\n"
+                "if intentional, regenerate with UPDATE_API_SURFACE=1"
+            )

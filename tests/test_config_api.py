@@ -1,0 +1,146 @@
+"""Nested LoaderConfig (PipelineConfig / DeliverySpec) + deprecation shim."""
+import warnings
+
+import pytest
+
+from repro.config import DeliverySpec, LoaderConfig, PipelineConfig, replace
+
+
+class TestPipelineConfigNesting:
+    def test_default_is_disabled_and_falsy(self):
+        cfg = LoaderConfig()
+        assert isinstance(cfg.pipeline, PipelineConfig)
+        assert not cfg.pipeline
+        assert bool(PipelineConfig(enabled=True))
+
+    def test_nested_construction_warns_nothing(self):
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")
+            cfg = LoaderConfig(
+                pipeline=PipelineConfig(enabled=True, io_workers=8,
+                                        reorder="window", reorder_window=2)
+            )
+        assert cfg.pipeline.io_workers == 8
+        assert cfg.pipeline.reorder == "window"
+
+    def test_legacy_read_properties_delegate(self):
+        cfg = LoaderConfig(pipeline=PipelineConfig(
+            enabled=True, reorder="window", reorder_window=3, io_workers=5,
+            cpu_workers=2, cpu_executor="process", stage_queue_depth=32,
+        ))
+        assert cfg.reorder == "window"
+        assert cfg.reorder_window == 3
+        assert cfg.io_workers == 5
+        assert cfg.cpu_workers == 2
+        assert cfg.cpu_executor == "process"
+        assert cfg.stage_queue_depth == 32
+
+    def test_replace_round_trips_without_warning(self):
+        cfg = LoaderConfig(pipeline=PipelineConfig(enabled=True, io_workers=8))
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")
+            derived = replace(cfg, batch_size=64)
+        assert derived.pipeline == cfg.pipeline
+        assert derived.batch_size == 64
+
+
+class TestDeprecationShim:
+    def test_flat_bool_pipeline_warns_and_nests(self):
+        with pytest.warns(DeprecationWarning, match="pipeline=<bool>"):
+            cfg = LoaderConfig(pipeline=True)
+        assert cfg.pipeline == PipelineConfig(enabled=True)
+
+    @pytest.mark.parametrize("name,value", [
+        ("reorder", "window"),
+        ("reorder_window", 7),
+        ("io_workers", 3),
+        ("cpu_workers", 5),
+        ("cpu_executor", "process"),
+        ("stage_queue_depth", 16),
+    ])
+    def test_each_flat_kwarg_warns_once_and_lands_nested(self, name, value):
+        with pytest.warns(DeprecationWarning, match=name) as rec:
+            cfg = LoaderConfig(**{name: value})
+        assert sum(issubclass(w.category, DeprecationWarning)
+                   for w in rec) == 1
+        assert getattr(cfg.pipeline, name) == value
+
+    def test_flat_equals_nested(self):
+        with pytest.warns(DeprecationWarning):
+            flat = LoaderConfig(pipeline=True, reorder="strict",
+                                io_workers=6, cpu_workers=2)
+        nested = LoaderConfig(pipeline=PipelineConfig(
+            enabled=True, reorder="strict", io_workers=6, cpu_workers=2))
+        assert flat == nested
+
+    def test_flat_kwargs_merge_into_given_pipeline(self):
+        with pytest.warns(DeprecationWarning, match="io_workers"):
+            cfg = LoaderConfig(
+                pipeline=PipelineConfig(enabled=True, cpu_workers=2),
+                io_workers=9,
+            )
+        assert cfg.pipeline.io_workers == 9
+        assert cfg.pipeline.cpu_workers == 2
+        assert cfg.pipeline.enabled
+
+
+class TestDeliverySpec:
+    def test_default_is_host(self):
+        cfg = LoaderConfig()
+        assert cfg.delivery.kind == "host"
+        assert DeliverySpec.host() == DeliverySpec()
+
+    def test_sharded_factory(self):
+        mesh = object()  # opaque at the config layer — no jax import
+        spec = DeliverySpec.sharded(mesh, axis="pod", coord_dir="/tmp/x")
+        assert spec.kind == "sharded"
+        assert spec.mesh is mesh
+        assert spec.axis == "pod"
+        assert spec.coord_dir == "/tmp/x"
+
+    def test_config_module_does_not_import_jax(self):
+        import subprocess
+        import sys
+
+        out = subprocess.run(
+            [sys.executable, "-c",
+             "import sys; import repro.config; import repro.core; "
+             "print('jax' in sys.modules)"],
+            capture_output=True, text=True, env={"PYTHONPATH": "src"},
+        )
+        assert out.returncode == 0, out.stderr
+        assert out.stdout.strip() == "False"
+
+
+class TestLoaderValidation:
+    def test_unknown_delivery_kind_rejected(self):
+        from repro.core.loader import ConcurrentDataLoader
+
+        with pytest.raises(ValueError, match="delivery"):
+            ConcurrentDataLoader(
+                [0] * 8,
+                LoaderConfig(batch_size=4, delivery=DeliverySpec(kind="bogus")),
+            )
+
+    def test_sharded_requires_pipeline(self):
+        from repro.core.loader import ConcurrentDataLoader
+
+        with pytest.raises(ValueError, match="pipeline"):
+            ConcurrentDataLoader(
+                [0] * 8,
+                LoaderConfig(batch_size=4,
+                             delivery=DeliverySpec(kind="sharded")),
+            )
+
+    def test_sharded_requires_strict_reorder(self):
+        from repro.core.loader import ConcurrentDataLoader
+
+        with pytest.raises(ValueError, match="strict"):
+            ConcurrentDataLoader(
+                [0] * 8,
+                LoaderConfig(
+                    batch_size=4,
+                    pipeline=PipelineConfig(enabled=True, reorder="window"),
+                    delivery=DeliverySpec(kind="sharded"),
+                ),
+            )

@@ -1,0 +1,250 @@
+"""Device-sharded delivery (repro.core.delivery).
+
+Lane-plan construction, the fleet cursor board, and checkpoint validation
+run in-process.  The end-to-end properties — gather equivalence against the
+host path and per-lane resume — need a ≥4-device mesh, so they run in a
+subprocess with ``XLA_FLAGS=--xla_force_host_platform_device_count=4``
+(the flag must be set before jax initializes; same pattern as
+test_dryrun_small.py).
+"""
+import json
+import os
+import subprocess
+import sys
+import types
+
+import numpy as np
+import pytest
+
+from repro.config import DeliverySpec
+
+
+# --------------------------------------------------------------------------
+# LanePlan over a fake mesh (no jax device requirements)
+# --------------------------------------------------------------------------
+
+
+def _fake_mesh(axis_sizes, axis_names, process_of=lambda i: 0):
+    """Duck-typed mesh: LanePlan.build touches axis_names, shape, devices,
+    and each device's process_index."""
+    n = int(np.prod(axis_sizes))
+    devs = np.array(
+        [types.SimpleNamespace(id=i, process_index=process_of(i))
+         for i in range(n)],
+        dtype=object,
+    ).reshape(axis_sizes)
+    return types.SimpleNamespace(
+        axis_names=tuple(axis_names),
+        shape=dict(zip(axis_names, axis_sizes)),
+        devices=devs,
+    )
+
+
+class TestLanePlan:
+    def test_requires_mesh(self):
+        from repro.core.delivery import LanePlan
+
+        with pytest.raises(ValueError, match="needs a mesh"):
+            LanePlan.build(DeliverySpec(kind="sharded"), 8)
+
+    def test_axis_must_exist(self):
+        from repro.core.delivery import LanePlan
+
+        mesh = _fake_mesh((4,), ("data",))
+        spec = DeliverySpec.sharded(mesh, axis="model")
+        with pytest.raises(ValueError, match="not a mesh axis"):
+            LanePlan.build(spec, 8, process_index=0)
+
+    def test_one_lane_per_data_slice_replicated_over_model(self):
+        from repro.core.delivery import LanePlan
+
+        mesh = _fake_mesh((4, 2), ("data", "model"))
+        plan = LanePlan.build(DeliverySpec.sharded(mesh), 8, process_index=0)
+        assert plan.num_lanes == 4
+        # each lane holds both model-axis devices of its data slice
+        assert [len(lane) for lane in plan.lanes] == [2] * 4
+        assert plan.global_mult == 1
+        assert plan.global_rows(8) == 8
+
+    def test_multi_host_slice_scales_global_rows(self):
+        from repro.core.delivery import LanePlan
+
+        # 8-wide data axis split over 2 processes -> 4 local lanes, and the
+        # composed global array spans both hosts' rows
+        mesh = _fake_mesh((8,), ("data",), process_of=lambda i: i // 4)
+        plan = LanePlan.build(DeliverySpec.sharded(mesh), 8, process_index=1)
+        assert plan.num_lanes == 4
+        assert plan.global_mult == 2
+        assert plan.global_rows(8) == 16
+        assert [d.id for lane in plan.lanes for d in lane] == [4, 5, 6, 7]
+
+    def test_no_addressable_devices_rejected(self):
+        from repro.core.delivery import LanePlan
+
+        mesh = _fake_mesh((4,), ("data",))
+        with pytest.raises(ValueError, match="no devices addressable"):
+            LanePlan.build(DeliverySpec.sharded(mesh), 8, process_index=9)
+
+    def test_indivisible_host_batch_rejected(self):
+        from repro.core.delivery import LanePlan
+
+        mesh = _fake_mesh((4,), ("data",))
+        with pytest.raises(ValueError, match="does not divide evenly"):
+            LanePlan.build(DeliverySpec.sharded(mesh), 6, process_index=0)
+
+
+# --------------------------------------------------------------------------
+# fleet cursor board
+# --------------------------------------------------------------------------
+
+
+class TestShardCursorBoard:
+    def test_aligned_none_until_all_hosts_publish(self, tmp_path):
+        from repro.core.delivery import ShardCursorBoard
+
+        board = ShardCursorBoard(str(tmp_path), num_hosts=2)
+        assert board.aligned() is None
+        board.publish(0, 0, 7)
+        assert board.aligned() is None
+        board.publish(1, 0, 5)
+        assert board.aligned() == (0, 5)
+
+    def test_aligned_is_fleet_minimum_ordered_by_epoch(self, tmp_path):
+        from repro.core.delivery import ShardCursorBoard
+
+        board = ShardCursorBoard(str(tmp_path), num_hosts=2)
+        board.publish(0, 1, 2)  # ahead by an epoch
+        board.publish(1, 0, 9)
+        assert board.aligned() == (0, 9)
+
+    def test_republish_overwrites(self, tmp_path):
+        from repro.core.delivery import ShardCursorBoard
+
+        board = ShardCursorBoard(str(tmp_path), num_hosts=1)
+        board.publish(0, 0, 3)
+        board.publish(0, 0, 8)
+        assert board.aligned() == (0, 8)
+
+    def test_two_boards_share_one_document(self, tmp_path):
+        from repro.core.delivery import ShardCursorBoard
+
+        a = ShardCursorBoard(str(tmp_path), num_hosts=2)
+        b = ShardCursorBoard(str(tmp_path), num_hosts=2)
+        a.publish(0, 0, 4)
+        b.publish(1, 0, 6)
+        assert a.aligned() == b.aligned() == (0, 4)
+
+
+# --------------------------------------------------------------------------
+# checkpoint validation (host-side, no mesh needed)
+# --------------------------------------------------------------------------
+
+
+def test_host_loader_rejects_sharded_checkpoint():
+    from repro.config import LoaderConfig
+    from repro.core.loader import ConcurrentDataLoader
+
+    loader = ConcurrentDataLoader([0] * 8, LoaderConfig(batch_size=4))
+    with pytest.raises(ValueError, match="host batches"):
+        loader.load_state_dict({
+            "epoch": 0, "next_batch": 2,
+            "delivery": {"kind": "sharded", "axis": "data", "num_lanes": 4,
+                         "lanes": []},
+        })
+
+
+# --------------------------------------------------------------------------
+# end-to-end on a 4-device CPU mesh (subprocess)
+# --------------------------------------------------------------------------
+
+SCRIPT = r'''
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import json
+import numpy as np
+import jax
+from repro.config import DeliverySpec, LoaderConfig, PipelineConfig
+from repro.core import make_loader
+from repro.data.dataset import ImageDataset
+from repro.data.imagenet_synth import SyntheticImageStore
+from repro.launch.mesh import make_mesh
+
+mesh = make_mesh((4,), ("data",))
+
+def dataset():
+    return ImageDataset(SyntheticImageStore(96, seed=0, avg_kb=4), 96,
+                        out_size=32, augment=False)
+
+def loader(delivery):
+    return make_loader(
+        LoaderConfig(batch_size=16, seed=3,
+                     pipeline=PipelineConfig(enabled=True, io_workers=8),
+                     delivery=delivery),
+        dataset(),
+    )
+
+rec = {}
+
+# 1) composed global batch == host batch, bit for bit, in stream order
+host = list(loader(DeliverySpec.host()))
+sharded_loader = loader(DeliverySpec.sharded(mesh))
+sharded = list(sharded_loader)
+rec["n_batches"] = (len(host), len(sharded))
+rec["device_resident"] = all(
+    isinstance(b["image"], jax.Array) and len(b["image"].sharding.device_set) == 4
+    for b in sharded
+)
+rec["gather_equal"] = len(host) == len(sharded) and all(
+    np.array_equal(np.asarray(jax.device_get(sb[k])), hb[k])
+    for hb, sb in zip(host, sharded) for k in hb
+)
+stats = sharded_loader.stage_stats()["delivery"]
+rec["num_lanes"] = stats["num_lanes"]
+rec["per_lane_composed"] = [l["composed"] for l in stats["lanes"]]
+
+# 2) per-lane resume: cursors recorded, round-trip matches an unbroken run
+first = loader(DeliverySpec.sharded(mesh))
+it = iter(first)
+for _ in range(2):
+    next(it)
+state = first.state_dict()
+it.shutdown()
+rec["lane_cursors"] = [l["next_batch"] for l in state["delivery"]["lanes"]]
+resumed = loader(DeliverySpec.sharded(mesh))
+resumed.load_state_dict(state)
+rest = list(resumed)
+unbroken = list(loader(DeliverySpec.sharded(mesh)))[2:]
+rec["resume_equal"] = len(rest) == len(unbroken) and all(
+    np.array_equal(np.asarray(jax.device_get(rb[k])),
+                   np.asarray(jax.device_get(ub[k])))
+    for rb, ub in zip(rest, unbroken) for k in rb
+)
+
+# 3) a checkpoint from a different mesh slicing is rejected
+state2 = dict(state)
+state2["delivery"] = dict(state["delivery"], num_lanes=2)
+try:
+    loader(DeliverySpec.sharded(mesh)).load_state_dict(state2)
+    rec["lane_mismatch_raises"] = False
+except ValueError:
+    rec["lane_mismatch_raises"] = True
+
+print(json.dumps(rec))
+'''
+
+
+def test_sharded_delivery_end_to_end_4dev():
+    env = dict(os.environ, PYTHONPATH="src")
+    out = subprocess.run(
+        [sys.executable, "-c", SCRIPT], capture_output=True, text=True,
+        env=env, timeout=600, cwd=os.path.dirname(os.path.dirname(__file__)),
+    )
+    assert out.returncode == 0, out.stderr[-2000:]
+    rec = json.loads(out.stdout.strip().splitlines()[-1])
+    assert rec["gather_equal"], rec
+    assert rec["device_resident"], rec
+    assert rec["num_lanes"] == 4
+    assert len(set(rec["per_lane_composed"])) == 1  # strict => lockstep
+    assert rec["lane_cursors"] == [2, 2, 2, 2]
+    assert rec["resume_equal"], rec
+    assert rec["lane_mismatch_raises"], rec
