@@ -1,0 +1,101 @@
+#!/usr/bin/env python
+"""Copy-regression gate for the zero-copy loader path.
+
+``benchmarks/bench_shm`` counts every host-side memcpy the loader performs
+(pickle serialize/deserialize, shm slab writes, collate) and emits a
+deterministic ``bytes_copied_per_sample`` per transport/epilogue cell into
+its BENCH json.  This script compares that report against the committed
+baseline and fails CI when any cell regresses by more than ``--tolerance``
+(default 10%) — a re-introduced copy (an np.stack sneaking back into the
+staging path, a fallback-rate blowup, an f32 tensor crossing a boundary
+that should carry uint8) shows up here as a byte count, not a flaky timing.
+
+Improvements beyond tolerance pass with a reminder to refresh the baseline:
+
+    PYTHONPATH=src python -m benchmarks.run --only shm --out reports/bench
+    python scripts/check_copies.py --write-baseline
+
+Stdlib only; no repo imports (usable before an editable install).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+DEFAULT_REPORT = "reports/bench/shm.json"
+DEFAULT_BASELINE = "benchmarks/baselines/copy_baseline.json"
+METRIC = "bytes_copied_per_sample"
+
+
+def load_cells(report_path: str) -> dict:
+    with open(report_path) as f:
+        report = json.load(f)
+    cells = {}
+    for row in report.get("rows", []):
+        name, value = row.get("name"), row.get(METRIC)
+        if name is None or value is None:
+            raise SystemExit(f"malformed report row (need name + {METRIC}): {row}")
+        cells[name] = int(value)
+    if not cells:
+        raise SystemExit(f"no rows in {report_path}")
+    return cells
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--report", default=DEFAULT_REPORT)
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE)
+    ap.add_argument("--tolerance", type=float, default=0.10,
+                    help="allowed fractional regression per cell")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="refresh the baseline from the report and exit")
+    args = ap.parse_args()
+
+    cells = load_cells(args.report)
+    if args.write_baseline:
+        os.makedirs(os.path.dirname(args.baseline), exist_ok=True)
+        with open(args.baseline, "w") as f:
+            json.dump({"metric": METRIC, "cells": cells}, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"baseline written: {args.baseline} {cells}")
+        return 0
+
+    with open(args.baseline) as f:
+        baseline = json.load(f)["cells"]
+
+    failures = []
+    for name, base in sorted(baseline.items()):
+        got = cells.get(name)
+        if got is None:
+            failures.append(f"cell {name!r} missing from report (baseline {base})")
+            continue
+        limit = base * (1.0 + args.tolerance)
+        delta = (got - base) / base if base else float("inf")
+        status = "FAIL" if got > limit else "ok"
+        print(f"  [{status}] {name}: {got} vs baseline {base} ({delta:+.1%})")
+        if got > limit:
+            failures.append(
+                f"{name}: {METRIC} {got} > {limit:.0f} "
+                f"(baseline {base} + {args.tolerance:.0%})"
+            )
+        elif got < base * (1.0 - args.tolerance):
+            print(f"         {name} improved beyond tolerance — consider "
+                  f"`python scripts/check_copies.py --write-baseline`")
+    extra = set(cells) - set(baseline)
+    if extra:
+        # a new cell is not a regression, but the baseline should learn it
+        print(f"note: cells not in baseline (add via --write-baseline): "
+              f"{sorted(extra)}")
+    if failures:
+        print("\ncopy-regression gate FAILED:")
+        for f_ in failures:
+            print(f"  {f_}")
+        return 1
+    print("copy-regression gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

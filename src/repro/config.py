@@ -316,6 +316,12 @@ class AutotuneConfig:
     max_cpu_workers: int = 32
     min_stage_queue: int = 4
     max_stage_queue: int = 512
+    # shm-transport slab pressure knob (PipelineConfig.transport="shm"): the
+    # controller caps how many of the preallocated slots each worker may use
+    # (live, via a slab_cap message) — fewer slots = less memory pinned and
+    # earlier pickle fallback; more slots = headroom for bursty decode.
+    min_slab_slots: int = 4
+    max_slab_slots: int = 512
     # budget co-tuning (staged pipeline + split datasets only).  0 keeps the
     # independent io_workers/cpu_workers knobs.  >0 fixes the TOTAL executor
     # width at thread_budget and replaces those two knobs with one coupled
@@ -372,6 +378,27 @@ class PipelineConfig:
     # threads that try to feed it — that stall is the pipeline's
     # backpressure, and the depth is an autotune knob.
     stage_queue_depth: int = 64
+    # process-stage result transport (cpu_executor="process" only):
+    #   "pipe" — every decoded sample is pickled through the result pipe
+    #            (legacy; fine at tens of kB, two full copies per sample)
+    #   "shm"  — workers write decoded arrays into a preallocated per-worker
+    #            shared-memory slab (slot-granular, generation-counted) and
+    #            ship only (slot, dtype, shape, offset) handles over the
+    #            pipe; the parent reads zero-copy views.  Oversized/ragged
+    #            samples and slab pressure fall back to pickle per sample.
+    transport: str = "pipe"
+    # shm slab sizing: slots per worker slab and bytes per slot.  A slot
+    # must hold one whole decoded sample (all arrays, padded to 64B each);
+    # bigger samples take the pickle fallback.  slab_slots is an autotune
+    # knob (AutotuneConfig.min/max_slab_slots).
+    slab_slot_bytes: int = 1 << 20
+    slab_slots: int = 32
+    # pinned host staging (repro.core.staging): >0 collates batches directly
+    # into a pool of this many reusable page-aligned host buffers that the
+    # device-prefetch ring hands to device_put and recycles after transfer,
+    # replacing the per-batch np.stack allocation+copy.  Only engages for
+    # the default collate; 0 = off.
+    staging_buffers: int = 0
 
     def __bool__(self) -> bool:
         return self.enabled

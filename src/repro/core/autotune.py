@@ -708,6 +708,9 @@ def build_pipeline_knobs(
     max_cpu: Optional[int] = None,
     max_outstanding: Optional[int] = None,
     max_queue: Optional[int] = None,
+    get_slab: Optional[Callable[[], int]] = None,
+    set_slab: Optional[Callable[[int], int]] = None,
+    max_slab: Optional[int] = None,
 ) -> List[Knob]:
     """Per-stage knob set for a staged-pipeline ``_PipelineIter``: IO
     executor width, CPU executor width, the outstanding sample window (in
@@ -717,7 +720,9 @@ def build_pipeline_knobs(
     ``max_*`` widen the configured ceilings when the static config already
     sits above them (enabling autotune must never cap the loader); IO
     workers share the ``min/max_fetch_workers`` bounds since they gate the
-    same resource the legacy per-worker fetch pools did."""
+    same resource the legacy per-worker fetch pools did.  ``get/set_slab``
+    (shm transport only) tune the usable-slot cap per worker slab — slab
+    pressure traded against pickle-fallback rate."""
     knobs = [
         Knob(
             name="io_workers",
@@ -748,6 +753,16 @@ def build_pipeline_knobs(
             hi=max(cfg.max_stage_queue, max_queue or 0),
         ),
     ]
+    if get_slab is not None and set_slab is not None:
+        knobs.append(
+            Knob(
+                name="slab_slots",
+                get=get_slab,
+                set=set_slab,
+                lo=cfg.min_slab_slots,
+                hi=min(cfg.max_slab_slots, max_slab or cfg.max_slab_slots),
+            )
+        )
     if cfg.tune_hedge and hedge is not None:
         def _get_hedge() -> int:
             return int(hedge.enabled)
@@ -788,6 +803,9 @@ def build_budget_knobs(
     hedge: Optional[Any] = None,
     max_outstanding: Optional[int] = None,
     max_queue: Optional[int] = None,
+    get_slab: Optional[Callable[[], int]] = None,
+    set_slab: Optional[Callable[[int], int]] = None,
+    max_slab: Optional[int] = None,
 ) -> List[Knob]:
     """Knob set for a budget co-tuned ``_PipelineIter``
     (``AutotuneConfig.thread_budget``): the independent ``io_workers`` /
@@ -834,6 +852,16 @@ def build_budget_knobs(
     ):
         knobs.append(
             Knob("cpu_executor", get_cpu_executor, set_cpu_executor, 0, 1)
+        )
+    if get_slab is not None and set_slab is not None:
+        knobs.append(
+            Knob(
+                name="slab_slots",
+                get=get_slab,
+                set=set_slab,
+                lo=cfg.min_slab_slots,
+                hi=min(cfg.max_slab_slots, max_slab or cfg.max_slab_slots),
+            )
         )
     if cfg.tune_hedge and hedge is not None:
         def _get_hedge() -> int:

@@ -45,6 +45,7 @@ import jax
 from jax.sharding import NamedSharding, PartitionSpec
 
 from repro.core.pipeline import _Composed, _Failure
+from repro.core.shm import release_items
 from repro.core.tracing import (
     LANE_COLLATE,
     LANE_H2D,
@@ -168,12 +169,24 @@ class ShardedAssembler:
         done_q: "queue.Queue",
         stop: threading.Event,
         tracer: Tracer = NULL_TRACER,
+        staging_buffers: int = 0,
     ) -> None:
         self.plan = plan
         self.collate_fn = collate_fn
         self.done_q = done_q
         self.stop = stop
         self.tracer = tracer
+        # pinned staging (repro.core.staging): each lane collates its shard
+        # into its own pool of page-aligned buffers, released right after
+        # that lane's device_put lands — per-lane H2D from reused memory
+        self._pools = None
+        if staging_buffers > 0:
+            from repro.core.staging import HostBatchPool  # lazy: optional
+
+            self._pools = [
+                HostBatchPool(depth=staging_buffers, tracer=tracer)
+                for _ in range(plan.num_lanes)
+            ]
         self._lock = threading.Lock()
         self._batches: Dict[int, _Assembly] = {}
         self._lane_qs: List["queue.Queue"] = [
@@ -223,11 +236,17 @@ class ShardedAssembler:
                 continue
             try:
                 t0 = time.monotonic()
-                sub = self.collate_fn(items)
+                if self._pools is not None:
+                    sub = self._pools[lane].collate(items)
+                else:
+                    sub = self.collate_fn(items)
                 t1 = time.monotonic()
                 self.tracer.record(
                     LANE_COLLATE, t0, t1, lane=lane, batch_id=batch_id
                 )
+                # collate copied the views out: shm transport slots can go
+                # back to their workers while this lane transfers
+                release_items(items)
                 shards: Dict[str, List[Any]] = {}
                 t1b = time.monotonic()
                 for key, arr in sub.items():
@@ -239,6 +258,13 @@ class ShardedAssembler:
                 self.tracer.record(
                     LANE_H2D, t1b, t2, lane=lane, batch_id=batch_id
                 )
+                if self._pools is not None:
+                    # shard bytes are device-resident; recycle the lane
+                    # buffers — unless device_put was zero-copy (XLA CPU
+                    # aliases aligned host buffers), which detaches instead
+                    sub.release_after(
+                        [p for parts in shards.values() for p in parts]
+                    )
                 with self._lock:
                     self._collate_s[lane] += t1 - t0
                     self._h2d_s[lane] += t2 - t1b
@@ -285,7 +311,7 @@ class ShardedAssembler:
                 "h2d_mean_s": h2d_s[i] / n if n else 0.0,
                 "queued": self._lane_qs[i].qsize(),
             })
-        return {
+        out = {
             "axis": self.plan.axis,
             "num_lanes": self.plan.num_lanes,
             "lanes": lanes,
@@ -293,6 +319,9 @@ class ShardedAssembler:
             # starving the compose barrier — the signal autotune watches
             "lane_skew": max(composed) - min(composed) if composed else 0,
         }
+        if self._pools is not None:
+            out["staging"] = [p.stats() for p in self._pools]
+        return out
 
     def close(self) -> None:
         self.stop.set()

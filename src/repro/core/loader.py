@@ -94,6 +94,10 @@ class ConcurrentDataLoader:
                 f"unknown cpu_executor {pipe.cpu_executor!r}; "
                 "known: 'thread', 'process'"
             )
+        if pipe.transport not in ("pipe", "shm"):
+            raise ValueError(
+                f"unknown transport {pipe.transport!r}; known: 'pipe', 'shm'"
+            )
         if pipe:
             # fail at construction, naming the field — not at first iter()
             # with an opaque semaphore error from deep inside a stage
@@ -109,6 +113,15 @@ class ConcurrentDataLoader:
                     raise ValueError(f"{field} must be >= 0 (0 = derive)")
             if pipe.stage_queue_depth < 1:
                 raise ValueError("stage_queue_depth must be >= 1")
+            if pipe.transport == "shm":
+                if pipe.slab_slot_bytes < 1 or pipe.slab_slots < 1:
+                    raise ValueError(
+                        "transport='shm' needs slab_slot_bytes >= 1 and "
+                        "slab_slots >= 1 (one slot must hold one decoded "
+                        "sample; see README 'Zero-copy path')"
+                    )
+            if pipe.staging_buffers < 0:
+                raise ValueError("staging_buffers must be >= 0 (0 = off)")
             at_ = cfg.autotune
             if at_.enabled and at_.thread_budget:
                 floor = at_.min_fetch_workers + max(at_.min_cpu_workers, 1)

@@ -44,15 +44,18 @@ from __future__ import annotations
 
 import asyncio
 import multiprocessing
+import os
 import pickle
 import queue
 import threading
 import time
+import weakref
 from collections import deque
 from concurrent.futures import ThreadPoolExecutor
 from multiprocessing.connection import wait as _mp_wait
 from typing import Any, Deque, Dict, List, Optional, Tuple
 
+from repro.core import shm as shm_mod
 from repro.core.fetcher import (
     AdjustableSemaphore,
     aretry_transient,
@@ -60,6 +63,7 @@ from repro.core.fetcher import (
 )
 from repro.core.sampler import BatchIndices
 from repro.core.tracing import (
+    BYTES_COPIED,
     STAGE_AUGMENT,
     STAGE_COLLATE,
     STAGE_DECODE,
@@ -472,7 +476,7 @@ class _CPUStage:
 PROC_TASK_ATTEMPTS = 3
 
 
-def _cpu_proc_main(payload: bytes, conn) -> None:
+def _cpu_proc_main(payload: bytes, conn, shm_spec=None) -> None:
     """Spawn entry point for one CPU worker process.
 
     Runs ONLY ``decode_raw`` + ``augment_item`` on tasks received over the
@@ -481,7 +485,16 @@ def _cpu_proc_main(payload: bytes, conn) -> None:
     CLOCK_MONOTONIC) and shipped home so the parent can record real
     per-worker decode/augment spans.  A ``bind`` message replaces the
     dataset wholesale — how the parent pushes per-epoch state (e.g. the
-    augmentation epoch) into a pool that outlives iterators."""
+    augmentation epoch) into a pool that outlives iterators.
+
+    ``shm_spec`` = ``(name, slot_bytes, slots)`` attaches the zero-copy
+    transport (``PipelineConfig.transport="shm"``): finished samples are
+    packed into the parent-owned slab and shipped as ``done_shm`` handles;
+    ``free`` returns slots the parent consumed, ``slab_reset`` reclaims
+    everything at an epoch takeover, ``slab_cap`` is the autotuner's live
+    pressure knob.  Anything that can't pack falls back to the pickle
+    ``done`` with the reason attached.  ``die`` is the test-only crash
+    injection hook (:meth:`_CPUProcessPool.inject_crash`)."""
     try:
         dataset = pickle.loads(payload)
     except BaseException as e:  # exotic: parent pre-validated pickling
@@ -491,6 +504,18 @@ def _cpu_proc_main(payload: bytes, conn) -> None:
             pass
         conn.close()
         return
+    writer = None
+    if shm_spec is not None:
+        try:
+            writer = shm_mod.SlabWriter(*shm_spec)
+        except BaseException as e:
+            # segment vanished (parent raced shutdown) — degrade to pipe
+            try:
+                conn.send(("crash", f"worker could not attach slab: {e!r}"))
+            except OSError:
+                pass
+            writer = None
+    die_on_task: Optional[str] = None
     while True:
         try:
             msg = conn.recv()
@@ -509,6 +534,27 @@ def _cpu_proc_main(payload: bytes, conn) -> None:
                     pass
                 break
             continue
+        if tag == "free":
+            if writer is not None:
+                writer.free_slots(msg[1])
+            continue
+        if tag == "slab_reset":
+            if writer is not None:
+                writer.reset()
+            continue
+        if tag == "slab_cap":
+            if writer is not None:
+                writer.set_cap(msg[1])
+            continue
+        if tag == "die":
+            # crash injection: "now" dies immediately; "mid_slab_write"
+            # dies on the NEXT task with a slot claimed and half-written —
+            # the handle is never sent, so the parent must reclaim the slot
+            # via slab retirement and retry the sample elsewhere
+            if msg[1] == "mid_slab_write" and writer is not None:
+                die_on_task = msg[1]
+                continue
+            os._exit(1)
         _, sid, index, raw = msg
         try:
             t0 = time.monotonic()
@@ -516,7 +562,19 @@ def _cpu_proc_main(payload: bytes, conn) -> None:
             t1 = time.monotonic()
             item = dataset.augment_item(decoded, index)
             t2 = time.monotonic()
-            conn.send(("done", sid, item, (t0, t1, t2)))
+            if die_on_task == "mid_slab_write":
+                slot = writer._take_slot()
+                if slot is not None:
+                    writer.shm.buf[slot * writer.slot_bytes] = 0xAB
+                os._exit(1)
+            if writer is not None:
+                handle, why = writer.try_pack(item)
+                if handle is not None:
+                    conn.send(("done_shm", sid, handle, (t0, t1, t2)))
+                    continue
+            else:
+                why = None
+            conn.send(("done", sid, item, (t0, t1, t2), why))
         except BaseException as e:
             try:
                 pickle.dumps(e)
@@ -529,6 +587,8 @@ def _cpu_proc_main(payload: bytes, conn) -> None:
                 conn.send(("err", sid, exc))
             except OSError:
                 break
+    if writer is not None:
+        writer.close()
     conn.close()
 
 
@@ -547,17 +607,26 @@ class _ProcWorker:
     the rebind — unsynchronized interleaved writes would corrupt the pickle
     stream."""
 
-    __slots__ = ("proc", "conn", "sids", "send_lock")
+    __slots__ = ("proc", "conn", "sids", "send_lock", "slab")
 
-    def __init__(self, proc, conn) -> None:
+    def __init__(self, proc, conn, slab=None) -> None:
         self.proc = proc
         self.conn = conn
         self.sids: List[int] = []  # at most PROC_PREFILL_DEPTH entries
         self.send_lock = threading.Lock()
+        self.slab: Optional[shm_mod.ParentSlab] = slab  # shm transport only
 
     def send(self, msg: Tuple) -> None:
         with self.send_lock:
             self.conn.send(msg)
+
+
+def _finalize_pool(slabs: List["shm_mod.ParentSlab"],
+                   shutdown: threading.Event) -> None:
+    """weakref.finalize target for :class:`_CPUProcessPool` (must not hold
+    the pool itself): bar further spawns, then unlink every slab."""
+    shutdown.set()
+    shm_mod.close_slabs(slabs)
 
 
 class _CPUProcessPool:
@@ -575,7 +644,8 @@ class _CPUProcessPool:
     tasks are recognized and dropped by the next stage.  Workers are daemon
     processes: an exiting interpreter never hangs on the pool."""
 
-    def __init__(self, payload: bytes, hard_cap: int) -> None:
+    def __init__(self, payload: bytes, hard_cap: int,
+                 shm_spec: Optional[Tuple[int, int]] = None) -> None:
         self.ctx = multiprocessing.get_context("spawn")
         self.payload = payload
         self.hard_cap = max(1, hard_cap)
@@ -590,6 +660,22 @@ class _CPUProcessPool:
         self._sid = 0
         self._lock = threading.Lock()
         self._closed = False
+        # shm transport: (slot_bytes, slots) per worker slab, or None for
+        # the pickle pipe.  The parent creates/owns every slab; _slabs is a
+        # live list shared with the exit finalizer so segments allocated
+        # after respawns are still unlinked if the pool is never closed.
+        # The shared _shutdown flag closes a shutdown race: the finalizer
+        # runs BEFORE multiprocessing's own atexit terminates the daemon
+        # workers, so the (daemon) pump thread may reap those corpses and
+        # respawn replacements AFTER the slabs were unlinked — a segment
+        # born then has nothing left to clean it up.  ensure() refuses to
+        # spawn once the flag is set.
+        self.shm_spec = shm_spec
+        self.slab_cap: Optional[int] = None  # live usable-slot bound
+        self._slabs: List[shm_mod.ParentSlab] = []
+        self._shutdown = threading.Event()
+        self._finalizer = weakref.finalize(
+            self, _finalize_pool, self._slabs, self._shutdown)
 
     def next_sid(self) -> int:
         with self._lock:
@@ -610,22 +696,35 @@ class _CPUProcessPool:
 
     def spawn_one(self) -> None:
         parent_conn, child_conn = self.ctx.Pipe()
+        slab = None
+        worker_spec = None
+        if self.shm_spec is not None:
+            slab = shm_mod.ParentSlab(*self.shm_spec)
+            self._slabs.append(slab)
+            worker_spec = slab.spec()
         proc = self.ctx.Process(
             target=_cpu_proc_main,
-            args=(self.payload, child_conn),
+            args=(self.payload, child_conn, worker_spec),
             name=f"pipe-cpu-proc-{len(self.workers)}",
             daemon=True,
         )
         proc.start()
         child_conn.close()  # the child holds its own copy
-        self.workers.append(_ProcWorker(proc, parent_conn))
+        w = _ProcWorker(proc, parent_conn, slab)
+        if slab is not None and self.slab_cap is not None:
+            # respawned workers must honour the tuned slab-pressure cap too
+            try:
+                w.send(("slab_cap", self.slab_cap))
+            except OSError:  # pragma: no cover - died at birth; reap handles
+                pass
+        self.workers.append(w)
 
     def ensure(self, n: int) -> None:
         # under the lock: during an epoch-boundary takeover the outgoing and
         # incoming pump threads briefly coexist, and unsynchronized growth
         # could overshoot hard_cap
         with self._lock:
-            if self._closed:
+            if self._closed or self._shutdown.is_set():
                 return
             while len(self.workers) < min(max(n, 1), self.hard_cap):
                 self.spawn_one()
@@ -634,6 +733,44 @@ class _CPUProcessPool:
         with self._lock:
             if w in self.workers:
                 self.workers.remove(w)
+        if w.slab is not None:
+            # already-delivered views stay valid (parent owns the mapping);
+            # the name is dropped now so nothing leaks past the pool
+            w.slab.retire()
+
+    def reset_slabs(self) -> None:
+        """Epoch takeover: every slot is reclaimed wholesale (a previous
+        iterator may have been abandoned with handles it never released)."""
+        for w in list(self.workers):
+            if w.slab is None:
+                continue
+            w.slab.reset_accounting()
+            try:
+                w.send(("slab_reset",))
+            except OSError:
+                pass  # dead worker; the pump's reap pass replaces it
+
+    def set_slab_cap(self, cap: int) -> None:
+        """Autotuner's live slab-pressure knob: bound how many slots each
+        worker may use (lower = earlier pickle fallback, less memory hot)."""
+        self.slab_cap = cap
+        for w in list(self.workers):
+            if w.slab is None:
+                continue
+            try:
+                w.send(("slab_cap", cap))
+            except OSError:
+                pass
+
+    def inject_crash(self, mode: str = "now", worker: int = 0) -> None:
+        """TEST HOOK: make worker ``worker`` die — ``"now"`` immediately,
+        ``"mid_slab_write"`` on its next task with a slot claimed and
+        half-written (exercising crash-safe slot reclamation)."""
+        with self._lock:
+            if not self.workers:
+                raise RuntimeError("no workers to crash")
+            w = self.workers[worker % len(self.workers)]
+        w.send(("die", mode))
 
     def close(self) -> None:
         """Terminate every worker (loader replacing the pool / tests).
@@ -650,6 +787,8 @@ class _CPUProcessPool:
             if w.proc.is_alive():
                 w.proc.terminate()
         self.workers.clear()
+        shm_mod.close_slabs(self._slabs)
+        self._slabs.clear()
 
 
 class _ProcCPUStage:
@@ -700,7 +839,16 @@ class _ProcCPUStage:
         self._inflight: Dict[int, _Sample] = {}
         self._attempts: Dict[int, int] = {}
         self._pending: Deque[int] = deque()  # crash-requeued sids, FIFO
+        # transport accounting (stage_stats()["transport"] + bench_shm's
+        # bytes-copied claim): pipe samples cost serialize + deserialize
+        # (2x payload), shm samples cost the worker's single slab write
+        self.shm_samples = 0
+        self.pipe_samples = 0
+        self.fallbacks: Dict[str, int] = {}
+        self.bytes_copied = 0
         pool.attach(self, payload)
+        if pool.shm_spec is not None:
+            pool.reset_slabs()
         pool.ensure(width)
         self._thread = threading.Thread(
             target=self._run, name="pipe-cpu-pool-pump", daemon=True
@@ -726,6 +874,7 @@ class _ProcCPUStage:
         while self._owned():
             self._reap()
             self.pool.ensure(self._width)
+            self._flush_frees()
             self._dispatch()
             workers = list(self.pool.workers)
             busy = [w.conn for w in workers if w.sids]
@@ -742,6 +891,21 @@ class _ProcCPUStage:
                         pass  # worker died mid-send; next reap handles it
             # fully idle case: _dispatch's bounded blocking get is the only
             # wait, so there is nothing further to sleep on here
+
+    def _flush_frees(self) -> None:
+        """Return consumed slots to their workers (shm transport): collate
+        queued them via ``ShmItem.release``; batching them onto the command
+        pipe here keeps the release path lock-only for the consumer."""
+        for w in list(self.pool.workers):
+            if w.slab is None:
+                continue
+            pairs = w.slab.drain_freed()
+            if not pairs:
+                continue
+            try:
+                w.send(("free", pairs))
+            except OSError:
+                pass  # dead worker; its slab is retired by the reap pass
 
     def _dispatch(self) -> None:
         while self._owned():
@@ -838,18 +1002,41 @@ class _ProcCPUStage:
         self._attempts.pop(sid, None)
         if s is None:
             return  # stale result from an abandoned epoch's stage
-        if tag == "done":
-            _, _, item, (t0, t1, t2) = msg
-            pid = w.proc.pid
-            self.tracer.record(STAGE_DECODE, t0, t1, tid=pid,
-                               index=s.index, batch_id=s.batch_id, proc=True)
-            self.tracer.record(STAGE_AUGMENT, t1, t2, tid=pid,
-                               index=s.index, batch_id=s.batch_id, proc=True)
+        if tag == "done_shm":
+            _, _, handle, (t0, t1, t2) = msg
+            item: Any = w.slab.view_item(handle)
+            # the worker's slab write is the transport's only copy
+            nbytes = handle[2]
+            self.shm_samples += 1
+            self.bytes_copied += nbytes
+            self.tracer.count(BYTES_COPIED, nbytes)
+            self._record_proc_spans(w, s, t0, t1, t2)
+            s.raw = None
+            self.done_q.put((s, item))
+        elif tag == "done":
+            _, _, item, (t0, t1, t2), why = msg
+            # pickle transport: one serialize in the worker, one deserialize
+            # here — two full passes over the payload
+            nbytes = shm_mod.item_nbytes(item) if isinstance(item, dict) else 0
+            self.pipe_samples += 1
+            self.bytes_copied += 2 * nbytes
+            self.tracer.count(BYTES_COPIED, 2 * nbytes)
+            if why is not None:
+                self.fallbacks[why] = self.fallbacks.get(why, 0) + 1
+            self._record_proc_spans(w, s, t0, t1, t2)
             s.raw = None
             self.done_q.put((s, item))
         else:  # "err": a dataset exception, not a crash — no retry
             self.done_q.put((s, _Failure(msg[2])))
         self.gate.release()
+
+    def _record_proc_spans(self, w: _ProcWorker, s: _Sample,
+                           t0: float, t1: float, t2: float) -> None:
+        pid = w.proc.pid
+        self.tracer.record(STAGE_DECODE, t0, t1, tid=pid,
+                           index=s.index, batch_id=s.batch_id, proc=True)
+        self.tracer.record(STAGE_AUGMENT, t1, t2, tid=pid,
+                           index=s.index, batch_id=s.batch_id, proc=True)
 
     def join(self, timeout: float = 2.0) -> None:
         self._thread.join(timeout=timeout)
@@ -990,6 +1177,23 @@ class _PipelineIter:
                     ) from e
                 self._proc_payload = None  # exec-kind knob just unavailable
 
+        # process-stage result transport: the zero-copy slab ring only means
+        # something when a process stage can exist (split + picklable);
+        # everything else keeps the pickle pipe (and the thread stage has no
+        # transport at all — items never leave the process)
+        self.transport = "pipe"
+        self._shm_spec: Optional[Tuple[int, int]] = None
+        if pipe.transport == "shm" and self._proc_payload is not None:
+            self.transport = "shm"
+            self._shm_spec = (pipe.slab_slot_bytes, pipe.slab_slots)
+        # slab-pressure knob state (usable-slot cap <= allocated slots)
+        self._slab_cap = self._shm_spec[1] if self._shm_spec else 0
+        if at.enabled and self._shm_spec and "slab_slots" in loader._tuned:
+            self._slab_cap = min(
+                max(loader._tuned["slab_slots"], at.min_slab_slots),
+                self._shm_spec[1],
+            )
+
         self._stop = threading.Event()
         self.decode_q = _BoundedQ(queue_depth, self._stop)
         self.done_q: "queue.Queue" = queue.Queue()
@@ -997,6 +1201,14 @@ class _PipelineIter:
         # slice of the batch and push the composed global array back into
         # done_q as a (_Composed, batch) token (repro.core.delivery)
         self._assembler = None
+        # pinned host staging (repro.core.staging): only meaningful for the
+        # default collate (a custom collate_fn owns its own batch layout)
+        from repro.data.dataset import collate as _default_collate
+
+        staging_n = (
+            pipe.staging_buffers
+            if loader.collate_fn is _default_collate else 0
+        )
         if loader.delivery_plan is not None:
             from repro.core.delivery import ShardedAssembler  # lazy: jax
 
@@ -1006,7 +1218,13 @@ class _PipelineIter:
                 done_q=self.done_q,
                 stop=self._stop,
                 tracer=self.tracer,
+                staging_buffers=staging_n,
             )
+        self._staging = None
+        if staging_n > 0 and self._assembler is None:
+            from repro.core.staging import HostBatchPool
+
+            self._staging = HostBatchPool(depth=staging_n, tracer=self.tracer)
         self.io = _IOStage(
             dataset,
             mode="asyncio" if cfg.impl == "asyncio" else "threaded",
@@ -1070,6 +1288,15 @@ class _PipelineIter:
             # epoch's iterator, and a strong closure would pin an abandoned
             # iterator (and its stage threads) until the next bind().
             _wget, _wset = make_weak_knob_callbacks(self)
+            # slab-pressure knob only when the shm transport is live (the
+            # slab allocation caps how far the controller may raise it)
+            slab_kw: Dict[str, Any] = {}
+            if self._shm_spec is not None:
+                slab_kw = dict(
+                    get_slab=_wget(lambda it: it._slab_cap),
+                    set_slab=_wset(lambda it, n: it._set_slab_slots(n)),
+                    max_slab=self._shm_spec[1],
+                )
             if self._budget:
                 # budget co-tuning: ONE coupled io/cpu split knob (+ the
                 # executor kind when the dataset is process-capable) instead
@@ -1097,6 +1324,7 @@ class _PipelineIter:
                     hedge=loader.hedge,
                     max_outstanding=self._max_outstanding_bound,
                     max_queue=self._max_queue_bound,
+                    **slab_kw,
                 )
             else:
                 knobs = build_pipeline_knobs(
@@ -1114,6 +1342,7 @@ class _PipelineIter:
                     max_cpu=self._max_cpu_bound,
                     max_outstanding=self._max_outstanding_bound,
                     max_queue=self._max_queue_bound,
+                    **slab_kw,
                 )
                 if not self.split:
                     # nothing flows through the CPU stage or its queue —
@@ -1135,11 +1364,15 @@ class _PipelineIter:
         if kind == "process":
             if self._proc_cpu is None:
                 pool = self.loader._cpu_pool
-                if pool is None or pool.hard_cap < self._cpu_hard or pool._closed:
+                if (pool is None or pool.hard_cap < self._cpu_hard
+                        or pool._closed or pool.shm_spec != self._shm_spec):
                     if pool is not None:
                         pool.close()
-                    pool = _CPUProcessPool(self._proc_payload, self._cpu_hard)
+                    pool = _CPUProcessPool(self._proc_payload, self._cpu_hard,
+                                           shm_spec=self._shm_spec)
                     self.loader._cpu_pool = pool
+                if self._shm_spec and self._slab_cap < self._shm_spec[1]:
+                    pool.set_slab_cap(self._slab_cap)
                 self._proc_cpu = _ProcCPUStage(
                     self._proc_payload,
                     pool=pool,
@@ -1234,6 +1467,22 @@ class _PipelineIter:
         applied = self.decode_q.resize(n, self._max_queue_bound)
         self.loader._tuned["stage_queue"] = applied
         return applied
+
+    def _set_slab_slots(self, n: int) -> int:
+        """Slab-pressure knob (shm transport): cap the usable slots per
+        worker slab.  Allocation is fixed at construction (slab_slots), so
+        the cap only gates which slots the worker may hand out — lowering
+        it never touches in-flight slots, it just forces earlier pickle
+        fallback; raising it re-admits parked slots on their next free."""
+        at = self.cfg.autotune
+        hi = self._shm_spec[1] if self._shm_spec else 1
+        n = max(at.min_slab_slots, min(int(n), hi))
+        self._slab_cap = n
+        stage = self._proc_cpu
+        if stage is not None:
+            stage.pool.set_slab_cap(n)
+        self.loader._tuned["slab_slots"] = n
+        return n
 
     # -- dispatch ------------------------------------------------------------
     def _pump(self) -> None:
@@ -1336,7 +1585,16 @@ class _PipelineIter:
             with self.tracer.span(
                 STAGE_COLLATE, batch_id=self._bid_base + self._emitted_batches
             ):
-                batch = self.loader.collate_fn(items)
+                if self._staging is not None:
+                    batch = self._staging.collate(items)
+                else:
+                    batch = self.loader.collate_fn(items)
+            # collate is one full pass over the batch either way (np.stack
+            # allocates+copies; staging copies into a reused buffer)
+            if isinstance(batch, dict):
+                self.tracer.count(BYTES_COPIED, shm_mod.item_nbytes(batch))
+            # collate copied every view out — hand shm slots back for reuse
+            shm_mod.release_items(items)
         self._emitted_batches += 1
         # consumer cursor in absolute batch ids (resume starts past 0), same
         # contract as the legacy iterator's _next_bid bookkeeping
@@ -1426,6 +1684,8 @@ class _PipelineIter:
         }
         if self._budget:
             out["thread_budget"] = self._budget
+        if self._staging is not None:
+            out["staging"] = self._staging.stats()
         if self._proc_cpu is not None:
             pool = self._proc_cpu.pool
             out["cpu_pool"] = {
@@ -1436,6 +1696,34 @@ class _PipelineIter:
             }
             if pool.last_error:
                 out["cpu_pool"]["last_error"] = pool.last_error
+            stage = self._proc_cpu
+            samples = stage.shm_samples + stage.pipe_samples
+            tr: Dict[str, Any] = {
+                "kind": self.transport,
+                "shm_samples": stage.shm_samples,
+                "pipe_samples": stage.pipe_samples,
+                "fallbacks": dict(stage.fallbacks),
+                "fallback_rate": (
+                    round(sum(stage.fallbacks.values()) / samples, 4)
+                    if samples else 0.0
+                ),
+                "bytes_copied": stage.bytes_copied,
+            }
+            if pool.shm_spec is not None:
+                slot_bytes, slots = pool.shm_spec
+                live = [w.slab for w in pool.workers if w.slab is not None]
+                in_use = sum(s.in_use for s in live)
+                peak = max((s.peak for s in live), default=0)
+                total = slots * max(len(live), 1)
+                tr.update(
+                    slot_bytes=slot_bytes,
+                    slab_slots=slots,
+                    slab_cap=self._slab_cap,
+                    slots_in_use=in_use,
+                    slots_peak_per_worker=peak,
+                    occupancy=round(in_use / total, 4) if total else 0.0,
+                )
+            out["transport"] = tr
         hedge = self.io.hedge
         if hedge is not None:
             out["hedges_issued"] = hedge.hedges_issued

@@ -9,6 +9,12 @@ materializes its addressable shards) while the current step runs.  Records
 the in-flight window is gated by an :class:`AdjustableSemaphore` rather than
 the queue's fixed ``maxsize``, so deepening the ring takes effect immediately
 and shrinking drains naturally as the consumer pulls batches.
+
+Zero-copy extensions (PR 7): batches collated into pooled staging buffers
+(:mod:`repro.core.staging`) are released back to their pool the moment the
+transfer lands, and ``ingest_fn`` runs a jitted on-device epilogue (the
+fused ``kernels/ingest_norm`` cast+normalize) right after the put — raw
+uint8 crosses the bus, the f32 batch is born on device.
 """
 from __future__ import annotations
 
@@ -41,6 +47,7 @@ class DevicePrefetchRing:
         sharding: Optional[Any] = None,
         transfer: bool = True,
         tracer: Tracer = NULL_TRACER,
+        ingest_fn: Optional[Any] = None,
     ) -> None:
         self.it = it
         depth = max(1, depth)
@@ -54,6 +61,9 @@ class DevicePrefetchRing:
         # device_put here would gather the global array back to one device
         self.transfer = transfer
         self.tracer = tracer
+        # on-device ingest epilogue: a jitted batch -> batch callable (see
+        # repro.kernels.ingest_norm.make_ingest_fn) applied after the put
+        self.ingest_fn = ingest_fn
         self._slots = AdjustableSemaphore(depth)
         self._q: "queue.Queue" = queue.Queue()  # window bounded by _slots
         self._stop = threading.Event()
@@ -72,22 +82,39 @@ class DevicePrefetchRing:
 
     def _put_device(self, batch: Any) -> Any:
         if not self.transfer:
+            if self.ingest_fn is not None:
+                batch = self.ingest_fn(batch)
             return batch
+        # dict SUBCLASSES (StagedBatch, ShmItem) are leaves to jax.tree —
+        # transfer a plain-dict view so device_put sees the arrays; `batch`
+        # keeps the staged identity for the release below
+        host = dict(batch) if isinstance(batch, dict) and type(batch) is not dict else batch
         with self.tracer.span(BATCH_TO_DEVICE):
             if callable(self.sharding):
                 dev = jax.tree.map(
-                    lambda x: jax.device_put(x, self.sharding(x)), batch
+                    lambda x: jax.device_put(x, self.sharding(x)), host
                 )
             elif self.sharding is not None:
-                dev = jax.tree.map(lambda x: jax.device_put(x, self.sharding), batch)
+                dev = jax.tree.map(lambda x: jax.device_put(x, self.sharding), host)
             else:
-                dev = jax.tree.map(jax.device_put, batch)
+                dev = jax.tree.map(jax.device_put, host)
             # block until the transfer lands so the span is honest
             jax.tree.map(
                 lambda x: x.block_until_ready() if hasattr(x, "block_until_ready") else x,
                 dev,
             )
-            return dev
+        # the host bytes are on device: a staged batch's pooled buffers are
+        # reusable from here — unless the backend's device_put was zero-copy
+        # (XLA CPU), which release_after detects and detaches instead
+        release = getattr(batch, "release_after", None)
+        if callable(release):
+            release(dev)
+        if self.ingest_fn is not None:
+            # fused on-device epilogue (cast + scale + mean/std): runs async
+            # on the accelerator stream; the training step's own data
+            # dependency orders it, so no blocking here
+            dev = self.ingest_fn(dev)
+        return dev
 
     def _acquire_slot(self) -> bool:
         """Wait for a free ring slot, polling the stop flag."""

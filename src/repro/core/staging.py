@@ -1,0 +1,211 @@
+"""Pinned host staging: collate straight into reusable page-aligned buffers.
+
+The default collate (``np.stack`` per key) allocates a fresh batch-sized
+array every step and copies every item into it; the allocation churn and the
+cold pages both tax the host->device transfer that immediately follows.
+:class:`HostBatchPool` keeps a small pool of page-aligned host buffers, one
+set per batch layout, and assembles each batch row-by-row directly into a
+leased buffer — same single copy collate always paid, but into warm,
+aligned, reused memory that ``device_put`` can DMA from without the
+allocator in the loop.
+
+Lifecycle: :meth:`HostBatchPool.collate` leases a buffer set and returns a
+:class:`StagedBatch` (a plain dict of numpy arrays to every consumer);
+whoever finishes the H2D transfer calls :meth:`StagedBatch.release_after`
+with the device-side result (the
+:class:`~repro.core.prefetch.DevicePrefetchRing` does this after
+``block_until_ready``).  A batch that is never explicitly released is
+recycled by GC (``weakref.finalize``), so forgetting the release costs
+reuse, never correctness.  Leases beyond ``depth`` allocate ephemeral
+buffers that are dropped instead of pooled — the pool bounds memory, not
+concurrency.
+
+One sharp edge makes ``release_after`` (not plain ``release``) the right
+call at transfer time: XLA's CPU backend takes a ZERO-COPY ``device_put``
+path for well-aligned host buffers, so the "device" array may alias the
+staging buffer itself — recycling it would corrupt a batch still in
+flight.  ``release_after`` compares buffer pointers and quietly *detaches*
+(drops, never pools) any lease the backend aliased; on TPU/GPU, where H2D
+is a real copy, every lease recycles as usual.
+"""
+from __future__ import annotations
+
+import threading
+import weakref
+from typing import Any, Dict, List, Mapping, Sequence, Tuple
+
+import numpy as np
+
+PAGE = 4096  # page alignment for the DMA-friendly buffers
+
+# layout signature: per key (dtype_str, per-item shape); a pool bucket holds
+# buffer sets for exactly one (signature, batch_size) pair
+_Sig = Tuple[Tuple[str, str, Tuple[int, ...]], ...]
+
+
+def _aligned_empty(shape: Tuple[int, ...], dtype: np.dtype) -> np.ndarray:
+    """A C-contiguous array whose data pointer is PAGE-aligned."""
+    nbytes = int(np.prod(shape, dtype=np.int64)) * dtype.itemsize
+    raw = np.empty(nbytes + PAGE, dtype=np.uint8)
+    off = (-raw.ctypes.data) % PAGE
+    return raw[off:off + nbytes].view(dtype).reshape(shape)
+
+
+def _device_ptrs(leaf) -> List[int]:
+    """Host-memory addresses a jax array's buffers occupy (duck-typed: no
+    jax import; empty for plain numpy / non-addressable arrays)."""
+    ptr = getattr(leaf, "unsafe_buffer_pointer", None)
+    if ptr is not None:
+        try:
+            return [ptr()]
+        except Exception:  # multi-shard arrays raise; fall through
+            pass
+    out: List[int] = []
+    for sh in getattr(leaf, "addressable_shards", None) or []:
+        ptr = getattr(sh.data, "unsafe_buffer_pointer", None)
+        if ptr is not None:
+            try:
+                out.append(ptr())
+            except Exception:
+                pass
+    return out
+
+
+def buffers_aliased(dev: Any, bufs: Dict[str, np.ndarray]) -> bool:
+    """Whether any device-side array in ``dev`` (a dict/sequence of jax
+    arrays) points into one of the staging buffers ``bufs`` — i.e. the
+    backend's ``device_put`` was zero-copy and the buffers are still live."""
+    spans = [(a.ctypes.data, a.ctypes.data + a.nbytes)
+             for a in bufs.values() if a.nbytes]
+    leaves = dev.values() if hasattr(dev, "values") else dev
+    for leaf in leaves:
+        for p in _device_ptrs(leaf):
+            if any(lo <= p < hi for lo, hi in spans):
+                return True
+    return False
+
+
+class StagedBatch(dict):
+    """A collated batch living in pooled buffers.  Behaves exactly like the
+    dict ``np.stack``-collate produces; ``release()`` recycles the buffers
+    (idempotent — double release and GC-release never double-pool), and
+    ``release_after(dev)`` is the transfer-time variant that detaches
+    instead when the backend aliased the buffers (see module docstring)."""
+
+    __slots__ = ("_pool", "_key", "_bufs", "_released", "_finalizer",
+                 "_pooled_lease", "__weakref__")
+
+    def __init__(self, values: Dict[str, np.ndarray], pool: "HostBatchPool",
+                 key, bufs: Dict[str, np.ndarray],
+                 pooled: bool = True) -> None:
+        super().__init__(values)
+        self._pool = pool
+        self._key = key
+        self._bufs = bufs
+        self._pooled_lease = pooled
+        self._released = False
+        # GC fallback: the finalizer holds (pool, key, bufs) — NOT the batch
+        # — so an unreleased batch returns its buffers when collected
+        self._finalizer = weakref.finalize(self, pool._give_back, key, bufs)
+
+    def release(self) -> None:
+        if not self._released:
+            self._released = True
+            self._finalizer.detach()
+            self._pool._give_back(self._key, self._bufs)
+
+    def detach(self) -> None:
+        """Permanently drop this lease: the buffers are still referenced
+        outside the pool (zero-copy device_put) and must never be reused."""
+        if not self._released:
+            self._released = True
+            self._finalizer.detach()
+            self._pool._drop(self._key, self._pooled_lease)
+
+    def release_after(self, dev: Any) -> None:
+        """Recycle after a finished transfer whose result is ``dev`` —
+        unless the backend aliased our buffers, in which case detach."""
+        if buffers_aliased(dev, self._bufs):
+            self.detach()
+        else:
+            self.release()
+
+
+class HostBatchPool:
+    """Pool of reusable page-aligned host buffer sets, bucketed by batch
+    layout.  ``collate(items)`` is a drop-in for the default np.stack
+    collate (scalar values become stacked 1-D arrays, arrays gain a leading
+    batch dim) whose output buffers are leased from the pool."""
+
+    def __init__(self, depth: int = 2, tracer: Any = None) -> None:
+        self.depth = max(1, int(depth))
+        self._lock = threading.Lock()
+        self._free: Dict[Any, List[Dict[str, np.ndarray]]] = {}
+        self._pooled: Dict[Any, int] = {}  # buffer sets alive per bucket
+        self.leases = 0
+        self.reuses = 0
+        self.allocs = 0
+        self.ephemeral = 0  # leases served past depth (not pooled on return)
+        self.detached = 0  # leases dropped because device_put aliased them
+
+    # -- pool plumbing -------------------------------------------------------
+    def _lease(self, key, arrays: Sequence[Tuple[str, np.ndarray]],
+               n: int) -> Tuple[Dict[str, np.ndarray], bool]:
+        with self._lock:
+            self.leases += 1
+            bucket = self._free.get(key)
+            if bucket:
+                self.reuses += 1
+                return bucket.pop(), True
+            pooled = self._pooled.get(key, 0) < self.depth
+            if pooled:
+                self._pooled[key] = self._pooled.get(key, 0) + 1
+                self.allocs += 1
+            else:
+                self.ephemeral += 1
+        bufs = {
+            name: _aligned_empty((n,) + a.shape, a.dtype)
+            for name, a in arrays
+        }
+        return bufs, pooled
+
+    def _give_back(self, key, bufs: Dict[str, np.ndarray]) -> None:
+        with self._lock:
+            bucket = self._free.setdefault(key, [])
+            if len(bucket) < self.depth:
+                bucket.append(bufs)
+            # else: an ephemeral (past-depth) set — let GC take it
+
+    def _drop(self, key, pooled: bool) -> None:
+        """A lease detached (its buffers escaped into a zero-copy device
+        array): forget it so a future lease may allocate a fresh pooled set."""
+        with self._lock:
+            self.detached += 1
+            if pooled and self._pooled.get(key, 0) > 0:
+                self._pooled[key] -= 1
+
+    # -- the collate ---------------------------------------------------------
+    def collate(self, items: Sequence[Mapping[str, Any]]) -> StagedBatch:
+        first = items[0]
+        arrays = [(k, np.asarray(first[k])) for k in first]
+        n = len(items)
+        key = (n,) + tuple((k, a.dtype.str, a.shape) for k, a in arrays)
+        bufs, pooled = self._lease(key, arrays, n)
+        for name, a0 in arrays:
+            out = bufs[name]
+            out[0] = a0
+            for i in range(1, n):
+                out[i] = np.asarray(items[i][name])
+        return StagedBatch(dict(bufs), self, key, bufs, pooled)
+
+    def stats(self) -> Dict[str, Any]:
+        with self._lock:
+            return {
+                "depth": self.depth,
+                "buckets": len(self._pooled),
+                "leases": self.leases,
+                "reuses": self.reuses,
+                "allocs": self.allocs,
+                "ephemeral": self.ephemeral,
+                "detached": self.detached,
+            }

@@ -38,6 +38,10 @@ STAGE_COLLATE = "stage_collate"
 LANE_COLLATE = "lane_collate"
 LANE_H2D = "lane_h2d"
 STAGE_COMPOSE = "stage_compose"
+# monotonic counter (not a span lane): host bytes physically copied on a
+# sample's way from decode to device — the zero-copy transport's figure of
+# merit (bench_shm divides it by samples drained to get bytes/sample)
+BYTES_COPIED = "bytes_copied"
 
 
 @dataclass
@@ -61,7 +65,22 @@ class Tracer:
         self._spans: List[Span] = []
         self._max = max_spans
         self._dropped = 0
+        self._counters: Dict[str, float] = {}
         self.t_start = time.monotonic()
+
+    def count(self, name: str, n: float = 1) -> None:
+        """Bump a named monotonic counter (e.g. :data:`BYTES_COPIED`).
+        Unlike spans, counters are unbounded-safe: one float per name."""
+        with self._lock:
+            self._counters[name] = self._counters.get(name, 0.0) + n
+
+    def counter(self, name: str) -> float:
+        with self._lock:
+            return self._counters.get(name, 0.0)
+
+    def counters(self) -> Dict[str, float]:
+        with self._lock:
+            return dict(self._counters)
 
     def record(
         self, name: str, t0: float, t1: float, *,
@@ -132,6 +151,7 @@ class Tracer:
     def clear(self) -> None:
         with self._lock:
             self._spans.clear()
+            self._counters.clear()
             self._dropped = 0
         self.t_start = time.monotonic()
 
@@ -167,6 +187,9 @@ class _NullTracer(Tracer):
         self, name: str, t0: float, t1: float, *,
         tid: Optional[int] = None, **args: Any,
     ) -> None:
+        pass
+
+    def count(self, name: str, n: float = 1) -> None:
         pass
 
 

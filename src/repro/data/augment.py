@@ -61,7 +61,18 @@ def to_tensor_normalize(img: np.ndarray) -> np.ndarray:
     return np.ascontiguousarray(x.transpose(2, 0, 1))
 
 
-def imagenet_transform(img: np.ndarray, rng: np.random.Generator, out_size: int = 224) -> np.ndarray:
+def imagenet_transform_raw(img: np.ndarray, rng: np.random.Generator, out_size: int = 224) -> np.ndarray:
+    """The RNG-consuming half of the transform only: crop + flip, still uint8
+    HWC.  This is where the host stages stop when the cast/normalize/layout
+    tail runs on the accelerator (``kernels/ingest_norm``) — 4x fewer bytes
+    cross every host boundary (shm slot, staging buffer, PCIe/ICI).  Consumes
+    the generator in exactly the same order as :func:`imagenet_transform`, so
+    ``to_tensor_normalize(imagenet_transform_raw(img, rng))`` is bit-identical
+    to the fused host path."""
     img = random_resized_crop(img, rng, out_size)
     img = horizontal_flip(img, rng)
-    return to_tensor_normalize(img)
+    return np.ascontiguousarray(img)
+
+
+def imagenet_transform(img: np.ndarray, rng: np.random.Generator, out_size: int = 224) -> np.ndarray:
+    return to_tensor_normalize(imagenet_transform_raw(img, rng, out_size))

@@ -60,6 +60,7 @@ def build_dataset(cfg, args, tracer):
         return ImageDataset(
             store, args.items, out_size=cfg.image_size, tracer=tracer,
             sim_decode_s_per_mb=0.052,
+            epilogue="device" if getattr(args, "device_ingest", False) else "host",
         )
     seq = args.seq_len
     from repro.data.store import InMemoryStore
@@ -106,6 +107,20 @@ def main() -> int:
                          "releasing C decoders) or 'process' (spawn pool — "
                          "the GIL escape for Python-side decoders; needs a "
                          "picklable split-path dataset)")
+    ap.add_argument("--transport", choices=["pipe", "shm"], default="pipe",
+                    help="process CPU stage result transport: 'pipe' "
+                         "(pickle both ways) or 'shm' (zero-copy shared-"
+                         "memory slabs; only meaningful with "
+                         "--cpu-executor process)")
+    ap.add_argument("--staging-buffers", type=int, default=0,
+                    help="pinned host staging: collate into this many "
+                         "reusable page-aligned buffer sets per consumer "
+                         "(0 = plain np.stack collate)")
+    ap.add_argument("--device-ingest", action="store_true",
+                    help="resnet only: host stages stop at raw uint8 HWC "
+                         "and the fused kernels/ingest_norm epilogue runs "
+                         "cast+normalize on device after H2D (4x fewer "
+                         "host-side bytes per image)")
     ap.add_argument("--delivery", choices=["host", "sharded"], default="host",
                     help="batch delivery: 'host' (one host array, consumer "
                          "re-shards) or 'sharded' (per-mesh-slice assembler "
@@ -170,6 +185,8 @@ def main() -> int:
                 io_workers=args.io_workers,
                 cpu_workers=args.cpu_workers,
                 cpu_executor=args.cpu_executor,
+                transport=args.transport,
+                staging_buffers=args.staging_buffers,
             ),
             delivery=delivery,
             autotune=atcfg,
@@ -198,7 +215,15 @@ def main() -> int:
         callbacks.append(
             CheckpointCallback(manager, args.ckpt_every, loader=loader)
         )
-    trainer = Trainer(step_fn, state, callbacks=callbacks, tracer=tracer)
+    ingest_fn = None
+    if args.device_ingest:
+        if cfg.family != "resnet":
+            raise SystemExit("--device-ingest requires an image (resnet) arch")
+        from repro.kernels.ingest_norm.ops import make_ingest_fn
+
+        ingest_fn = make_ingest_fn()
+    trainer = Trainer(step_fn, state, callbacks=callbacks, tracer=tracer,
+                      ingest_fn=ingest_fn)
 
     start_epoch = 0
     if manager is not None and args.resume and manager.latest_step() is not None:

@@ -93,7 +93,7 @@ class TrainResult:
     history: List[Dict[str, float]] = field(default_factory=list)
 
 
-def _make_ring(loader, depth: int, tracer) -> DevicePrefetchRing:
+def _make_ring(loader, depth: int, tracer, ingest_fn=None) -> DevicePrefetchRing:
     """Build the per-epoch device prefetch ring; when the loader carries an
     autotuner, register the ring's depth as a live knob (sized so it has
     headroom up to the configured bound) and wire the accelerator-utilization
@@ -109,6 +109,9 @@ def _make_ring(loader, depth: int, tracer) -> DevicePrefetchRing:
         # ring then only paces (a device_put would gather them back)
         transfer=not getattr(loader, "delivers_device_batches", False),
         tracer=tracer,
+        # on-device epilogue for epilogue="device" datasets: runs the fused
+        # ingest_norm cast+normalize right after the put, off the host
+        ingest_fn=ingest_fn,
     )
     if auto is not None:
         # iter(loader) above re-bound the loader knobs; the ring knob rides
@@ -143,6 +146,7 @@ class Trainer:
         device_prefetch: int = 2,
         jit: bool = True,
         donate: bool = True,
+        ingest_fn: Optional[Callable] = None,
     ) -> None:
         self.train_step = (
             jax.jit(train_step, donate_argnums=(0,)) if jit and donate
@@ -153,6 +157,9 @@ class Trainer:
         self.callbacks = callbacks or []
         self.tracer = tracer
         self.device_prefetch = device_prefetch
+        # dict -> dict device-side batch epilogue (see
+        # repro.kernels.ingest_norm.ops.make_ingest_fn); None = host epilogue
+        self.ingest_fn = ingest_fn
         self.global_step = 0
 
     def _hook(self, name: str, *args) -> None:
@@ -175,7 +182,8 @@ class Trainer:
             if hasattr(loader, "set_epoch") and epoch != start_epoch:
                 loader.set_epoch(epoch)
             self._hook("on_epoch_start", epoch)
-            ring = _make_ring(loader, self.device_prefetch, self.tracer)
+            ring = _make_ring(loader, self.device_prefetch, self.tracer,
+                              ingest_fn=self.ingest_fn)
             for i, batch in enumerate(ring):
                 self._hook("on_train_batch_start", batch, i)
                 with self.tracer.span(RUN_TRAINING_BATCH, step=self.global_step):
@@ -213,6 +221,7 @@ def raw_train_loop(
     tracer: Tracer = NULL_TRACER,
     device_prefetch: int = 2,
     jit: bool = True,
+    ingest_fn: Optional[Callable] = None,
 ) -> TrainResult:
     """The 'pure Torch' path: no hooks, no callbacks, same jitted step.
     Pass ``jit=False`` when ``train_step`` is already jitted (lets callers
@@ -225,7 +234,7 @@ def raw_train_loop(
     for epoch in range(epochs):
         if hasattr(loader, "set_epoch") and epoch:
             loader.set_epoch(epoch)
-        ring = _make_ring(loader, device_prefetch, tracer)
+        ring = _make_ring(loader, device_prefetch, tracer, ingest_fn=ingest_fn)
         for batch in ring:
             with tracer.span(RUN_TRAINING_BATCH, step=steps):
                 state, m = step_fn(state, batch)
