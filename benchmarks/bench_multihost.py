@@ -274,7 +274,12 @@ def _run_fleet(scale: Scale, coordinated: bool) -> Dict:
 def _coord_off_bit_identical(scale: Scale) -> bool:
     """Single host, coordination absent: the loader + store wired through the
     coord-aware paths with coord OFF must yield the stock stream."""
-    from repro.config import AutotuneConfig, LoaderConfig, StoreConfig
+    from repro.config import (
+        AutotuneConfig,
+        CacheConfig,
+        LoaderConfig,
+        StoreConfig,
+    )
     from repro.core.loader import ConcurrentDataLoader
     from repro.data.dataset import ImageDataset
     from repro.data.imagenet_synth import SyntheticImageStore
@@ -287,8 +292,11 @@ def _coord_off_bit_identical(scale: Scale) -> bool:
         try:
             base = SyntheticImageStore(n, seed=0, avg_kb=8)
             cfg = StoreConfig(
-                kind="memory", cache_dir=tmp, disk_cache_bytes=1 << 22,
-                cache_coord="",  # off — must take the legacy code path
+                kind="memory",
+                cache=CacheConfig(
+                    dir=tmp, disk_bytes=1 << 22,
+                    coord="",  # off — must take the legacy code path
+                ),
             )
             store = build_store(cfg, base=base)
             ds = ImageDataset(store, n, out_size=16)

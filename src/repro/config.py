@@ -166,6 +166,39 @@ SHAPES: Mapping[str, ShapeConfig] = {
 
 
 @dataclass(frozen=True)
+class CacheConfig:
+    """Cache-tier block of a :class:`StoreConfig` (paper §2.4; Varnish
+    analogue).  When both ``memory_bytes`` and ``dir`` are set, build_store
+    assembles one two-tier TieredCacheStore (memory LRU over bounded disk)
+    instead of nesting single-tier caches."""
+
+    memory_bytes: int = 0  # memory tier capacity; 0 = no memory tier
+    dir: str = ""  # disk tier directory; "" = no disk tier
+    disk_bytes: int = 0  # disk tier capacity; 0 = unbounded (legacy)
+    # memory-tier lock striping.  Default 1 = exact global LRU with items
+    # cacheable up to the full capacity (the legacy CachedStore semantics).
+    # Raising it trades strict LRU for less lock contention AND caps the
+    # largest cacheable item at memory_bytes // shards — opt in only
+    # when single objects are far smaller than the memory budget.
+    shards: int = 1
+    # disk-tier admission: admit-all | size-threshold | second-hit | tinylfu
+    admission: str = "admit-all"
+    admission_max_item_bytes: int = 1 << 20  # size-threshold policy cutoff
+    # multi-host disk-tier coordination (repro.core.coord) when several
+    # processes/hosts point ``dir`` at one shared directory:
+    #   ""        — off: in-process accounting only (single-host, the default)
+    #   "journal" — shared accounting: one fcntl-locked byte journal under
+    #               dir/.coord bounds the tier across all writers
+    #   "shard"   — partitioned keyspace: this host only caches keys where
+    #               host_shard(key, n_hosts) == host_id (capacity is per-host)
+    #               but opportunistically reads peers' entries off the shared
+    #               disk
+    coord: str = ""
+    coord_host_id: int = 0
+    coord_num_hosts: int = 1
+
+
+@dataclass(frozen=True)
 class StoreConfig:
     kind: str = "s3sim"  # memory | localfs | s3sim | synth
     root: str = ""  # for localfs
@@ -183,33 +216,90 @@ class StoreConfig:
     # — the queueing/bufferbloat tail real links exhibit.  0 = off (the
     # legacy monotone model, where extra concurrency never hurts).
     overload_penalty: float = 0.0
-    # caching layer (paper §2.4; Varnish analogue).  When both cache_bytes
-    # and cache_dir are set, build_store assembles one two-tier
-    # TieredCacheStore (memory LRU over bounded disk) instead of nesting.
-    cache_bytes: int = 0  # memory tier capacity; 0 = no memory tier
-    cache_dir: str = ""  # disk tier directory; "" = no disk tier
-    disk_cache_bytes: int = 0  # disk tier capacity; 0 = unbounded (legacy)
-    # memory-tier lock striping.  Default 1 = exact global LRU with items
-    # cacheable up to the full capacity (the legacy CachedStore semantics).
-    # Raising it trades strict LRU for less lock contention AND caps the
-    # largest cacheable item at cache_bytes // cache_shards — opt in only
-    # when single objects are far smaller than the memory budget.
-    cache_shards: int = 1
-    # disk-tier admission: admit-all | size-threshold | second-hit | tinylfu
-    cache_admission: str = "admit-all"
-    admission_max_item_bytes: int = 1 << 20  # size-threshold policy cutoff
-    # multi-host disk-tier coordination (repro.core.coord) when several
-    # processes/hosts point cache_dir at one shared directory:
-    #   ""        — off: in-process accounting only (single-host, the default)
-    #   "journal" — shared accounting: one fcntl-locked byte journal under
-    #               cache_dir/.coord bounds the tier across all writers
-    #   "shard"   — partitioned keyspace: this host only caches keys where
-    #               host_shard(key, n_hosts) == host_id (capacity is per-host)
-    #               but opportunistically reads peers' entries off the shared
-    #               disk
-    cache_coord: str = ""
-    cache_coord_host_id: int = 0
-    cache_coord_num_hosts: int = 1
+    # cache tiers (see CacheConfig).  The historical flat ``cache_*`` kwargs
+    # still construct the nested form through a deprecation shim; reads of
+    # the old flat names delegate below.
+    cache: CacheConfig = CacheConfig()
+
+    # -- legacy flat reads (the write path is shimmed in __init__) ----------
+    @property
+    def cache_bytes(self) -> int:
+        return self.cache.memory_bytes
+
+    @property
+    def cache_dir(self) -> str:
+        return self.cache.dir
+
+    @property
+    def disk_cache_bytes(self) -> int:
+        return self.cache.disk_bytes
+
+    @property
+    def cache_shards(self) -> int:
+        return self.cache.shards
+
+    @property
+    def cache_admission(self) -> str:
+        return self.cache.admission
+
+    @property
+    def admission_max_item_bytes(self) -> int:
+        return self.cache.admission_max_item_bytes
+
+    @property
+    def cache_coord(self) -> str:
+        return self.cache.coord
+
+    @property
+    def cache_coord_host_id(self) -> int:
+        return self.cache.coord_host_id
+
+    @property
+    def cache_coord_num_hosts(self) -> int:
+        return self.cache.coord_num_hosts
+
+
+# Deprecation shim: StoreConfig grew 9 flat cache fields over PRs 2-3; they
+# now live in CacheConfig.  Old call sites keep working — each flat kwarg
+# warns once and is folded into the nested sub-config — and
+# ``dataclasses.replace`` passes the nested field straight through, so the
+# shim never re-fires on derived configs.  Migration note in README
+# ("Online serving read path").
+_LEGACY_CACHE_KWARGS = {
+    "cache_bytes": "memory_bytes",
+    "cache_dir": "dir",
+    "disk_cache_bytes": "disk_bytes",
+    "cache_shards": "shards",
+    "cache_admission": "admission",
+    "admission_max_item_bytes": "admission_max_item_bytes",
+    "cache_coord": "coord",
+    "cache_coord_host_id": "coord_host_id",
+    "cache_coord_num_hosts": "coord_num_hosts",
+}
+
+_store_config_init = StoreConfig.__init__
+
+
+@functools.wraps(_store_config_init)
+def _store_config_shim_init(self, *args: Any, **kwargs: Any) -> None:
+    legacy = {}
+    for flat, nested in _LEGACY_CACHE_KWARGS.items():
+        if flat in kwargs:
+            warnings.warn(
+                f"StoreConfig({flat}=...) is deprecated and will be removed;"
+                f" pass cache=CacheConfig({nested}=...) instead",
+                DeprecationWarning, stacklevel=2,
+            )
+            legacy[nested] = kwargs.pop(flat)
+    if legacy:
+        cache = kwargs.get("cache")
+        kwargs["cache"] = replace(
+            cache if cache is not None else CacheConfig(), **legacy
+        )
+    _store_config_init(self, *args, **kwargs)
+
+
+StoreConfig.__init__ = _store_config_shim_init  # type: ignore[method-assign]
 
 
 @dataclass(frozen=True)
@@ -335,6 +425,26 @@ class AutotuneConfig:
     # as a binary knob so the controller can buy the GIL escape only when the
     # decode actually holds the GIL.
     tune_cpu_executor: bool = True
+    # -- objective ----------------------------------------------------------
+    # "throughput" (default): score = windowed items/s (training loaders).
+    # "latency": score = latency_target_s / windowed latency_quantile — the
+    # serving read path feeds per-request latencies via on_request() and the
+    # same hill climber MINIMIZES the tail by maximizing the inverted score.
+    objective: str = "throughput"
+    latency_target_s: float = 0.5  # the SLO target the p-quantile is scored against
+    latency_quantile: float = 0.99
+    # serve read-path knob bounds (objective="latency"): SLO hedge delay and
+    # the single-flight coalesce result-hold window, in milliseconds.
+    min_hedge_delay_ms: int = 1
+    max_hedge_delay_ms: int = 5_000
+    min_coalesce_ms: int = 1
+    max_coalesce_ms: int = 5_000
+    # sharded-delivery lane-skew gate: when stage_stats()["delivery"] reports
+    # lane_skew (max-min composed batches across lanes) at or above this many
+    # batches, upward probes are skipped — widening a pipeline whose lanes
+    # already diverge just deepens the straggler imbalance; only downward
+    # refinement runs until the lanes re-converge.  0 disables the gate.
+    skew_gate: int = 0
 
 
 @dataclass(frozen=True)
@@ -539,6 +649,63 @@ LoaderConfig.__init__ = _loader_config_shim_init  # type: ignore[method-assign]
 
 
 @dataclass(frozen=True)
+class TenantPolicy:
+    """Per-tenant admission/fairness policy on the serving read path.
+
+    Budgets meter the *shared* tiers: bytes served from the disk tier or
+    fetched from origin debit the tenant's token bucket (memory-tier hits are
+    free — they contend on nothing).  A tenant over budget blocks before
+    issuing backend I/O until the bucket refills, so one hot tenant cannot
+    starve the rest of disk/NIC service.  ``tenant="*"`` is the default
+    policy for tenants without an explicit entry."""
+
+    tenant: str = "*"
+    rate_bytes_per_s: float = 0.0  # sustained budget; 0 = unmetered
+    burst_bytes: int = 0  # bucket depth; 0 derives one second of rate
+    max_inflight: int = 0  # concurrent backend fetches; 0 = unlimited
+
+
+@dataclass(frozen=True)
+class ServeSpec:
+    """Online-serving surface (repro.serve): inference engine slots plus the
+    multi-tenant read path (single-flight coalescing, tenant fairness, SLO
+    hedging — see README "Online serving read path").
+
+    The historical flat ``ServeEngine(cfg, params, num_slots=..., max_len=...)``
+    kwargs still work through a warn-once deprecation shim; new call sites
+    pass ``spec=ServeSpec(...)`` and ``replace()`` derives variants silently.
+    """
+
+    # -- engine (continuous-batching slots) ---------------------------------
+    num_slots: int = 4
+    max_len: int = 512
+    # -- read path ----------------------------------------------------------
+    # single-flight coalescing: concurrent misses on one key share a single
+    # backend fetch, and the completed result is held for this window so
+    # bursts arriving just after completion still coalesce.  0 disables
+    # coalescing entirely (every miss fetches — the uncoalesced baseline).
+    coalesce_window_s: float = 0.05
+    # hedged reads: "off" | "fixed" (constant hedge_delay_s) | "slo" (delay
+    # derived from the live latency distribution vs slo_p99_s: fire the
+    # duplicate at max(hedge_min_s, slo_p99_s - p50) so it can still finish
+    # inside the SLO).
+    hedge: str = "off"
+    hedge_delay_s: float = 0.1  # "fixed" mode delay
+    hedge_min_s: float = 0.005  # floor under the derived "slo" delay
+    slo_p99_s: float = 0.5  # tail-latency objective the path is tuned against
+    hedge_budget_fraction: float = 0.05  # max hedges per request, sustained
+    # global backend concurrency cap (leader + hedge fetches)
+    max_inflight: int = 64
+    # per-tenant fairness policies; ("*" entry = default for unlisted tenants)
+    tenants: Tuple[TenantPolicy, ...] = ()
+    # latency-objective closed-loop control (AutotuneConfig.objective must be
+    # "latency" when enabled here): tunes hedge delay, coalesce window, and —
+    # when the store stack has a TieredCacheStore — the cache knobs against
+    # the p99 target.
+    autotune: AutotuneConfig = AutotuneConfig()
+
+
+@dataclass(frozen=True)
 class TrainConfig:
     optimizer: str = "adamw"  # adamw | adafactor | sgd
     learning_rate: float = 1e-3
@@ -583,12 +750,14 @@ class RunConfig:
     store: StoreConfig = StoreConfig()
     train: TrainConfig = TrainConfig()
     mesh: MeshConfig = SINGLE_POD_MESH
+    serve: ServeSpec = ServeSpec()
 
 
 # public surface (tests/test_api_surface.py pins names + signatures)
 __all__ = [
     "AttentionConfig",
     "AutotuneConfig",
+    "CacheConfig",
     "DeliverySpec",
     "LoaderConfig",
     "MeshConfig",
@@ -597,9 +766,11 @@ __all__ = [
     "PipelineConfig",
     "RunConfig",
     "RWKVConfig",
+    "ServeSpec",
     "ShapeConfig",
     "SSMConfig",
     "StoreConfig",
+    "TenantPolicy",
     "TrainConfig",
     "arch_shapes",
     "get_arch",

@@ -2,14 +2,17 @@
 
 Documented construction surface (tests/test_api_surface.py pins it):
 :func:`make_loader` is the factory that wires config, dataset, mesh and
-delivery together; :class:`ConcurrentDataLoader` remains available for
-callers that want the raw constructor.
+delivery together, :func:`make_read_path` is its serving mirror (a
+:class:`repro.serve.readpath.ReadPath` over a store), and
+:class:`ConcurrentDataLoader` remains available for callers that want the
+raw constructor.
 """
-from repro.core.factory import make_loader
+from repro.core.factory import make_loader, make_read_path
 from repro.core.loader import ConcurrentDataLoader, LoaderTimeout
 
 __all__ = [
     "ConcurrentDataLoader",
     "LoaderTimeout",
     "make_loader",
+    "make_read_path",
 ]

@@ -110,6 +110,7 @@ class TuneEvent:
     batch: int
     action: str  # probe | accept | revert | hold | restore | quiesce | rearm
     #             | reprobe | gate | lease (up-move skipped: peer holds token)
+    #             | skew (up-move skipped: delivery lanes diverged)
     knob: str
     value: int
     tput: float
@@ -135,7 +136,13 @@ class AutotuneController:
         store_stats_fn: Optional[Callable[[], Any]] = None,
         util_fn: Optional[Callable[[], Optional[float]]] = None,
         probe_lease: Optional[Any] = None,
+        skew_fn: Optional[Callable[[], Optional[float]]] = None,
     ) -> None:
+        if cfg.objective not in ("throughput", "latency"):
+            raise ValueError(
+                f"unknown autotune objective {cfg.objective!r};"
+                " known: 'throughput', 'latency'"
+            )
         self.cfg = cfg
         self.knobs = list(knobs)
         self.tracer = tracer
@@ -148,6 +155,14 @@ class AutotuneController:
         # the Trainer so the controller stops buying loader throughput the
         # training step can't eat (see cfg.util_gate)
         self.util_fn = util_fn
+        # sharded-delivery lane-skew signal (None = no signal): when the
+        # lanes' composed-batch counts diverge past cfg.skew_gate, upward
+        # probes are skipped — widening a pipeline whose lanes already
+        # diverge deepens the straggler imbalance (see _start_probe)
+        self.skew_fn = skew_fn
+        # latency-objective window (on_request): per-request latencies whose
+        # tail quantile is inverted into the hill climber's score
+        self._lat_window: List[float] = []
         # bounded: the reprobe heartbeat keeps appending for the loader's
         # lifetime; consumers only ever need the recent tail
         self.events: Deque[TuneEvent] = deque(maxlen=4096)
@@ -259,6 +274,34 @@ class AutotuneController:
         self._win_batches = 0
         self._win_items = 0
         self._step(tput)
+
+    def on_request(self, latency_s: float, now: Optional[float] = None) -> None:
+        """Account one served request (``objective="latency"``): windows
+        per-request latencies and feeds the unchanged hill climber an
+        inverted tail score — ``latency_target_s / latency_quantile`` — so
+        the same maximizer machinery (probe/judge/hysteresis/quiesce)
+        MINIMIZES the tail against the SLO target.  Size
+        ``interval_batches`` to hold enough requests for the quantile to be
+        meaningful (e.g. >= 200 for a p99)."""
+        t = time.monotonic() if now is None else now
+        self._lat_window.append(latency_s)
+        if self._win_t0 is None:
+            self._win_t0 = t
+            return  # first request only anchors the window clock
+        self._batches += 1
+        self._win_batches += 1
+        if (
+            self._win_batches < self.cfg.interval_batches
+            or t - self._win_t0 < self.cfg.min_window_s
+        ):
+            return
+        lat = sorted(self._lat_window)
+        self._lat_window.clear()
+        q = lat[min(int(len(lat) * self.cfg.latency_quantile), len(lat) - 1)]
+        self._win_t0 = t
+        self._win_batches = 0
+        self._win_items = 0
+        self._step(self.cfg.latency_target_s / max(q, 1e-9))
 
     def diagnostics(self, window_s: float = 5.0) -> Dict[str, Any]:
         """Live signal snapshot (stage latencies + store stats delta)."""
@@ -561,6 +604,7 @@ class AutotuneController:
         if not self.knobs:
             return
         gated = self._util_gated()
+        skewed = self._skew_gated()
         order: List[Knob] = []
         if prefer is not None:
             order.append(prefer)
@@ -570,6 +614,7 @@ class AutotuneController:
             if k is not prefer:
                 order.append(k)
         skipped_for_gate = False
+        skipped_for_skew = False
         skipped_for_lease = False
         for k in order:
             cur = k.get()
@@ -583,6 +628,12 @@ class AutotuneController:
             up_move = k.is_binary or nxt > cur
             if gated and up_move:
                 skipped_for_gate = True
+                continue
+            if skewed and up_move:
+                # delivery lanes have diverged: more width/depth feeds the
+                # fast lanes and deepens the straggler imbalance — only
+                # downward refinement runs until the lanes re-converge
+                skipped_for_skew = True
                 continue
             if up_move and not self._lease_for_up():
                 skipped_for_lease = True
@@ -598,13 +649,16 @@ class AutotuneController:
             self._phase = "settle"
             self._log("probe", k.name, applied, baseline)
             return
-        if skipped_for_gate or skipped_for_lease:
-            # accelerator-bound or a peer holds the up-probe token — not
-            # converged: stay armed and re-check next window instead of
-            # quiescing.  An idle hold of the token (e.g. util-gated right
-            # after an accept) is released so peers can use it.
+        if skipped_for_gate or skipped_for_skew or skipped_for_lease:
+            # accelerator-bound, lane-skewed, or a peer holds the up-probe
+            # token — not converged: stay armed and re-check next window
+            # instead of quiescing.  An idle hold of the token (e.g.
+            # util-gated right after an accept) is released so peers can
+            # use it.
             self._release_lease()
-            self._log("gate" if skipped_for_gate else "lease", "-", 0, baseline)
+            action = ("gate" if skipped_for_gate
+                      else "skew" if skipped_for_skew else "lease")
+            self._log(action, "-", 0, baseline)
             self._phase = "baseline"
             return
         # nothing movable anywhere (e.g. a coarse momentum-accept landed every
@@ -623,6 +677,15 @@ class AutotuneController:
         except Exception:
             return False
         return util is not None and util >= self.cfg.util_gate
+
+    def _skew_gated(self) -> bool:
+        if self.skew_fn is None or self.cfg.skew_gate <= 0:
+            return False
+        try:
+            skew = self.skew_fn()
+        except Exception:
+            return False
+        return skew is not None and skew >= self.cfg.skew_gate
 
 
 def make_weak_knob_callbacks(owner: Any) -> Tuple[Callable, Callable]:
@@ -872,6 +935,39 @@ def build_budget_knobs(
             return int(hedge.enabled)
 
         knobs.append(Knob("hedge", _get_hedge, _set_hedge, 0, 1))
+    return knobs
+
+
+def build_serve_knobs(cfg: AutotuneConfig, path: Any) -> List[Knob]:
+    """Knobs for a ``ReadPath``-shaped object (duck-typed so ``repro.core``
+    never imports ``repro.serve``) under the latency objective: the hedge
+    delay and the single-flight coalesce result-hold window, both in
+    milliseconds.  Each knob is attached only when the spec actually enables
+    its mechanism — a knob over a disabled one is a no-op the controller
+    would waste probe windows on.  Cache knobs (:func:`build_cache_knobs`)
+    ride along separately when the store stack has a tiered cache."""
+    knobs: List[Knob] = []
+    if getattr(path, "hedge_mode", "off") != "off":
+        knobs.append(
+            Knob(
+                name="hedge_delay_ms",
+                get=path.hedge_delay_ms,
+                set=path.set_hedge_delay_ms,
+                lo=cfg.min_hedge_delay_ms,
+                hi=cfg.max_hedge_delay_ms,
+            )
+        )
+    get_coalesce = getattr(path, "coalesce_ms", None)
+    if get_coalesce is not None and get_coalesce() > 0:
+        knobs.append(
+            Knob(
+                name="coalesce_ms",
+                get=path.coalesce_ms,
+                set=path.set_coalesce_ms,
+                lo=cfg.min_coalesce_ms,
+                hi=cfg.max_coalesce_ms,
+            )
+        )
     return knobs
 
 

@@ -15,7 +15,7 @@ from __future__ import annotations
 from dataclasses import replace
 from typing import Any, Callable, Optional
 
-from repro.config import LoaderConfig, RunConfig
+from repro.config import LoaderConfig, RunConfig, ServeSpec
 from repro.core.loader import ConcurrentDataLoader
 from repro.core.tracing import NULL_TRACER, Tracer
 from repro.data.dataset import MapDataset, collate
@@ -79,3 +79,36 @@ def make_loader(
         tracer=tracer,
         worker_startup_cost_s=worker_startup_cost_s,
     )
+
+
+def make_read_path(
+    cfg: Any,
+    store: Any,
+    *,
+    tracer: Tracer = NULL_TRACER,
+) -> Any:
+    """Build a :class:`repro.serve.readpath.ReadPath` from a run or serve
+    config — the serving mirror of :func:`make_loader`.
+
+    * ``cfg`` — a :class:`RunConfig` (its ``serve`` block is used) or a bare
+      :class:`ServeSpec`.
+    * ``store`` — any ``ObjectStore``-shaped store; a
+      :class:`repro.data.cache.TieredCacheStore` additionally gets cache-only
+      hit serving and (with autotune enabled) its cache knobs tuned against
+      the latency target.
+
+    Import stays lazy so ``repro.core`` keeps its jax-free import surface
+    for data-plane-only hosts.
+    """
+    if isinstance(cfg, RunConfig):
+        spec = cfg.serve
+    elif isinstance(cfg, ServeSpec):
+        spec = cfg
+    else:
+        raise TypeError(
+            f"make_read_path expects a RunConfig or ServeSpec, got "
+            f"{type(cfg).__name__}"
+        )
+    from repro.serve.readpath import ReadPath  # lazy: keep core importable alone
+
+    return ReadPath(store, spec, tracer=tracer)

@@ -198,6 +198,22 @@ class ConcurrentDataLoader:
                 owner=f"host{host_id}-pid{os.getpid()}",
                 ttl_s=at.coord_ttl_s,
             )
+        skew_fn = None
+        if at.enabled and at.skew_gate > 0 and cfg.delivery.kind == "sharded":
+            # lane-skew gate: feed the controller the delivery stage's
+            # composed-batch divergence so it stops probing upward while the
+            # lanes are imbalanced.  Weakref: the controller must not pin
+            # the loader (it is owned BY the loader — a strong cycle here
+            # would defer __del__-driven worker shutdown to the gc).
+            _self_ref = weakref.ref(self)
+
+            def skew_fn() -> Optional[float]:
+                loader = _self_ref()
+                if loader is None:
+                    return None
+                delivery = (loader.stage_stats() or {}).get("delivery")
+                return delivery.get("lane_skew") if delivery else None
+
         self.autotuner: Optional[AutotuneController] = (
             AutotuneController(
                 at,
@@ -205,6 +221,7 @@ class ConcurrentDataLoader:
                 tracer=tracer,
                 store_stats_fn=_store_stats_fn(dataset),
                 probe_lease=probe_lease,
+                skew_fn=skew_fn,
             )
             if at.enabled
             else None

@@ -38,6 +38,11 @@ STAGE_COLLATE = "stage_collate"
 LANE_COLLATE = "lane_collate"
 LANE_H2D = "lane_h2d"
 STAGE_COMPOSE = "stage_compose"
+# serving read path (repro.serve.readpath): one span per ReadPath.get,
+# tagged with tenant, serving source (memory | disk | coalesced | fetch),
+# and whether a hedge fired — the trace-replay harness computes its
+# p50/p99/p999 claims over this lane
+SERVE_GET = "serve_get"
 # monotonic counter (not a span lane): host bytes physically copied on a
 # sample's way from decode to device — the zero-copy transport's figure of
 # merit (bench_shm divides it by samples drained to get bytes/sample)

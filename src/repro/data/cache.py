@@ -881,6 +881,27 @@ class TieredCacheStore:
         self._trace(t0, "origin", len(data))
         return data
 
+    def lookup(self, key: str) -> Optional[Tuple[bytes, str]]:
+        """Cache-tier-only probe: ``(data, tier)`` on a memory/disk hit
+        (promoting disk hits exactly like :meth:`get`), ``None`` on a miss —
+        never touches the origin.  The serving read path uses this to decide
+        which requests enter single-flight coalescing / tenant metering:
+        only true misses pay for a backend fetch."""
+        t0 = time.monotonic()
+        if self.memory is not None:
+            data = self.memory.get(key)
+            if data is not None:
+                self._trace(t0, "memory", len(data))
+                return data, "memory"
+        if self.disk is not None:
+            data = self.disk.get(key)
+            if data is not None:
+                if self.memory is not None:
+                    self.memory.put(key, data)
+                self._trace(t0, "disk", len(data))
+                return data, "disk"
+        return None
+
     async def aget(self, key: str) -> bytes:
         """Async-safe GET: memory is O(1) inline, disk I/O runs on the
         default executor, the origin uses its own ``aget``."""

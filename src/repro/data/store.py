@@ -366,46 +366,48 @@ def build_store(cfg: StoreConfig, base: Optional[ObjectStore] = None,
             time_scale=time_scale,
             overload_penalty=cfg.overload_penalty,
         )
-    if cfg.cache_dir and cfg.cache_bytes:
+    cache = cfg.cache
+    if cache.dir and cache.memory_bytes:
         # both tiers configured: a single two-tier store (memory over disk)
         store = TieredCacheStore(
             store,
-            memory=MemoryTierCache(cfg.cache_bytes, shards=cfg.cache_shards),
+            memory=MemoryTierCache(cache.memory_bytes, shards=cache.shards),
             disk=_build_disk_tier(cfg),
-            admission_max_item_bytes=cfg.admission_max_item_bytes,
+            admission_max_item_bytes=cache.admission_max_item_bytes,
         )
-    elif cfg.cache_dir:
+    elif cache.dir:
         store = TieredCacheStore(
             store,
             disk=_build_disk_tier(cfg),
-            admission_max_item_bytes=cfg.admission_max_item_bytes,
+            admission_max_item_bytes=cache.admission_max_item_bytes,
         )
-    elif cfg.cache_bytes:
-        store = CachedStore(store, cfg.cache_bytes)
+    elif cache.memory_bytes:
+        store = CachedStore(store, cache.memory_bytes)
     if tracer is not None and isinstance(store, TieredCacheStore):
         store.tracer = tracer
     return store
 
 
 def _build_disk_tier(cfg: StoreConfig) -> DiskTierCache:
-    """Disk tier per StoreConfig, including the multi-host coordination mode
-    (``cache_coord``): "" = private in-process accounting (single host),
-    "journal" = shared byte journal under ``cache_dir/.coord``, "shard" =
+    """Disk tier per StoreConfig.cache, including the multi-host coordination
+    mode (``coord``): "" = private in-process accounting (single host),
+    "journal" = shared byte journal under ``dir/.coord``, "shard" =
     ``host_shard``-partitioned keyspace (per-host capacity)."""
+    cache = cfg.cache
     journal = None
     shard = None
-    if cfg.cache_coord == "journal":
-        journal = SharedDiskJournal(cfg.cache_dir, cfg.disk_cache_bytes)
-    elif cfg.cache_coord == "shard":
-        shard = (cfg.cache_coord_host_id, cfg.cache_coord_num_hosts)
-    elif cfg.cache_coord:
+    if cache.coord == "journal":
+        journal = SharedDiskJournal(cache.dir, cache.disk_bytes)
+    elif cache.coord == "shard":
+        shard = (cache.coord_host_id, cache.coord_num_hosts)
+    elif cache.coord:
         raise ValueError(
-            f"unknown cache_coord {cfg.cache_coord!r}; known: '', 'journal', 'shard'"
+            f"unknown cache coord {cache.coord!r}; known: '', 'journal', 'shard'"
         )
     return DiskTierCache(
-        cfg.cache_dir,
-        cfg.disk_cache_bytes,
-        make_admission(cfg.cache_admission, cfg.admission_max_item_bytes),
+        cache.dir,
+        cache.disk_bytes,
+        make_admission(cache.admission, cache.admission_max_item_bytes),
         journal=journal,
         shard=shard,
     )

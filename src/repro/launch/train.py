@@ -24,6 +24,7 @@ import numpy as np
 
 from repro.config import (
     AutotuneConfig,
+    CacheConfig,
     DeliverySpec,
     LoaderConfig,
     PipelineConfig,
@@ -52,7 +53,7 @@ def build_dataset(cfg, args, tracer):
     scfg = StoreConfig(
         kind=args.store,
         latency_mean_s=args.latency,
-        cache_bytes=args.cache_mb * 1 << 20,
+        cache=CacheConfig(memory_bytes=args.cache_mb * 1 << 20),
     )
     if cfg.family == "resnet":
         base = build_synthetic_imagenet(num_items=args.items, avg_kb=48.0)

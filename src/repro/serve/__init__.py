@@ -1,1 +1,17 @@
-"""Serving substrate: prefill/decode programs + continuous-batching engine."""
+"""Serving substrate: prefill/decode programs + continuous-batching engine,
+plus the multi-tenant online read path (:mod:`repro.serve.readpath`).
+
+The read path is jax-free and imported eagerly; the engine pulls in jax and
+is resolved lazily so ``from repro.serve import ReadPath`` works on data-only
+hosts (mirrors how ``repro.core`` keeps its factory jax-optional)."""
+from repro.serve.readpath import ReadPath, ReadResult
+
+__all__ = ["ReadPath", "ReadResult", "Request", "ServeEngine"]
+
+
+def __getattr__(name: str):
+    if name in ("ServeEngine", "Request"):
+        from repro.serve import engine
+
+        return getattr(engine, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

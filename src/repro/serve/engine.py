@@ -13,14 +13,15 @@ fetch path, so high-latency storage benefits identically at inference time.
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+import warnings
+from dataclasses import dataclass, field, replace
 from typing import Any, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.config import ModelConfig
+from repro.config import ModelConfig, ServeSpec
 from repro.serve.steps import greedy_sample, make_serve_fns
 
 
@@ -38,27 +39,46 @@ class Request:
 
 
 class ServeEngine:
+    """Engine sizing comes from a :class:`repro.config.ServeSpec`; the
+    historical flat ``num_slots=``/``max_len=`` kwargs still work through a
+    warn-once deprecation shim (``replace()`` on a spec round-trips
+    silently — see README "Online serving read path")."""
+
     def __init__(
         self,
         cfg: ModelConfig,
         params: Any,
         *,
-        num_slots: int = 4,
-        max_len: int = 512,
+        spec: Optional[ServeSpec] = None,
+        num_slots: Optional[int] = None,
+        max_len: Optional[int] = None,
     ) -> None:
+        legacy = {}
+        for name, val in (("num_slots", num_slots), ("max_len", max_len)):
+            if val is not None:
+                warnings.warn(
+                    f"ServeEngine({name}=...) is deprecated and will be"
+                    f" removed; pass spec=ServeSpec({name}=...) instead",
+                    DeprecationWarning, stacklevel=2,
+                )
+                legacy[name] = val
+        spec = spec if spec is not None else ServeSpec()
+        if legacy:
+            spec = replace(spec, **legacy)
         self.cfg = cfg
         self.params = params
-        self.num_slots = num_slots
-        self.max_len = max_len
+        self.spec = spec
+        self.num_slots = spec.num_slots
+        self.max_len = spec.max_len
         fns = make_serve_fns(cfg)
         self._init_cache = fns["init_cache"]
         # slot-0 prefill program (batch 1) + pooled decode program
         self._prefill1 = jax.jit(fns["prefill"])
         self._decode = jax.jit(fns["decode"])
-        self.cache = self._init_cache(num_slots, max_len)
-        self.positions = np.zeros((num_slots,), np.int32)
-        self.last_token = np.zeros((num_slots,), np.int32)
-        self.active: List[Optional[Request]] = [None] * num_slots
+        self.cache = self._init_cache(self.num_slots, self.max_len)
+        self.positions = np.zeros((self.num_slots,), np.int32)
+        self.last_token = np.zeros((self.num_slots,), np.int32)
+        self.active: List[Optional[Request]] = [None] * self.num_slots
         self.queue: List[Request] = []
         self.completed: List[Request] = []
         self._uid = 0

@@ -1,5 +1,6 @@
-"""Public-API snapshot: names and call signatures of ``repro.config`` and
-``repro.core`` pinned against ``tests/data/api_surface.json``.
+"""Public-API snapshot: names and call signatures of ``repro.config``,
+``repro.core`` and ``repro.serve`` pinned against
+``tests/data/api_surface.json``.
 
 A failing diff here means the public surface changed.  If the change is
 intentional (an api-redesign PR), regenerate the snapshot and review the
@@ -13,7 +14,7 @@ import json
 import os
 import re
 
-MODULES = ("repro.config", "repro.core")
+MODULES = ("repro.config", "repro.core", "repro.serve")
 SNAPSHOT = os.path.join(os.path.dirname(__file__), "data", "api_surface.json")
 
 

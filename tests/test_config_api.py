@@ -1,9 +1,19 @@
-"""Nested LoaderConfig (PipelineConfig / DeliverySpec) + deprecation shim."""
+"""Nested LoaderConfig (PipelineConfig / DeliverySpec) and StoreConfig
+(CacheConfig) blocks + their flat-kwarg deprecation shims."""
 import warnings
 
 import pytest
 
-from repro.config import DeliverySpec, LoaderConfig, PipelineConfig, replace
+from repro.config import (
+    CacheConfig,
+    DeliverySpec,
+    LoaderConfig,
+    PipelineConfig,
+    ServeSpec,
+    StoreConfig,
+    TenantPolicy,
+    replace,
+)
 
 
 class TestPipelineConfigNesting:
@@ -105,6 +115,115 @@ class TestDeliverySpec:
         out = subprocess.run(
             [sys.executable, "-c",
              "import sys; import repro.config; import repro.core; "
+             "print('jax' in sys.modules)"],
+            capture_output=True, text=True, env={"PYTHONPATH": "src"},
+        )
+        assert out.returncode == 0, out.stderr
+        assert out.stdout.strip() == "False"
+
+
+class TestCacheConfigNesting:
+    def test_nested_construction_warns_nothing(self):
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")
+            cfg = StoreConfig(cache=CacheConfig(
+                memory_bytes=1 << 20, dir="/tmp/c", disk_bytes=1 << 22,
+                shards=4, admission="second_hit",
+            ))
+        assert cfg.cache.memory_bytes == 1 << 20
+        assert cfg.cache.admission == "second_hit"
+
+    def test_legacy_read_properties_delegate(self):
+        cfg = StoreConfig(cache=CacheConfig(
+            memory_bytes=123, dir="/tmp/c", disk_bytes=456, shards=2,
+            admission="always", admission_max_item_bytes=789,
+            coord="file", coord_host_id=1, coord_num_hosts=4,
+        ))
+        assert cfg.cache_bytes == 123
+        assert cfg.cache_dir == "/tmp/c"
+        assert cfg.disk_cache_bytes == 456
+        assert cfg.cache_shards == 2
+        assert cfg.cache_admission == "always"
+        assert cfg.admission_max_item_bytes == 789
+        assert cfg.cache_coord == "file"
+        assert cfg.cache_coord_host_id == 1
+        assert cfg.cache_coord_num_hosts == 4
+
+    def test_replace_round_trips_without_warning(self):
+        cfg = StoreConfig(cache=CacheConfig(memory_bytes=1 << 20))
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")
+            derived = replace(cfg, kind="memory")
+        assert derived.cache == cfg.cache
+        assert derived.kind == "memory"
+
+    @pytest.mark.parametrize("flat,nested,value", [
+        ("cache_bytes", "memory_bytes", 1 << 20),
+        ("cache_dir", "dir", "/tmp/cache"),
+        ("disk_cache_bytes", "disk_bytes", 1 << 22),
+        ("cache_shards", "shards", 8),
+        ("cache_admission", "admission", "second_hit"),
+        ("admission_max_item_bytes", "admission_max_item_bytes", 4096),
+        ("cache_coord", "coord", "file"),
+        ("cache_coord_host_id", "coord_host_id", 2),
+        ("cache_coord_num_hosts", "coord_num_hosts", 4),
+    ])
+    def test_each_flat_kwarg_warns_once_and_lands_nested(self, flat, nested,
+                                                         value):
+        with pytest.warns(DeprecationWarning, match=flat) as rec:
+            cfg = StoreConfig(**{flat: value})
+        assert sum(issubclass(w.category, DeprecationWarning)
+                   for w in rec) == 1
+        assert getattr(cfg.cache, nested) == value
+
+    def test_flat_equals_nested(self):
+        with pytest.warns(DeprecationWarning):
+            flat = StoreConfig(cache_bytes=1 << 20, cache_dir="/tmp/c",
+                               disk_cache_bytes=1 << 22)
+        nested = StoreConfig(cache=CacheConfig(
+            memory_bytes=1 << 20, dir="/tmp/c", disk_bytes=1 << 22))
+        assert flat == nested
+
+    def test_flat_kwargs_merge_into_given_cache(self):
+        with pytest.warns(DeprecationWarning, match="cache_bytes"):
+            cfg = StoreConfig(
+                cache=CacheConfig(dir="/tmp/c", shards=2),
+                cache_bytes=1 << 20,
+            )
+        assert cfg.cache.memory_bytes == 1 << 20
+        assert cfg.cache.dir == "/tmp/c"
+        assert cfg.cache.shards == 2
+
+
+class TestServeSpec:
+    def test_defaults(self):
+        spec = ServeSpec()
+        assert spec.hedge == "off"
+        assert spec.coalesce_window_s > 0
+        assert spec.tenants == ()
+        assert not spec.autotune.enabled
+
+    def test_tenant_policies_nest_without_warning(self):
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")
+            spec = ServeSpec(
+                hedge="slo", slo_p99_s=0.25,
+                tenants=(TenantPolicy(tenant="hot",
+                                      rate_bytes_per_s=1e6,
+                                      burst_bytes=1 << 20),),
+            )
+            derived = replace(spec, num_slots=8)
+        assert derived.tenants[0].tenant == "hot"
+        assert derived.hedge == "slo"
+        assert derived.num_slots == 8
+
+    def test_serve_module_read_path_does_not_import_jax(self):
+        import subprocess
+        import sys
+
+        out = subprocess.run(
+            [sys.executable, "-c",
+             "import sys; from repro.serve import ReadPath; "
              "print('jax' in sys.modules)"],
             capture_output=True, text=True, env={"PYTHONPATH": "src"},
         )

@@ -3,7 +3,7 @@ import jax.numpy as jnp
 import jax.random as jr
 import pytest
 
-from repro.config import get_arch
+from repro.config import ServeSpec, get_arch
 from repro.models import transformer
 from repro.serve.engine import ServeEngine
 
@@ -35,7 +35,7 @@ def reference_greedy(cfg, params, prompt, n_new):
 def test_engine_matches_reference(setup):
     cfg, params = setup
     prompts = [[5, 7, 11], [1, 2, 3], [9, 9, 9]]
-    eng = ServeEngine(cfg, params, num_slots=2, max_len=64)
+    eng = ServeEngine(cfg, params, spec=ServeSpec(num_slots=2, max_len=64))
     for p in prompts:
         eng.submit(p, max_new_tokens=6)
     done = eng.run_until_drained()
@@ -48,7 +48,7 @@ def test_engine_matches_reference(setup):
 
 def test_continuous_batching_refills_slots(setup):
     cfg, params = setup
-    eng = ServeEngine(cfg, params, num_slots=2, max_len=64)
+    eng = ServeEngine(cfg, params, spec=ServeSpec(num_slots=2, max_len=64))
     # 1 long + 3 short: the short ones must rotate through slot(s) while the
     # long one keeps decoding.
     eng.submit([1, 2, 3], max_new_tokens=20)
@@ -68,7 +68,7 @@ def test_continuous_batching_refills_slots(setup):
 def test_per_slot_positions_are_isolated(setup):
     """Different prompt lengths per slot must not cross-contaminate."""
     cfg, params = setup
-    eng = ServeEngine(cfg, params, num_slots=2, max_len=64)
+    eng = ServeEngine(cfg, params, spec=ServeSpec(num_slots=2, max_len=64))
     pa = [3, 1, 4, 1, 5, 9, 2, 6]  # length 8
     pb = [2, 7]  # length 2
     eng.submit(pa, max_new_tokens=4)
@@ -84,7 +84,7 @@ def test_eos_stops_early(setup):
     cfg, params = setup
     ref = reference_greedy(cfg, params, [5, 7, 11], 8)
     eos = ref[2]  # force an early stop at the 3rd generated token
-    eng = ServeEngine(cfg, params, num_slots=1, max_len=64)
+    eng = ServeEngine(cfg, params, spec=ServeSpec(num_slots=1, max_len=64))
     eng.submit([5, 7, 11], max_new_tokens=8, eos_id=eos)
     done = eng.run_until_drained()
     assert done[0].output == ref[:3]
@@ -93,9 +93,26 @@ def test_eos_stops_early(setup):
 def test_rwkv_family_serving():
     cfg = get_arch("rwkv6-7b", smoke=True)
     params = transformer.init_lm(jr.PRNGKey(0), cfg)
-    eng = ServeEngine(cfg, params, num_slots=2, max_len=32)
+    eng = ServeEngine(cfg, params, spec=ServeSpec(num_slots=2, max_len=32))
     eng.submit([1, 2, 3, 4], max_new_tokens=4)
     eng.submit([5, 6], max_new_tokens=4)
     done = eng.run_until_drained()
     assert len(done) == 2
     assert all(len(r.output) == 4 for r in done)
+
+
+def test_flat_sizing_kwargs_warn_once_and_match_spec(setup):
+    cfg, params = setup
+    with pytest.warns(DeprecationWarning) as rec:
+        legacy = ServeEngine(cfg, params, num_slots=2, max_len=32)
+    assert sum(issubclass(w.category, DeprecationWarning) for w in rec) == 2
+    assert any("num_slots" in str(w.message) for w in rec)
+    assert any("max_len" in str(w.message) for w in rec)
+    nested = ServeEngine(cfg, params, spec=ServeSpec(num_slots=2, max_len=32))
+    assert legacy.spec == nested.spec
+    assert (legacy.num_slots, legacy.max_len) == (2, 32)
+    # flat kwargs override the spec they merge into
+    with pytest.warns(DeprecationWarning, match="max_len"):
+        merged = ServeEngine(cfg, params, spec=ServeSpec(num_slots=2),
+                             max_len=48)
+    assert merged.spec == ServeSpec(num_slots=2, max_len=48)

@@ -198,17 +198,22 @@ def test_logging_callback_cost_is_visible():
     ds = SyntheticTokenDataset(32, 16, cfg.vocab_size)
     lcfg = LoaderConfig(impl="threaded", batch_size=8, num_workers=2)
 
+    # one shared pre-compiled step: Trainer's internal jit would recompile a
+    # fresh closure inside each timed fit(), and that 1-3s of compile is the
+    # dominant per-run noise on a contended CI box
+    step = jax.jit(make_train_step(cfg, tcfg), donate_argnums=(0,))
+
     def run(cost):
         state = init_train_state(cfg, tcfg, jr.PRNGKey(0))
         cb = LoggingCallback(log_every_n_steps=1, cost_s=cost)
-        tr = Trainer(make_train_step(cfg, tcfg), state, callbacks=[cb])
+        tr = Trainer(step, state, callbacks=[cb], jit=False)
         res = tr.fit(ConcurrentDataLoader(ds, lcfg), epochs=1)
         return res.wall_s, cb
 
+    run(0.0)  # warm-up compiles the shared step outside the timed runs
     fast, _ = run(0.0)
     slow, cb = run(0.5)
     # 4 steps x 0.5s of "aggressive logging" = 2s of injected cost; the wide
-    # margin keeps the assertion clear of per-run jit-compile noise (~±0.4s
-    # on a contended 2-core CI box), which made a 0.2s/step version flaky
+    # margin keeps the assertion clear of residual loader/scheduler noise
     assert slow > fast + 1.0
     assert len(cb.lines) == 4
