@@ -29,6 +29,7 @@ BENCHES = [
     "bench_multihost",     # beyond paper: multi-host coordination (coord)
     "bench_sharded",       # beyond paper: device-sharded batch delivery
     "bench_shm",           # beyond paper: zero-copy shm transport + ingest
+    "bench_columnar",      # beyond paper: columnar projection + pushdown
     "bench_serve",         # beyond paper: online-serving read path
     "bench_dataset_pool",  # Fig 12
     "bench_e2e",           # Figs 13/14/15

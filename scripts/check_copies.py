@@ -1,18 +1,25 @@
 #!/usr/bin/env python
-"""Copy-regression gate for the zero-copy loader path.
+"""Byte-regression gates for the zero-copy and columnar loader paths.
 
-``benchmarks/bench_shm`` counts every host-side memcpy the loader performs
-(pickle serialize/deserialize, shm slab writes, collate) and emits a
-deterministic ``bytes_copied_per_sample`` per transport/epilogue cell into
-its BENCH json.  This script compares that report against the committed
-baseline and fails CI when any cell regresses by more than ``--tolerance``
-(default 10%) — a re-introduced copy (an np.stack sneaking back into the
-staging path, a fallback-rate blowup, an f32 tensor crossing a boundary
-that should carry uint8) shows up here as a byte count, not a flaky timing.
+Two deterministic byte counters gate CI here — both are counts, not timings,
+so neither is flaky:
 
-Improvements beyond tolerance pass with a reminder to refresh the baseline:
+* ``bytes_copied_per_sample`` from ``benchmarks/bench_shm`` — every host-side
+  memcpy the loader performs (pickle serialize/deserialize, shm slab writes,
+  collate).  A re-introduced copy (an np.stack sneaking back into the staging
+  path, a fallback-rate blowup, an f32 tensor crossing a boundary that should
+  carry uint8) shows up as a byte count.
+* ``bytes_fetched_per_epoch`` from ``benchmarks/bench_columnar`` — every byte
+  requested from the backend store during a filtered epoch.  A projection or
+  pushdown regression (a field fetched that the transform never declared, a
+  chunk fetched that its statistics should have pruned) shows up the same
+  way.
 
-    PYTHONPATH=src python -m benchmarks.run --only shm --out reports/bench
+Each gate compares its report against a committed baseline and fails CI when
+any cell regresses by more than ``--tolerance`` (default 10%).  Improvements
+beyond tolerance pass with a reminder to refresh the baseline:
+
+    PYTHONPATH=src python -m benchmarks.run --only shm,columnar --out reports/bench
     python scripts/check_copies.py --write-baseline
 
 Stdlib only; no repo imports (usable before an editable install).
@@ -28,41 +35,38 @@ DEFAULT_REPORT = "reports/bench/shm.json"
 DEFAULT_BASELINE = "benchmarks/baselines/copy_baseline.json"
 METRIC = "bytes_copied_per_sample"
 
+FETCHED_REPORT = "reports/bench/columnar.json"
+FETCHED_BASELINE = "benchmarks/baselines/fetched_baseline.json"
+FETCHED_METRIC = "bytes_fetched_per_epoch"
 
-def load_cells(report_path: str) -> dict:
+
+def load_cells(report_path: str, metric: str = METRIC) -> dict:
     with open(report_path) as f:
         report = json.load(f)
     cells = {}
     for row in report.get("rows", []):
-        name, value = row.get("name"), row.get(METRIC)
-        if name is None or value is None:
-            raise SystemExit(f"malformed report row (need name + {METRIC}): {row}")
+        name, value = row.get("name"), row.get(metric)
+        if name is None:
+            raise SystemExit(f"malformed report row (need name): {row}")
+        if value is None:
+            continue  # a row may carry other metrics (entropy, throughput)
         cells[name] = int(value)
     if not cells:
-        raise SystemExit(f"no rows in {report_path}")
+        raise SystemExit(f"no {metric} rows in {report_path}")
     return cells
 
 
-def main() -> int:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--report", default=DEFAULT_REPORT)
-    ap.add_argument("--baseline", default=DEFAULT_BASELINE)
-    ap.add_argument("--tolerance", type=float, default=0.10,
-                    help="allowed fractional regression per cell")
-    ap.add_argument("--write-baseline", action="store_true",
-                    help="refresh the baseline from the report and exit")
-    args = ap.parse_args()
+def write_baseline(baseline_path: str, metric: str, cells: dict) -> None:
+    os.makedirs(os.path.dirname(baseline_path), exist_ok=True)
+    with open(baseline_path, "w") as f:
+        json.dump({"metric": metric, "cells": cells}, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"baseline written: {baseline_path} {cells}")
 
-    cells = load_cells(args.report)
-    if args.write_baseline:
-        os.makedirs(os.path.dirname(args.baseline), exist_ok=True)
-        with open(args.baseline, "w") as f:
-            json.dump({"metric": METRIC, "cells": cells}, f, indent=1, sort_keys=True)
-            f.write("\n")
-        print(f"baseline written: {args.baseline} {cells}")
-        return 0
 
-    with open(args.baseline) as f:
+def check_gate(label: str, cells: dict, baseline_path: str, metric: str,
+               tolerance: float) -> list:
+    with open(baseline_path) as f:
         baseline = json.load(f)["cells"]
 
     failures = []
@@ -71,29 +75,72 @@ def main() -> int:
         if got is None:
             failures.append(f"cell {name!r} missing from report (baseline {base})")
             continue
-        limit = base * (1.0 + args.tolerance)
+        limit = base * (1.0 + tolerance)
         delta = (got - base) / base if base else float("inf")
         status = "FAIL" if got > limit else "ok"
         print(f"  [{status}] {name}: {got} vs baseline {base} ({delta:+.1%})")
         if got > limit:
             failures.append(
-                f"{name}: {METRIC} {got} > {limit:.0f} "
-                f"(baseline {base} + {args.tolerance:.0%})"
+                f"{name}: {metric} {got} > {limit:.0f} "
+                f"(baseline {base} + {tolerance:.0%})"
             )
-        elif got < base * (1.0 - args.tolerance):
+        elif got < base * (1.0 - tolerance):
             print(f"         {name} improved beyond tolerance — consider "
                   f"`python scripts/check_copies.py --write-baseline`")
     extra = set(cells) - set(baseline)
     if extra:
         # a new cell is not a regression, but the baseline should learn it
-        print(f"note: cells not in baseline (add via --write-baseline): "
+        print(f"note: {label} cells not in baseline (add via --write-baseline): "
               f"{sorted(extra)}")
+    return failures
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--report", default=DEFAULT_REPORT)
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE)
+    ap.add_argument("--fetched-report", default=FETCHED_REPORT)
+    ap.add_argument("--fetched-baseline", default=FETCHED_BASELINE)
+    ap.add_argument("--tolerance", type=float, default=0.10,
+                    help="allowed fractional regression per cell")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="refresh the baselines from the reports and exit")
+    args = ap.parse_args()
+
+    # the fetched gate runs whenever its report exists (the bench lane may
+    # produce only one of the two reports, e.g. a shm-only smoke run); in
+    # write mode any missing report is skipped so either baseline can be
+    # refreshed on its own
+    gates = [("copy", args.report, args.baseline, METRIC)]
+    if os.path.exists(args.fetched_report):
+        gates.append(("fetched", args.fetched_report, args.fetched_baseline,
+                      FETCHED_METRIC))
+    elif os.path.exists(args.fetched_baseline):
+        print(f"note: {args.fetched_report} missing — fetched-bytes gate "
+              f"skipped (run `--only columnar` to produce it)")
+    if args.write_baseline:
+        gates = [g for g in gates if os.path.exists(g[1])]
+        if not gates:
+            raise SystemExit(f"no reports to write baselines from "
+                             f"({args.report}, {args.fetched_report})")
+
+    failures = []
+    for label, report, baseline, metric in gates:
+        cells = load_cells(report, metric)
+        if args.write_baseline:
+            write_baseline(baseline, metric, cells)
+            continue
+        print(f"{label}-regression gate ({metric}):")
+        failures += check_gate(label, cells, baseline, metric, args.tolerance)
+
+    if args.write_baseline:
+        return 0
     if failures:
-        print("\ncopy-regression gate FAILED:")
+        print("\nbyte-regression gate FAILED:")
         for f_ in failures:
             print(f"  {f_}")
         return 1
-    print("copy-regression gate passed")
+    print("byte-regression gates passed")
     return 0
 
 

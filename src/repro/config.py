@@ -445,6 +445,16 @@ class AutotuneConfig:
     # already diverge just deepens the straggler imbalance; only downward
     # refinement runs until the lanes re-converge.  0 disables the gate.
     skew_gate: int = 0
+    # shuffle-entropy floor (reorder="window" pipelines): when
+    # stage_stats()["shuffle"] reports within-batch entropy below this value
+    # (normalized 0..1), upward probes of the reorder_window knob are
+    # skipped — a wider window buys throughput by stratifying batches by
+    # completion time, and this floor makes that randomness loss a measured,
+    # gated trade instead of an invisible one.  0.0 disables the gate.
+    min_shuffle_entropy: float = 0.0
+    # reorder_window knob bounds (window-mode pipelines only)
+    min_reorder_window: int = 1
+    max_reorder_window: int = 64
 
 
 @dataclass(frozen=True)
@@ -548,6 +558,52 @@ class DeliverySpec:
                             coord_dir=coord_dir)
 
 
+_PREDICATE_OPS = ("==", "!=", "<", "<=", ">", ">=", "in", "not_in")
+
+
+@dataclass(frozen=True)
+class SamplerPredicate:
+    """Callable-free sampler predicate for columnar pushdown.
+
+    ``clauses`` is an AND-list of ``(field, op, value)`` tuples over a
+    dataset's metadata columns, e.g. ``(("label", "in", (0, 1, 2)),
+    ("length", "<", 65536))``.  Tuples (not callables) keep predicates
+    picklable, checkpointable, and evaluable against chunk statistics —
+    the loader hands them to the dataset's ``predicate_mask`` so rejected
+    rows' bytes are never requested from the store.
+
+    ``schedule`` optionally re-declares the clause list per epoch for
+    curriculum filtering: ``((epoch, clauses), ...)`` — the entry with the
+    largest ``epoch <= current`` wins; before the first entry, ``clauses``
+    applies.  Epoch masks are pure functions of (predicate, epoch), so
+    strict-mode resume cursors replay the identical filtered stream.
+    """
+
+    clauses: Tuple[Tuple[str, str, Any], ...] = ()
+    schedule: Tuple[Tuple[int, Tuple[Tuple[str, str, Any], ...]], ...] = ()
+
+    def __post_init__(self) -> None:
+        for cls in (self.clauses, *(cl for _, cl in self.schedule)):
+            for c in cls:
+                if len(c) != 3 or not isinstance(c[0], str) or c[1] not in _PREDICATE_OPS:
+                    raise ValueError(
+                        f"predicate clause must be (field, op, value) with op "
+                        f"in {_PREDICATE_OPS}, got {c!r}")
+                if callable(c[2]):
+                    raise ValueError(f"predicate values must be data, not "
+                                     f"callables: {c!r}")
+
+    def clauses_for_epoch(self, epoch: int) -> Tuple[Tuple[str, str, Any], ...]:
+        out = self.clauses
+        for e, cls in sorted(self.schedule, key=lambda t: t[0]):
+            if epoch >= e:
+                out = tuple(cls)
+        return out
+
+    def __bool__(self) -> bool:
+        return bool(self.clauses or self.schedule)
+
+
 @dataclass(frozen=True)
 class LoaderConfig:
     impl: str = "threaded"  # vanilla | threaded | asyncio
@@ -575,6 +631,11 @@ class LoaderConfig:
     # batch delivery contract (see DeliverySpec): host-resident batches
     # (default) or device-sharded global arrays assembled per mesh lane
     delivery: DeliverySpec = DeliverySpec()
+    # columnar predicate pushdown (see SamplerPredicate): filters the epoch
+    # stream at the sampler via dataset metadata, so rejected rows are never
+    # fetched.  None = unfiltered.  Requires a dataset with predicate
+    # metadata (repro.data.columnar.ColumnarImageDataset).
+    sampler: Optional[SamplerPredicate] = None
     # online knob control (off by default: behaviour is bit-identical to a
     # statically configured loader when disabled)
     autotune: AutotuneConfig = AutotuneConfig()
@@ -766,6 +827,7 @@ __all__ = [
     "PipelineConfig",
     "RunConfig",
     "RWKVConfig",
+    "SamplerPredicate",
     "ServeSpec",
     "ShapeConfig",
     "SSMConfig",

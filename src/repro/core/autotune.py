@@ -111,6 +111,7 @@ class TuneEvent:
     action: str  # probe | accept | revert | hold | restore | quiesce | rearm
     #             | reprobe | gate | lease (up-move skipped: peer holds token)
     #             | skew (up-move skipped: delivery lanes diverged)
+    #             | entropy (reorder-window up-move skipped: shuffle floor)
     knob: str
     value: int
     tput: float
@@ -137,6 +138,7 @@ class AutotuneController:
         util_fn: Optional[Callable[[], Optional[float]]] = None,
         probe_lease: Optional[Any] = None,
         skew_fn: Optional[Callable[[], Optional[float]]] = None,
+        entropy_fn: Optional[Callable[[], Optional[float]]] = None,
     ) -> None:
         if cfg.objective not in ("throughput", "latency"):
             raise ValueError(
@@ -160,6 +162,12 @@ class AutotuneController:
         # probes are skipped — widening a pipeline whose lanes already
         # diverge deepens the straggler imbalance (see _start_probe)
         self.skew_fn = skew_fn
+        # shuffle-entropy signal (None = no signal): when the measured
+        # within-batch entropy sits below cfg.min_shuffle_entropy, upward
+        # probes of the reorder_window knob specifically are skipped — a
+        # wider window buys throughput by stratifying batches by completion
+        # time, and the floor makes that randomness loss a gated trade
+        self.entropy_fn = entropy_fn
         # latency-objective window (on_request): per-request latencies whose
         # tail quantile is inverted into the hill climber's score
         self._lat_window: List[float] = []
@@ -616,6 +624,7 @@ class AutotuneController:
         skipped_for_gate = False
         skipped_for_skew = False
         skipped_for_lease = False
+        skipped_for_entropy = False
         for k in order:
             cur = k.get()
             nxt = self._next_value(k, cur)
@@ -635,6 +644,13 @@ class AutotuneController:
                 # downward refinement runs until the lanes re-converge
                 skipped_for_skew = True
                 continue
+            if k.name == "reorder_window" and up_move and self._entropy_gated():
+                # the delivered stream's shuffle entropy already sits below
+                # the configured floor: a wider reorder window would deepen
+                # the completion-time stratification it measures, so only
+                # downward refinement of this knob runs (others are free)
+                skipped_for_entropy = True
+                continue
             if up_move and not self._lease_for_up():
                 skipped_for_lease = True
                 continue
@@ -649,15 +665,17 @@ class AutotuneController:
             self._phase = "settle"
             self._log("probe", k.name, applied, baseline)
             return
-        if skipped_for_gate or skipped_for_skew or skipped_for_lease:
-            # accelerator-bound, lane-skewed, or a peer holds the up-probe
-            # token — not converged: stay armed and re-check next window
-            # instead of quiescing.  An idle hold of the token (e.g.
-            # util-gated right after an accept) is released so peers can
-            # use it.
+        if (skipped_for_gate or skipped_for_skew or skipped_for_lease
+                or skipped_for_entropy):
+            # accelerator-bound, lane-skewed, entropy-floored, or a peer
+            # holds the up-probe token — not converged: stay armed and
+            # re-check next window instead of quiescing.  An idle hold of
+            # the token (e.g. util-gated right after an accept) is released
+            # so peers can use it.
             self._release_lease()
             action = ("gate" if skipped_for_gate
-                      else "skew" if skipped_for_skew else "lease")
+                      else "skew" if skipped_for_skew
+                      else "lease" if skipped_for_lease else "entropy")
             self._log(action, "-", 0, baseline)
             self._phase = "baseline"
             return
@@ -686,6 +704,15 @@ class AutotuneController:
         except Exception:
             return False
         return skew is not None and skew >= self.cfg.skew_gate
+
+    def _entropy_gated(self) -> bool:
+        if self.entropy_fn is None or self.cfg.min_shuffle_entropy <= 0.0:
+            return False
+        try:
+            entropy = self.entropy_fn()
+        except Exception:
+            return False
+        return entropy is not None and entropy < self.cfg.min_shuffle_entropy
 
 
 def make_weak_knob_callbacks(owner: Any) -> Tuple[Callable, Callable]:
@@ -774,6 +801,8 @@ def build_pipeline_knobs(
     get_slab: Optional[Callable[[], int]] = None,
     set_slab: Optional[Callable[[int], int]] = None,
     max_slab: Optional[int] = None,
+    get_reorder: Optional[Callable[[], int]] = None,
+    set_reorder: Optional[Callable[[int], int]] = None,
 ) -> List[Knob]:
     """Per-stage knob set for a staged-pipeline ``_PipelineIter``: IO
     executor width, CPU executor width, the outstanding sample window (in
@@ -835,7 +864,31 @@ def build_pipeline_knobs(
             return int(hedge.enabled)
 
         knobs.append(Knob("hedge", _get_hedge, _set_hedge, 0, 1))
+    if get_reorder is not None and set_reorder is not None:
+        knobs.append(build_reorder_knob(cfg, get_reorder=get_reorder,
+                                        set_reorder=set_reorder))
     return knobs
+
+
+def build_reorder_knob(
+    cfg: AutotuneConfig,
+    *,
+    get_reorder: Callable[[], int],
+    set_reorder: Callable[[int], int],
+) -> Knob:
+    """Reorder-window knob (window-mode pipelines only): a wider window
+    tolerates stragglers (throughput) at the cost of completion-time
+    stratified batches (shuffle randomness).  Up-probes of exactly this
+    knob are additionally gated by ``cfg.min_shuffle_entropy`` in
+    ``AutotuneController._start_probe``, so the throughput/randomness
+    trade is measured rather than invisible."""
+    return Knob(
+        name="reorder_window",
+        get=get_reorder,
+        set=set_reorder,
+        lo=max(1, cfg.min_reorder_window),
+        hi=max(cfg.max_reorder_window, cfg.min_reorder_window, 1),
+    )
 
 
 def budget_split_schedule(budget: int) -> Tuple[int, ...]:
@@ -869,6 +922,8 @@ def build_budget_knobs(
     get_slab: Optional[Callable[[], int]] = None,
     set_slab: Optional[Callable[[int], int]] = None,
     max_slab: Optional[int] = None,
+    get_reorder: Optional[Callable[[], int]] = None,
+    set_reorder: Optional[Callable[[int], int]] = None,
 ) -> List[Knob]:
     """Knob set for a budget co-tuned ``_PipelineIter``
     (``AutotuneConfig.thread_budget``): the independent ``io_workers`` /
@@ -935,6 +990,9 @@ def build_budget_knobs(
             return int(hedge.enabled)
 
         knobs.append(Knob("hedge", _get_hedge, _set_hedge, 0, 1))
+    if get_reorder is not None and set_reorder is not None:
+        knobs.append(build_reorder_knob(cfg, get_reorder=get_reorder,
+                                        set_reorder=set_reorder))
     return knobs
 
 

@@ -176,9 +176,34 @@ class ConcurrentDataLoader:
             host_id=host_id,
             num_hosts=num_hosts,
         )
+        if cfg.sampler:
+            # predicate pushdown: the sampler filters each epoch's stream by
+            # dataset metadata, so rejected rows' bytes are never requested.
+            # The mask is a pure function of (predicate, epoch): strict-mode
+            # resume cursors replay the identical filtered stream.
+            if not hasattr(dataset, "predicate_mask"):
+                raise ValueError(
+                    "LoaderConfig.sampler (predicate pushdown) requires a "
+                    "dataset exposing predicate metadata via "
+                    "predicate_mask(clauses) — e.g. "
+                    "repro.data.columnar.ColumnarImageDataset; "
+                    f"{type(dataset).__name__} does not"
+                )
+            pred = cfg.sampler
+
+            def _predicate_filter(epoch: int):
+                clauses = pred.clauses_for_epoch(epoch)
+                if not clauses:
+                    return None  # unfiltered epoch (curriculum warm-up)
+                return dataset.predicate_mask(clauses)
+
+            self.sampler.set_filter(_predicate_filter)
+        # hedging pairs with any path whose assembler runs hedge_scan: the
+        # legacy threaded iterator and both staged-pipeline IO modes (the
+        # asyncio stage issues duplicates as extra coroutines on its loop)
         self.hedge = (
             HedgeTracker(cfg.hedge_factor, cfg.hedge_min_s)
-            if cfg.hedge_requests and cfg.impl == "threaded"
+            if cfg.hedge_requests and (cfg.impl == "threaded" or pipe)
             else None
         )
         self._epoch = 0
@@ -214,6 +239,26 @@ class ConcurrentDataLoader:
                 delivery = (loader.stage_stats() or {}).get("delivery")
                 return delivery.get("lane_skew") if delivery else None
 
+        entropy_fn = None
+        if (
+            at.enabled
+            and at.min_shuffle_entropy > 0.0
+            and pipe
+            and pipe.reorder == "window"
+        ):
+            # shuffle-entropy floor: feed the controller the delivered
+            # stream's within-batch entropy so reorder-window up-probes stop
+            # when window mode is already paying for throughput with
+            # randomness.  Weakref for the same cycle reason as skew_fn.
+            _ent_ref = weakref.ref(self)
+
+            def entropy_fn() -> Optional[float]:
+                loader = _ent_ref()
+                if loader is None:
+                    return None
+                shuffle = (loader.stage_stats() or {}).get("shuffle")
+                return shuffle.get("within_batch") if shuffle else None
+
         self.autotuner: Optional[AutotuneController] = (
             AutotuneController(
                 at,
@@ -222,6 +267,7 @@ class ConcurrentDataLoader:
                 store_stats_fn=_store_stats_fn(dataset),
                 probe_lease=probe_lease,
                 skew_fn=skew_fn,
+                entropy_fn=entropy_fn,
             )
             if at.enabled
             else None

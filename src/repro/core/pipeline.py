@@ -43,6 +43,7 @@ path into an explicit stage graph::
 from __future__ import annotations
 
 import asyncio
+import math
 import multiprocessing
 import os
 import pickle
@@ -55,6 +56,8 @@ from concurrent.futures import ThreadPoolExecutor
 from multiprocessing.connection import wait as _mp_wait
 from typing import Any, Deque, Dict, List, Optional, Tuple
 
+import numpy as np
+
 from repro.core import shm as shm_mod
 from repro.core.fetcher import (
     AdjustableSemaphore,
@@ -64,6 +67,7 @@ from repro.core.fetcher import (
 from repro.core.sampler import BatchIndices
 from repro.core.tracing import (
     BYTES_COPIED,
+    SHUFFLE_ENTROPY,
     STAGE_AUGMENT,
     STAGE_COLLATE,
     STAGE_DECODE,
@@ -179,10 +183,11 @@ class _IOStage:
     fetch->decode queue: when decode backs up, IO concurrency drains to zero
     instead of buffering unboundedly.
 
-    Hedging (threaded mode, reusing :class:`HedgeTracker`): the assembler
+    Hedging (both modes, reusing :class:`HedgeTracker`): the assembler
     loop calls :meth:`hedge_scan`; any in-flight fetch older than the p95
-    deadline gets one ungated duplicate on the pool's headroom threads, and
-    the first completion wins.
+    deadline gets one ungated duplicate — on the pool's headroom threads
+    (threaded) or as an extra coroutine on the event loop (asyncio) — and
+    the first completion wins via the shared ``_inflight`` pop.
     """
 
     def __init__(
@@ -206,7 +211,7 @@ class _IOStage:
         self.done_q = done_q
         self.stop = stop
         self.tracer = tracer
-        self.hedge = hedge if mode == "threaded" else None
+        self.hedge = hedge
         self.hard_cap = max(width, hard_cap)
         self.gate = AdjustableSemaphore(width)
         self._pending: deque = deque()
@@ -313,7 +318,7 @@ class _IOStage:
     def hedge_scan(self) -> None:
         """Issue duplicates for fetches past the p95 deadline (called from
         the assembler loop, so hedging needs no dedicated timer thread)."""
-        if self.hedge is None or not self.hedge.enabled or self._pool is None:
+        if self.hedge is None or not self.hedge.enabled:
             return
         deadline = self.hedge.deadline()
         now = time.monotonic()
@@ -326,42 +331,74 @@ class _IOStage:
                 self._inflight[id(s)] = (s, now + 3600.0)
         for s in stale:
             self.hedge.hedges_issued += 1
-            self._pool.submit(self._run_hedge, s)
+            if self._loop is not None:
+                # asyncio: the duplicate is one more coroutine on the loop,
+                # ungated like the threaded pool's headroom duplicates
+                asyncio.run_coroutine_threadsafe(self._ahedge(s), self._loop)
+            else:
+                self._pool.submit(self._run_hedge, s)
 
     # -- asyncio fetch -------------------------------------------------------
+    async def _acomplete(self, s: _Sample, raw: Any) -> bool:
+        """Async mirror of :meth:`_complete`: same first-response-wins pop,
+        but the (possibly blocking) decode-queue hand-off runs in an executor
+        so other in-flight GETs keep progressing on the event loop."""
+        with self._lock:
+            if self._inflight.pop(id(s), None) is None:
+                return False  # the other copy of a hedged fetch already won
+        if self.split:
+            s.raw = raw
+            await asyncio.get_running_loop().run_in_executor(
+                None, self.decode_q.put, s
+            )
+        else:
+            self.done_q.put((s, raw))
+        return True
+
     async def _afetch(self, s: _Sample) -> None:
         t0 = time.monotonic()
         with self._lock:
-            # registered so _fail's first-wins pop finds an entry (asyncio
-            # never hedges, but the completion protocol is shared)
             self._inflight[id(s)] = (s, t0)
         try:
             fetch = self.dataset.aget_raw if self.split else self.dataset.aget_item
             raw = await aretry_transient(fetch, s.index)
-            self.tracer.record(STAGE_FETCH, t0, time.monotonic(),
+            t1 = time.monotonic()
+            self.tracer.record(STAGE_FETCH, t0, t1,
                                index=s.index, batch_id=s.batch_id)
-            with self._lock:
-                self._inflight.pop(id(s), None)
-            if self.split:
-                s.raw = raw
-                # the decode queue put can block (backpressure); keep it off
-                # the event loop so other in-flight GETs continue
-                await asyncio.get_running_loop().run_in_executor(
-                    None, self.decode_q.put, s
-                )
-            else:
-                self.done_q.put((s, raw))
+            if self.hedge is not None:
+                self.hedge.observe(t1 - t0)
+            await self._acomplete(s, raw)
         except BaseException as e:
             self._fail(s, e)
         finally:
             self.gate.release()
             self._kick()
 
+    async def _ahedge(self, s: _Sample) -> None:
+        """Ungated asyncio duplicate of a straggling fetch; first wins."""
+        t0 = time.monotonic()
+        try:
+            fetch = self.dataset.aget_raw if self.split else self.dataset.aget_item
+            raw = await aretry_transient(fetch, s.index)
+            self.tracer.record(STAGE_FETCH, t0, time.monotonic(),
+                               index=s.index, batch_id=s.batch_id, hedge=True)
+            if await self._acomplete(s, raw) and self.hedge is not None:
+                self.hedge.hedges_won += 1
+        except BaseException:
+            pass  # the original is still in flight; let it decide the outcome
+
     def close(self) -> None:
         if self._pool is not None:
             self._pool.shutdown(wait=False, cancel_futures=True)
         if self._loop is not None:
-            self._loop.call_soon_threadsafe(self._loop.stop)
+            def _cancel_and_stop() -> None:
+                # cancel in-flight fetch/hedge coroutines before stopping so
+                # loop teardown doesn't destroy pending tasks mid-await
+                for task in asyncio.all_tasks(self._loop):
+                    task.cancel()
+                self._loop.call_soon(self._loop.stop)
+
+            self._loop.call_soon_threadsafe(_cancel_and_stop)
             self._thread.join(timeout=5)
             if not self._loop.is_running():
                 self._loop.close()
@@ -1048,16 +1085,107 @@ class _ProcCPUStage:
 
 
 class _Group:
-    """Window-mode assembly state for ``reorder_window`` consecutive batches:
-    the group's batch slots are emitted in batch order, each filled with the
-    first ``size`` of the group's samples to complete."""
+    """Window-mode assembly state for up to ``reorder_window`` consecutive
+    batches: the group's batch slots are emitted in batch order, each filled
+    with the first ``size`` of the group's samples to complete.
 
-    __slots__ = ("sizes", "buffer", "emitted")
+    Groups are keyed by dispatch order (a group sequence number), not by
+    ``batch_id // window``: each group remembers its own span, so the
+    reorder-window knob can change the width live — in-flight groups keep
+    the size they were opened with, and only the next group sees the new
+    value."""
 
-    def __init__(self) -> None:
+    __slots__ = ("start_bid", "sizes", "buffer", "indices", "emitted", "closed")
+
+    def __init__(self, start_bid: int) -> None:
+        self.start_bid = start_bid  # first dispatched batch_id of the group
         self.sizes: List[int] = []  # batch sizes, in dispatched batch order
         self.buffer: List[Any] = []  # completed items, in completion order
+        self.indices: List[int] = []  # dataset indices, completion order
         self.emitted = 0  # batch slots already emitted
+        self.closed = False  # a later group was opened: no more batches
+
+
+class _ShuffleMeter:
+    """Windowed shuffle-quality estimator over delivered batch composition.
+
+    Shuffle quality is measured on the *delivered* dataset-index stream
+    (what the model actually sees), not the sampler's intent: window-mode
+    reassembly fills batches with whichever samples complete first, and
+    completion time correlates with content (size, cache state, storage
+    locality), silently stratifying batches.  Two normalized [0, 1] numbers:
+
+    * ``within_batch`` — mean normalized Shannon entropy of each batch's
+      index histogram over ``buckets`` equal dataset strata.  A uniformly
+      shuffled batch draws from every stratum (≈1); a batch stratified by
+      completion time concentrates (→0).
+    * ``across_batch`` — count-weighted mean, over strata, of the entropy
+      of that stratum's distribution across the last ``window_batches``
+      batches.  Uniform shuffling spreads each stratum evenly (≈1); epochs
+      where a stratum's samples bunch into a few batches score low.
+
+    One :data:`SHUFFLE_ENTROPY` tracer span is recorded per measurement
+    window, tagging both values — the audit trail the autotuner's entropy
+    floor (``AutotuneConfig.min_shuffle_entropy``) is judged against."""
+
+    def __init__(self, dataset_len: int, tracer, *, buckets: int = 16,
+                 window_batches: int = 32) -> None:
+        self.n = max(1, int(dataset_len))
+        self.buckets = max(2, min(buckets, self.n))
+        self.window_batches = max(2, window_batches)
+        self.tracer = tracer
+        self._hists: Deque[np.ndarray] = deque(maxlen=self.window_batches)
+        self._within: Deque[float] = deque(maxlen=self.window_batches)
+        self.batches = 0
+        self._win_t0: Optional[float] = None
+
+    def note_batch(self, indices) -> None:
+        if indices is None or len(indices) == 0:
+            return
+        now = time.monotonic()
+        if self._win_t0 is None:
+            self._win_t0 = now
+        idx = np.asarray(indices, dtype=np.int64)
+        strata = np.minimum(idx * self.buckets // self.n, self.buckets - 1)
+        hist = np.bincount(strata, minlength=self.buckets).astype(np.float64)
+        p = hist / hist.sum()
+        nz = p[p > 0.0]
+        hmax = math.log(min(len(idx), self.buckets))
+        within = float(-(nz * np.log(nz)).sum() / hmax) if hmax > 0 else 1.0
+        self._within.append(within)
+        self._hists.append(hist)
+        self.batches += 1
+        if self.batches % self.window_batches == 0:
+            snap = self.snapshot()
+            self.tracer.record(
+                SHUFFLE_ENTROPY, self._win_t0, now,
+                within=snap["within_batch"], across=snap["across_batch"],
+                batches=self.batches,
+            )
+            self._win_t0 = None
+
+    def snapshot(self) -> Dict[str, Any]:
+        if not self._within:
+            return {"within_batch": None, "across_batch": None, "batches": 0}
+        within = float(np.mean(self._within))
+        across = None
+        if len(self._hists) >= 2:
+            m = np.stack(self._hists)  # (batches, strata)
+            totals = m.sum(axis=0)  # per-stratum sample counts
+            hmax = math.log(m.shape[0])
+            acc = 0.0
+            for k in range(m.shape[1]):
+                if totals[k] <= 0:
+                    continue
+                q = m[:, k] / totals[k]
+                nz = q[q > 0.0]
+                acc += float(totals[k]) * float(-(nz * np.log(nz)).sum() / hmax)
+            across = acc / float(totals.sum())
+        return {
+            "within_batch": round(within, 4),
+            "across_batch": round(across, 4) if across is not None else None,
+            "batches": self.batches,
+        }
 
 
 class _PipelineIter:
@@ -1093,6 +1221,12 @@ class _PipelineIter:
         if at.enabled:
             # resume from values the controller already learned (prev epoch)
             tuned = loader._tuned
+            if not self.strict:
+                self.window = min(
+                    max(tuned.get("reorder_window", self.window),
+                        at.min_reorder_window),
+                    max(at.max_reorder_window, self.window),
+                )
             io_workers = min(
                 max(tuned.get("io_workers", io_workers), at.min_fetch_workers),
                 self._max_io_bound,
@@ -1272,9 +1406,20 @@ class _PipelineIter:
         self._remaining: Dict[int, int] = {}
         self._ready: Dict[int, Any] = {}
         self._next_bid: Optional[int] = None
-        # window-mode assembly: per-group first-N-ready composition
+        # window-mode assembly: per-group first-N-ready composition, keyed
+        # by dispatch-order group sequence number (live-resizable window)
         self._groups: Dict[int, _Group] = {}
-        self._cur_group = 0
+        self._cur_group = 0  # next group to deliver
+        self._next_gid = 0  # next group to open
+        self._gid_of_bid: Dict[int, int] = {}
+        self._group_consumed = 0  # absolute bid past the last emitted group
+        # shuffle-quality estimator over the delivered index stream (the
+        # evidence behind stage_stats()["shuffle"] and the autotuner's
+        # reorder-window entropy floor)
+        self._shuffle = _ShuffleMeter(loader.sampler.dataset_len, self.tracer)
+        # strict/sharded batch composition equals the sampler's dispatch —
+        # remember it so delivery can be scored without re-deriving indices
+        self._batch_indices: Dict[int, Tuple[int, ...]] = {}
 
         if loader.autotuner is not None:
             from repro.core.autotune import (
@@ -1290,12 +1435,19 @@ class _PipelineIter:
             _wget, _wset = make_weak_knob_callbacks(self)
             # slab-pressure knob only when the shm transport is live (the
             # slab allocation caps how far the controller may raise it)
-            slab_kw: Dict[str, Any] = {}
+            extra_kw: Dict[str, Any] = {}
             if self._shm_spec is not None:
-                slab_kw = dict(
+                extra_kw = dict(
                     get_slab=_wget(lambda it: it._slab_cap),
                     set_slab=_wset(lambda it, n: it._set_slab_slots(n)),
                     max_slab=self._shm_spec[1],
+                )
+            # reorder-window knob only where the window exists: window-mode
+            # host delivery (sharded delivery requires strict reorder)
+            if not self.strict and self._assembler is None:
+                extra_kw.update(
+                    get_reorder=_wget(lambda it: it.window),
+                    set_reorder=_wset(lambda it, n: it._set_reorder_window(n)),
                 )
             if self._budget:
                 # budget co-tuning: ONE coupled io/cpu split knob (+ the
@@ -1324,7 +1476,7 @@ class _PipelineIter:
                     hedge=loader.hedge,
                     max_outstanding=self._max_outstanding_bound,
                     max_queue=self._max_queue_bound,
-                    **slab_kw,
+                    **extra_kw,
                 )
             else:
                 knobs = build_pipeline_knobs(
@@ -1342,7 +1494,7 @@ class _PipelineIter:
                     max_cpu=self._max_cpu_bound,
                     max_outstanding=self._max_outstanding_bound,
                     max_queue=self._max_queue_bound,
-                    **slab_kw,
+                    **extra_kw,
                 )
                 if not self.split:
                     # nothing flows through the CPU stage or its queue —
@@ -1484,6 +1636,20 @@ class _PipelineIter:
         self.loader._tuned["slab_slots"] = n
         return n
 
+    def _set_reorder_window(self, n: int) -> int:
+        """Reorder-window knob (window mode only): takes effect for the NEXT
+        opened group — groups are keyed by dispatch order and remember their
+        own span, so in-flight groups keep the size they were opened with
+        and the assembly math never sees a mixed window."""
+        if self.strict:
+            return 1
+        at = self.cfg.autotune
+        n = max(at.min_reorder_window,
+                min(int(n), max(at.max_reorder_window, 1)))
+        self.window = n
+        self.loader._tuned["reorder_window"] = n
+        return n
+
     # -- dispatch ------------------------------------------------------------
     def _pump(self) -> None:
         """Flatten sampler batches into sample tasks while the in-flight
@@ -1507,17 +1673,28 @@ class _PipelineIter:
             if self._next_bid is None:
                 self._next_bid = task.batch_id
                 self._bid_base = task.batch_id
-                self._cur_group = task.batch_id // self.window
+                self._group_consumed = task.batch_id
             self._max_bid = max(self._max_bid, task.batch_id)
             n = len(task.indices)
             if self._assembler is not None:
                 self._assembler.begin_batch(task.batch_id, n)
+                self._batch_indices[task.batch_id] = tuple(task.indices)
             elif self.strict:
                 self._slots[task.batch_id] = [None] * n
                 self._remaining[task.batch_id] = n
+                self._batch_indices[task.batch_id] = tuple(task.indices)
             else:
-                g = self._groups.setdefault(task.batch_id // self.window, _Group())
+                gid = self._next_gid - 1
+                g = self._groups.get(gid)
+                if g is None or g.closed or len(g.sizes) >= self.window:
+                    if g is not None:
+                        g.closed = True
+                    gid = self._next_gid
+                    self._next_gid += 1
+                    g = _Group(task.batch_id)
+                    self._groups[gid] = g
                 g.sizes.append(n)
+                self._gid_of_bid[task.batch_id] = gid
             self._dispatched_batches += 1
             self._dispatched_samples += n
             for pos, index in enumerate(task.indices):
@@ -1539,13 +1716,17 @@ class _PipelineIter:
                 del self._remaining[s.batch_id]
                 self._ready[s.batch_id] = self._slots.pop(s.batch_id)
         else:
-            self._groups[s.batch_id // self.window].buffer.append(item)
+            g = self._groups[self._gid_of_bid[s.batch_id]]
+            g.buffer.append(item)
+            g.indices.append(s.index)
 
     def _pop_ready(self) -> Optional[List[Any]]:
         """Return the next deliverable batch's items, or None."""
         if self.strict:
             if self._next_bid is not None and self._next_bid in self._ready:
                 items = self._ready.pop(self._next_bid)
+                self._shuffle.note_batch(
+                    self._batch_indices.pop(self._next_bid, ()))
                 self._next_bid += 1
                 return items
             return None
@@ -1556,17 +1737,22 @@ class _PipelineIter:
             need = g.sizes[g.emitted]
             if len(g.buffer) >= need:
                 items, g.buffer = g.buffer[:need], g.buffer[need:]
+                idxs, g.indices = g.indices[:need], g.indices[need:]
                 g.emitted += 1
+                self._shuffle.note_batch(idxs)
+                if g.emitted == len(g.sizes) and (g.closed or self._exhausted):
+                    # last slot of a finished group: the consumer cursor may
+                    # advance past it (resume replays partial groups only)
+                    self._group_consumed = g.start_bid + len(g.sizes)
                 return items
             return None
         # every dispatched slot of this group emitted; the group is complete
-        # once a later group's batch was dispatched (dispatch is in batch-id
-        # order) or the sampler is exhausted — then advance
-        group_closed = (
-            self._exhausted
-            or self._max_bid >= (self._cur_group + 1) * self.window
-        )
-        if group_closed and not g.buffer:
+        # once a later group was opened (dispatch is in batch-id order) or
+        # the sampler is exhausted — then advance
+        if (g.closed or self._exhausted) and not g.buffer:
+            self._group_consumed = g.start_bid + len(g.sizes)
+            for bid in range(g.start_bid, g.start_bid + len(g.sizes)):
+                self._gid_of_bid.pop(bid, None)
             del self._groups[self._cur_group]
             self._cur_group += 1
             return self._pop_ready()
@@ -1602,12 +1788,12 @@ class _PipelineIter:
         if not self.strict:
             # a windowed batch holds first-N-ready samples from its whole
             # group, so a mid-group cursor would resume with some samples
-            # dropped and others duplicated; round down to the last complete
-            # group boundary — a restart replays the partial group, which is
-            # the legacy "prefetched-but-unconsumed batches are replayed"
-            # contract, and no sample is ever lost
-            consumed = max((consumed // self.window) * self.window,
-                           self._bid_base)
+            # dropped and others duplicated; hold the cursor at the last
+            # fully emitted group's end (maintained in _pop_ready) — a
+            # restart replays the partial group, which is the legacy
+            # "prefetched-but-unconsumed batches are replayed" contract,
+            # and no sample is ever lost
+            consumed = max(self._group_consumed, self._bid_base)
         self.loader._consumed = consumed
         return batch
 
@@ -1681,6 +1867,10 @@ class _PipelineIter:
             "emitted_batches": self._emitted_batches,
             "split": self.split,
             "reorder": "strict" if self.strict else f"window={self.window}",
+            # delivered-stream shuffle quality (see _ShuffleMeter): the
+            # within_batch value feeds the autotuner's reorder-window
+            # entropy floor via the loader's entropy_fn
+            "shuffle": self._shuffle.snapshot(),
         }
         if self._budget:
             out["thread_budget"] = self._budget

@@ -47,6 +47,11 @@ SERVE_GET = "serve_get"
 # sample's way from decode to device — the zero-copy transport's figure of
 # merit (bench_shm divides it by samples drained to get bytes/sample)
 BYTES_COPIED = "bytes_copied"
+# shuffle-quality lane (repro.core.pipeline): one span per entropy
+# measurement window, tagged with the normalized within-batch and
+# across-batch entropies — the evidence bench_columnar's entropy-floor
+# claim (AutotuneConfig.min_shuffle_entropy) is audited against
+SHUFFLE_ENTROPY = "shuffle_entropy"
 
 
 @dataclass

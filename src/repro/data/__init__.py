@@ -1,1 +1,11 @@
-from repro.data import augment, cache, codec, dataset, imagenet_synth, shards, store  # noqa: F401
+# Import order matters: ``store`` finishes its deferred ``cache`` re-export
+# (store.py line ~322) only if it starts before ``cache`` does — importing
+# ``cache`` first re-enters ``store`` through repro.core and trips the cycle.
+from repro.data import augment, codec, store  # noqa: F401
+from repro.data import (  # noqa: F401
+    cache,
+    columnar,
+    dataset,
+    imagenet_synth,
+    shards,
+)
