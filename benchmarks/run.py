@@ -31,6 +31,7 @@ BENCHES = [
     "bench_shm",           # beyond paper: zero-copy shm transport + ingest
     "bench_columnar",      # beyond paper: columnar projection + pushdown
     "bench_serve",         # beyond paper: online-serving read path
+    "bench_elastic",       # beyond paper: elastic fleet + append-log journal
     "bench_dataset_pool",  # Fig 12
     "bench_e2e",           # Figs 13/14/15
     "bench_shards",        # A.5

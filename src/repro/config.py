@@ -455,6 +455,24 @@ class AutotuneConfig:
     # reorder_window knob bounds (window-mode pipelines only)
     min_reorder_window: int = 1
     max_reorder_window: int = 64
+    # -- cooperative down-shedding (repro.core.coord.CongestionBoard) -------
+    # AIMD across the fleet: a host whose window collapses below
+    # shed_collapse_fraction of its best settled throughput posts a shed
+    # event to coord_dir's CongestionBoard, and EVERY host (poster included)
+    # multiplicatively cuts its concurrency knobs by shed_md_factor, holds
+    # shed_hold_windows windows, then recovers additively toward the
+    # pre-shed values over shed_recover_windows windows.  Per-host hill
+    # climbing only gives back its own last probe step under collapse; the
+    # board is what makes the whole fleet back off together.  0.0 = off
+    # (the default: existing coord_dir fleets keep lease-gating only).
+    # Requires coord_dir.
+    shed_collapse_fraction: float = 0.0
+    shed_md_factor: float = 0.5  # multiplicative-decrease factor per shed
+    shed_hold_windows: int = 2  # windows to sit at the cut point
+    shed_recover_windows: int = 8  # windows to climb back additively
+    # fleet-wide shed rate limit: a collapse seen by N hosts injects ONE
+    # shed event, not N stacked halvings (enforced under the board lock)
+    shed_min_interval_s: float = 5.0
 
 
 @dataclass(frozen=True)
@@ -558,6 +576,31 @@ class DeliverySpec:
                             coord_dir=coord_dir)
 
 
+@dataclass(frozen=True)
+class ElasticConfig:
+    """Elastic fleet membership + work claiming (repro.core.elastic).
+
+    When enabled, the loader joins a lease-based ``MembershipBoard`` under
+    ``coord_dir`` and replaces static batch sharding with claim-based
+    scheduling over an ``EpochShardBoard``: the epoch's batches are split
+    into shards of ``shard_batches`` that live hosts claim under TTL
+    leases, so hosts may join, leave, or crash mid-epoch and the *union*
+    of delivered batches still covers the epoch exactly (a dead host's
+    in-flight shard is resumed by a survivor at its last confirmed batch —
+    at-least-once for the unconfirmed tail, never lost).  The sub-config
+    is truthy iff enabled, so ``if cfg.elastic:`` reads naturally."""
+
+    enabled: bool = False
+    coord_dir: str = ""  # shared directory (required when enabled)
+    lease_ttl_s: float = 10.0  # membership + shard-claim lease TTL
+    heartbeat_interval_s: float = 2.0  # max staleness of our own lease
+    shard_batches: int = 8  # claim granularity (batches per shard)
+    claim_poll_s: float = 0.05  # wait between claim attempts when starved
+
+    def __bool__(self) -> bool:
+        return bool(self.enabled)
+
+
 _PREDICATE_OPS = ("==", "!=", "<", "<=", ">", ">=", "in", "not_in")
 
 
@@ -639,6 +682,9 @@ class LoaderConfig:
     # online knob control (off by default: behaviour is bit-identical to a
     # statically configured loader when disabled)
     autotune: AutotuneConfig = AutotuneConfig()
+    # elastic fleet membership + claim-based batch scheduling (see
+    # ElasticConfig).  Off by default: static host_id/num_hosts sharding.
+    elastic: ElasticConfig = ElasticConfig()
 
     # -- legacy flat reads (the write path is shimmed in __init__) ----------
     @property
@@ -820,6 +866,7 @@ __all__ = [
     "AutotuneConfig",
     "CacheConfig",
     "DeliverySpec",
+    "ElasticConfig",
     "LoaderConfig",
     "MeshConfig",
     "ModelConfig",

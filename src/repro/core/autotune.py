@@ -112,6 +112,9 @@ class TuneEvent:
     #             | reprobe | gate | lease (up-move skipped: peer holds token)
     #             | skew (up-move skipped: delivery lanes diverged)
     #             | entropy (reorder-window up-move skipped: shuffle floor)
+    #             | shed (local collapse: posted + multiplicative cut)
+    #             | shed_peer (peer's shed event honored: multiplicative cut)
+    #             | recover (one additive step back toward pre-shed values)
     knob: str
     value: int
     tput: float
@@ -139,6 +142,7 @@ class AutotuneController:
         probe_lease: Optional[Any] = None,
         skew_fn: Optional[Callable[[], Optional[float]]] = None,
         entropy_fn: Optional[Callable[[], Optional[float]]] = None,
+        congestion: Optional[Any] = None,
     ) -> None:
         if cfg.objective not in ("throughput", "latency"):
             raise ValueError(
@@ -195,6 +199,24 @@ class AutotuneController:
         # best *settled* operating point seen: (knob values, its throughput)
         self._best_state: Dict[str, int] = {}
         self._best_state_tput = 0.0
+        # cooperative AIMD down-shedding (repro.core.coord.CongestionBoard-
+        # shaped; None = off).  On a shed — ours or a peer's — every scalable
+        # knob is cut multiplicatively and then climbs back additively toward
+        # its pre-shed value: _shed_target holds the climb-back goals,
+        # _shed_step_sz each knob's additive increment, _shed_hold the
+        # windows left to sit at the cut point before recovering.
+        self.congestion = congestion
+        self._shed_seq = 0
+        if congestion is not None:
+            try:
+                # start from the board's current tip: historic shed events
+                # predate this controller and must not trigger a cut now
+                self._shed_seq = congestion.last_seq()
+            except OSError:
+                self._shed_seq = 0
+        self._shed_target: Dict[str, int] = {}
+        self._shed_step_sz: Dict[str, int] = {}
+        self._shed_hold = 0
 
     # -- public surface ------------------------------------------------------
 
@@ -367,6 +389,101 @@ class AutotuneController:
             except OSError:  # pragma: no cover - shared dir unavailable
                 pass
 
+    # -- cooperative down-shedding (AIMD) ------------------------------------
+
+    def _apply_shed(self, tput: float, action: str) -> None:
+        """Multiplicative decrease: cancel any in-flight probe, hand the
+        up-probe token back, and cut every scalable concurrency knob by
+        ``shed_md_factor``, remembering the pre-shed values as additive
+        recovery targets.  Binary and additive-scale knobs are left alone —
+        halving a 0/1 toggle or an admission policy isn't "backing off"."""
+        cfg = self.cfg
+        if self._probe is not None:
+            p, self._probe = self._probe, None
+            p.knob.set(p.old_value)
+        self._release_lease()
+        n = 0
+        for k in self.knobs:
+            if k.is_binary or k.scale != "mult":
+                continue
+            cur = k.get()
+            cut = max(k.lo, int(cur * cfg.shed_md_factor))
+            if cut >= cur:
+                continue
+            k.set(cut)
+            self._shed_target[k.name] = cur
+            self._shed_step_sz[k.name] = max(
+                1, -(-(cur - cut) // max(cfg.shed_recover_windows, 1))
+            )
+            n += 1
+        self._shed_hold = max(cfg.shed_hold_windows, 0)
+        self._phase = "baseline"
+        self._log(action, "-", n, tput)
+
+    def _shed_step(self, tput: float) -> bool:
+        """AIMD coordination, run before normal hill climbing each window.
+        Returns True when this window was consumed by shed/hold/recover —
+        probing is suspended until additive recovery completes (climbing on
+        top of a deliberate fleet-wide back-off would judge moves against a
+        moving baseline AND defeat the back-off)."""
+        if self.congestion is None:
+            return False
+        cfg = self.cfg
+        try:
+            seq, events = self.congestion.poll(self._shed_seq)
+        except OSError:
+            seq, events = self._shed_seq, []
+        self._shed_seq = max(self._shed_seq, seq)
+        if not self._shed_target:
+            # a peer observed collapse: honor its shed event (our own posts
+            # are consumed by the _shed_seq advance above, not re-applied)
+            if any(e.get("h") != self.congestion.host for e in events):
+                self._apply_shed(tput, "shed_peer")
+                return True
+            # local collapse: this settled window fell below the shed
+            # fraction of our best settled throughput — post fleet-wide
+            # (rate-limited under the board lock) and cut ourselves
+            if (
+                cfg.shed_collapse_fraction > 0
+                and self._windows_seen > cfg.warmup_windows
+                and self._best_state_tput > 0
+                and tput < cfg.shed_collapse_fraction * self._best_state_tput
+            ):
+                try:
+                    posted = self.congestion.post_shed(
+                        tput, min_interval_s=cfg.shed_min_interval_s
+                    )
+                except OSError:
+                    posted = None
+                if posted is not None:
+                    self._shed_seq = max(self._shed_seq, posted)
+                self._apply_shed(tput, "shed")
+                return True
+            return False
+        # shedding: hold at the cut point, then climb back additively.
+        # Recovery only re-applies values this host already ran at, so it
+        # deliberately does not contend for the up-probe lease.
+        if self._shed_hold > 0:
+            self._shed_hold -= 1
+            return True
+        done = True
+        for k in self.knobs:
+            tgt = self._shed_target.get(k.name)
+            if tgt is None:
+                continue
+            cur = k.get()
+            if cur >= tgt:
+                continue
+            nv = min(tgt, cur + self._shed_step_sz.get(k.name, 1))
+            k.set(nv)
+            self._log("recover", k.name, nv, tput)
+            if nv < tgt:
+                done = False
+        if done:
+            self._shed_target.clear()
+            self._shed_step_sz.clear()
+        return True
+
     # -- controller core -----------------------------------------------------
 
     def _log(self, action: str, knob: str, value: int, tput: float) -> None:
@@ -374,6 +491,8 @@ class AutotuneController:
 
     def _step(self, tput: float) -> None:
         self._windows_seen += 1
+        if self._shed_step(tput):
+            return
         if self._lease_held and self._probe is not None:
             # keep the token alive across the settle+measure windows of an
             # in-flight upward probe (TTL is sized for a few windows only);

@@ -329,46 +329,53 @@ class ShardedAssembler:
             t.join(timeout=2.0)
 
 
+def _cursor_apply(st: Dict[str, Any], rec: Dict[str, Any]) -> None:
+    op = rec.get("op")
+    if op == "pub":
+        st[str(rec["h"])] = [int(rec["e"]), int(rec["b"])]
+    elif op == "snap":
+        st.clear()
+        st.update({str(h): [int(e), int(b)] for h, (e, b) in rec["c"].items()})
+
+
 class ShardCursorBoard:
     """Fleet-wide per-shard cursor alignment (coord-layer substrate).
 
-    Every host publishes ``(epoch, next_batch)`` under one flock'd JSON
-    document; :meth:`aligned` is the fleet minimum — the newest batch
-    boundary every host has actually delivered.  A checkpoint cut on any
-    host resumes the whole fleet from that boundary, so the restored
-    device-sharded global batch is consistent without a gather (each
-    host's lanes re-derive their slice from the same sampler cursor).
+    Every host publishes ``(epoch, next_batch)`` as a record on the shared
+    append-log (one ~40-byte append per checkpoint, compacted to a
+    per-host snapshot periodically); :meth:`aligned` is the fleet minimum —
+    the newest batch boundary every host has actually delivered.  A
+    checkpoint cut on any host resumes the whole fleet from that boundary,
+    so the restored device-sharded global batch is consistent without a
+    gather (each host's lanes re-derive their slice from the same sampler
+    cursor).
     """
 
     def __init__(self, coord_dir: str, *, num_hosts: int = 1) -> None:
-        from repro.core.coord import FileLock  # lazy: fcntl-gated
+        from repro.core.coord import AppendLog  # lazy: fcntl-gated
 
-        os.makedirs(coord_dir, exist_ok=True)
         self.num_hosts = max(int(num_hosts), 1)
-        self.path = os.path.join(coord_dir, "shard_cursors.json")
-        self._lock = FileLock(os.path.join(coord_dir, "shard_cursors.lock"))
-
-    def _read(self) -> Dict[str, Any]:
-        try:
-            with open(self.path, "r") as f:
-                return json.load(f)
-        except (FileNotFoundError, ValueError):
-            return {}
+        self._log = AppendLog(
+            coord_dir,
+            "shard_cursors",
+            make_state=dict,
+            apply=_cursor_apply,
+            snapshot=lambda st: [{"op": "snap", "c": st}],
+            compact_every=256,
+        )
 
     def publish(self, host_id: int, epoch: int, next_batch: int) -> None:
-        with self._lock:
-            doc = self._read()
-            doc[str(int(host_id))] = [int(epoch), int(next_batch)]
-            tmp = f"{self.path}.tmp{os.getpid()}"
-            with open(tmp, "w") as f:
-                json.dump(doc, f)
-            os.replace(tmp, self.path)
+        with self._log.update() as (_st, emit):
+            emit(
+                {"op": "pub", "h": int(host_id), "e": int(epoch),
+                 "b": int(next_batch)}
+            )
 
     def aligned(self) -> Optional[Tuple[int, int]]:
         """The ``(epoch, next_batch)`` every host has reached, or None
         until all ``num_hosts`` cursors have been published."""
-        with self._lock:
-            doc = self._read()
+        with self._log.view() as st:
+            doc = dict(st)
         if len(doc) < self.num_hosts:
             return None
         return min(tuple(int(x) for x in v) for v in doc.values())

@@ -37,6 +37,7 @@ from repro.core.autotune import (
     build_loader_knobs,
     make_weak_knob_callbacks,
 )
+from repro.core.elastic import ClaimStarved, ElasticBatchSampler, ElasticSession
 from repro.core.fetcher import HedgeTracker, make_fetcher
 from repro.core.sampler import BatchIndices, ShardedBatchSampler
 from repro.core.tracing import GET_BATCH, NULL_TRACER, Tracer
@@ -198,6 +199,46 @@ class ConcurrentDataLoader:
                 return dataset.predicate_mask(clauses)
 
             self.sampler.set_filter(_predicate_filter)
+        # elastic fleet mode (repro.core.elastic): replace static sharding
+        # with claim-based batch scheduling over the coord substrate, so
+        # hosts may join/leave/crash mid-epoch and the fleet-wide union of
+        # delivered batches still covers the epoch exactly
+        self._elastic: Optional[ElasticSession] = None
+        if cfg.elastic:
+            if not cfg.elastic.coord_dir:
+                raise ValueError("elastic mode requires ElasticConfig.coord_dir")
+            if num_hosts != 1:
+                raise ValueError(
+                    "elastic mode replaces static host_id/num_hosts sharding "
+                    "with claim-based scheduling of whole global batches; "
+                    "construct each elastic host with num_hosts=1"
+                )
+            if pipe:
+                raise ValueError(
+                    "elastic mode currently requires the legacy loader path "
+                    "(pipeline=PipelineConfig(enabled=False)): the staged "
+                    "pipeline's dispatcher does not yet retry a "
+                    "claim-starved sampler"
+                )
+            if spec.kind == "sharded":
+                raise ValueError(
+                    "elastic mode is incompatible with delivery='sharded': "
+                    "lane cursors assume a static host->shard mapping"
+                )
+            self._elastic = ElasticSession(
+                cfg.elastic, member=f"host{host_id}-pid{os.getpid()}"
+            )
+            elastic_sampler = ElasticBatchSampler(
+                len(dataset),
+                cfg.batch_size,
+                shuffle=cfg.shuffle,
+                seed=cfg.seed,
+                drop_last=cfg.drop_last,
+                session=self._elastic,
+            )
+            if cfg.sampler:
+                elastic_sampler.set_filter(self.sampler._filter_fn)
+            self.sampler = elastic_sampler
         # hedging pairs with any path whose assembler runs hedge_scan: the
         # legacy threaded iterator and both staged-pipeline IO modes (the
         # asyncio stage issues duplicates as extra coroutines on its loop)
@@ -213,16 +254,33 @@ class ConcurrentDataLoader:
         # each _LoaderIter re-binds the knob callbacks to itself.
         at = cfg.autotune
         probe_lease = None
+        congestion = None
         if at.enabled and at.coord_dir:
             # multi-host cooperation: upward concurrency/hedging probes
-            # require the fleet-wide token under the shared coord dir
+            # require the fleet-wide token under the shared coord dir.
+            # With elastic membership attached, a holder that vanished from
+            # the fleet is reaped immediately instead of idling the token
+            # out to its TTL.
             from repro.core.coord import UpProbeLease  # lazy: fcntl-gated
 
             probe_lease = UpProbeLease(
                 at.coord_dir,
                 owner=f"host{host_id}-pid{os.getpid()}",
                 ttl_s=at.coord_ttl_s,
+                membership=(
+                    self._elastic.membership
+                    if self._elastic is not None
+                    else None
+                ),
             )
+            if at.shed_collapse_fraction > 0:
+                # cooperative AIMD down-shedding: collapse events post to
+                # the fleet board and every controller cuts multiplicatively
+                from repro.core.coord import CongestionBoard
+
+                congestion = CongestionBoard(
+                    at.coord_dir, host=f"host{host_id}-pid{os.getpid()}"
+                )
         skew_fn = None
         if at.enabled and at.skew_gate > 0 and cfg.delivery.kind == "sharded":
             # lane-skew gate: feed the controller the delivery stage's
@@ -268,6 +326,7 @@ class ConcurrentDataLoader:
                 probe_lease=probe_lease,
                 skew_fn=skew_fn,
                 entropy_fn=entropy_fn,
+                congestion=congestion,
             )
             if at.enabled
             else None
@@ -453,18 +512,33 @@ class ConcurrentDataLoader:
         trainer dropping the ring."""
         self._device_ring = weakref.ref(ring)
 
+    def _note_batch_delivered(self) -> None:
+        """One batch crossed into the consumer: elastic mode forwards the
+        event to the claim sampler's confirmation pipeline."""
+        note = getattr(self.sampler, "note_delivered", None)
+        if note is not None:
+            note()
+
     def _note_epoch_end(self) -> None:
         """Feed the epoch-cadence cache controller one completed epoch
         (items = batches consumed; only the rate's consistency matters)."""
+        flush = getattr(self.sampler, "flush_delivered", None)
+        if flush is not None:
+            # elastic: the consumer has drained the epoch — confirm every
+            # delivered batch so peers see our shards done
+            flush()
         if self.cache_autotuner is not None and self._consumed:
             self.cache_autotuner.on_batch(items=self._consumed)
 
     def release_coordination(self) -> None:
-        """Hand back any held multi-host lease (clean shutdown — peers should
-        not have to wait out the crash TTL).  Safe to call repeatedly."""
+        """Hand back any held multi-host lease and the elastic membership
+        slot (clean shutdown — peers should not have to wait out the crash
+        TTL).  Safe to call repeatedly."""
         for ctrl in (self.autotuner, self.cache_autotuner):
             if ctrl is not None:
                 ctrl.release_coordination()
+        if self._elastic is not None:
+            self._elastic.leave()
 
 
 def deliver_traced(it) -> Any:
@@ -482,6 +556,7 @@ def deliver_traced(it) -> Any:
     if isinstance(batch, dict) and "nbytes" in batch:
         args["nbytes"] = int(batch["nbytes"].sum())
     it.tracer.record(GET_BATCH, t0, time.monotonic(), **args)
+    it.loader._note_batch_delivered()
     auto = it.loader.autotuner
     if auto is not None and not it._exhausted:
         auto.on_batch()
@@ -630,6 +705,11 @@ class _LoaderIter:
             except StopIteration:
                 self._exhausted = True
                 return
+            except ClaimStarved:
+                # elastic sampler: every remaining shard is live-claimed by
+                # a peer — keep delivering what is in flight and retry on
+                # the next dispatch (the retry loop lives in _next_impl)
+                return
             if self._next_bid is None:
                 self._next_bid = task.batch_id
             # Round-robin over ALL worker queues (PyTorch's
@@ -680,6 +760,10 @@ class _LoaderIter:
                         f"no batch within {self.cfg.timeout_s}s "
                         f"(dispatched={self._dispatched}, received={self._received})"
                     )
+                # a claim-starved elastic sampler returns from _dispatch
+                # without marking exhaustion; retry it here so a shard
+                # freed by a peer's death/expiry is picked up while idle
+                self._dispatch()
                 continue
             self._received += 1
             if isinstance(payload, WorkerFailure):

@@ -51,7 +51,7 @@ import time
 from abc import ABC, abstractmethod
 from collections import OrderedDict
 from dataclasses import dataclass
-from typing import List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 from repro.core.coord import SharedDiskJournal, host_shard
 from repro.core.tracing import CACHE_GET, NULL_TRACER, Tracer
@@ -443,6 +443,13 @@ class DiskTierCache:
         self.admission = admission or AdmitAll()
         self.journal = journal
         self.shard = shard
+        # shard mode: the keyspace slots this instance currently owns.  The
+        # static default is exactly {host_id}; elastic membership handoff
+        # rewrites it live through reshard().
+        self._owned = frozenset({shard[0]}) if shard is not None else frozenset()
+        self._owned_prefixes: Tuple[str, ...] = tuple(
+            self._shard_prefix(s) for s in sorted(self._owned)
+        )
         self.tmp_grace_s = tmp_grace_s
         os.makedirs(cache_dir, exist_ok=True)
         self._index: "OrderedDict[str, _DiskEntry]" = OrderedDict()
@@ -490,7 +497,7 @@ class DiskTierCache:
                 continue
             if self.journal is not None:
                 continue  # the journal re-lists under its own lock below
-            if self.shard is not None and not name.startswith(self._shard_prefix()):
+            if self.shard is not None and not self._owns(name):
                 continue  # a peer host's entry (or pre-shard debris): not ours
             try:
                 st = os.stat(path)
@@ -522,7 +529,7 @@ class DiskTierCache:
         return digest
 
     def _owns(self, fname: str) -> bool:
-        return self.shard is None or fname.startswith(self._shard_prefix())
+        return self.shard is None or fname.startswith(self._owned_prefixes)
 
     def _path(self, fname: str) -> str:
         return os.path.join(self.dir, fname)
@@ -783,6 +790,69 @@ class DiskTierCache:
 
     def set_admission(self, policy: AdmissionPolicy) -> None:
         self.admission = policy
+
+    def reshard(self, owned_slots) -> Dict[str, int]:
+        """Shard-mode elastic handoff: replace the set of keyspace slots
+        this host owns (computed fleet-wide from the membership view with
+        :func:`repro.core.coord.slot_owners`) without restarting.
+
+        * **released** slots: their entries leave *this index only* — the
+          files stay on disk for the slot's new owner to adopt (unlinking
+          them would throw away a warm cache the fleet still wants), and
+          this host's budget is freed immediately;
+        * **gained** slots: their on-disk files are adopted at the LRU cold
+          end in mtime order (the same rule ``_recover`` uses), then the
+          index is evicted down to ``capacity_bytes`` — so the per-host
+          byte bound holds through the handoff at every instant.
+
+        Provisional (mid-write) entries of released slots are kept until
+        their writer finishes; the next reshard or eviction retires them.
+        Returns ``{"dropped": n, "adopted": n}``."""
+        if self.shard is None:
+            raise ValueError("reshard() requires shard mode")
+        owned = frozenset(int(s) for s in owned_slots)
+        for s in owned:
+            if not 0 <= s < self.shard[1]:
+                raise ValueError(
+                    f"slot {s} out of range for {self.shard[1]} shard slots"
+                )
+        dropped = adopted = 0
+        with self._lock:
+            gained = owned - self._owned
+            self._owned = owned
+            self._owned_prefixes = tuple(
+                self._shard_prefix(s) for s in sorted(owned)
+            )
+            for fname in [f for f in self._index if not self._owns(f)]:
+                entry = self._index[fname]
+                if not entry.final:
+                    continue  # a live writer still owns this reservation
+                del self._index[fname]
+                self._used -= entry.size
+                dropped += 1
+            if gained:
+                prefixes = tuple(self._shard_prefix(s) for s in sorted(gained))
+                found = []
+                for name in os.listdir(self.dir):
+                    if name.startswith(".") or ".tmp" in name:
+                        continue
+                    if not name.startswith(prefixes) or name in self._index:
+                        continue
+                    try:
+                        st = os.stat(self._path(name))
+                    except OSError:
+                        continue
+                    found.append((st.st_mtime, name, st.st_size))
+                # newest-first insertion at the front leaves the oldest
+                # adoptee coldest, matching _recover's mtime LRU order
+                for _, name, size in sorted(found, reverse=True):
+                    self._index[name] = _DiskEntry(size, True)
+                    self._index.move_to_end(name, last=False)
+                    self._used += size
+                    adopted += 1
+            paths = self._pop_victims_locked()
+        self._unlink(paths)
+        return {"dropped": dropped, "adopted": adopted}
 
     @property
     def used_bytes(self) -> int:

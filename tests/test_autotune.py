@@ -592,3 +592,114 @@ def test_build_budget_knobs_shape_and_schedule():
 
     gc.collect()
     assert g() == 0 and s(2) == 2
+
+
+# ---------------------------------------------------------------------------
+# cooperative AIMD down-shedding (CongestionBoard-wired controller)
+# ---------------------------------------------------------------------------
+
+
+def _drive_on(ctrl, vals, tput_fn, steps, now):
+    """Like ``drive`` but continues an existing clock — multi-phase shed
+    tests must not rewind time between phases."""
+    for _ in range(steps):
+        now += 1.0 / tput_fn(vals)
+        ctrl.on_batch(1, now=now)
+    return now
+
+
+def _shed_cfg(**kw):
+    base = dict(enabled=True, interval_batches=1, min_window_s=0.0,
+                warmup_windows=1, rel_improvement=0.05,
+                shed_collapse_fraction=0.5, shed_md_factor=0.5,
+                shed_hold_windows=1, shed_recover_windows=4,
+                shed_min_interval_s=0.0)
+    base.update(kw)
+    return AutotuneConfig(**base)
+
+
+def _plateau(v):
+    return min(v["fetch"], 16) * 4
+
+
+def test_shed_cuts_multiplicatively_and_recovers_additively(tmp_path):
+    from repro.core.coord import CongestionBoard
+
+    vals = {"fetch": 1}
+    ctrl = AutotuneController(
+        _shed_cfg(), synthetic_knobs(vals, {"fetch": (1, 64)}),
+        congestion=CongestionBoard(str(tmp_path), host="a"),
+    )
+    collapsed = {"on": False}
+
+    def tput(v):
+        return 0.1 if collapsed["on"] else _plateau(v)
+
+    now = drive(ctrl, vals, tput, steps=200)
+    pre = vals["fetch"]
+    assert pre >= 16  # converged before the collapse
+    collapsed["on"] = True
+    now = _drive_on(ctrl, vals, tput, 2, now)
+    assert any(e.action == "shed" for e in ctrl.events)
+    assert vals["fetch"] == max(1, pre // 2)  # multiplicative decrease
+    # collapse clears: additive climb back to the pre-shed operating point
+    collapsed["on"] = False
+    _drive_on(ctrl, vals, tput, 12, now)
+    recovers = [e for e in ctrl.events if e.action == "recover"]
+    assert len(recovers) >= 2  # several additive steps, not one jump
+    assert vals["fetch"] >= pre
+    # the shed landed on the fleet board
+    board = CongestionBoard(str(tmp_path), host="x")
+    assert board.last_seq() >= 1
+
+
+def test_peer_shed_event_cuts_this_host(tmp_path):
+    from repro.core.coord import CongestionBoard
+
+    vals = {"fetch": 1}
+    ctrl = AutotuneController(
+        _shed_cfg(), synthetic_knobs(vals, {"fetch": (1, 64)}),
+        congestion=CongestionBoard(str(tmp_path), host="b"),
+    )
+    now = drive(ctrl, vals, _plateau, steps=200)
+    pre = vals["fetch"]
+    # another host observes the collapse first and posts fleet-wide
+    CongestionBoard(str(tmp_path), host="a").post_shed(1.0)
+    _drive_on(ctrl, vals, _plateau, 2, now)
+    assert any(e.action == "shed_peer" for e in ctrl.events)
+    assert vals["fetch"] == max(1, pre // 2)
+    # we honored the peer's event without stacking our own on the board
+    assert not any(e.action == "shed" for e in ctrl.events)
+
+
+def test_shed_off_without_congestion_board():
+    vals = {"fetch": 1}
+    collapsed = {"on": False}
+
+    def tput(v):
+        return 0.1 if collapsed["on"] else _plateau(v)
+
+    ctrl = AutotuneController(_shed_cfg(),
+                              synthetic_knobs(vals, {"fetch": (1, 64)}))
+    now = drive(ctrl, vals, tput, steps=200)
+    collapsed["on"] = True
+    _drive_on(ctrl, vals, tput, 5, now)
+    assert not any(e.action in ("shed", "shed_peer") for e in ctrl.events)
+
+
+def test_shed_leaves_binary_knobs_alone(tmp_path):
+    from repro.core.coord import CongestionBoard
+
+    vals = {"fetch": 8, "hedge": 1}
+    # (0, 1) bounds make "hedge" a binary toggle (Knob.is_binary)
+    knobs = synthetic_knobs(vals, {"fetch": (1, 64), "hedge": (0, 1)})
+    ctrl = AutotuneController(
+        _shed_cfg(), knobs,
+        congestion=CongestionBoard(str(tmp_path), host="a"),
+    )
+    now = drive(ctrl, vals, _plateau, steps=60)
+    CongestionBoard(str(tmp_path), host="peer").post_shed(1.0)
+    fetch_pre, hedge_pre = vals["fetch"], vals["hedge"]
+    _drive_on(ctrl, vals, _plateau, 2, now)
+    assert vals["fetch"] < fetch_pre  # scalable knob cut...
+    assert vals["hedge"] == hedge_pre  # ...binary toggle untouched

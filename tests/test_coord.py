@@ -12,7 +12,12 @@ import pytest
 from repro.config import AutotuneConfig, LoaderConfig, StoreConfig
 from repro.core.autotune import AutotuneController, Knob
 from repro.core.coord import (
+    AppendLog,
+    CongestionBoard,
+    EpochShardBoard,
     FileLock,
+    JsonDiskJournal,
+    MembershipBoard,
     SharedCounter,
     SharedDiskJournal,
     UpProbeLease,
@@ -465,3 +470,354 @@ def test_controller_aborts_up_probe_when_lease_renewal_lost(tmp_path):
     assert not a._lease_held
     assert vals["fetch"] == 4  # the orphaned up-move was rolled back
     assert any(e.action == "revert" for e in a.events)
+
+
+# ---------------------------------------------------------------------------
+# append-log substrate
+# ---------------------------------------------------------------------------
+
+
+def _counter_log(dir_, **kw):
+    return AppendLog(
+        dir_,
+        "cnt",
+        make_state=lambda: {"v": 0},
+        apply=lambda st, rec: st.__setitem__(
+            "v", rec["v"] if rec["op"] == "snap" else st["v"] + rec["d"]
+        ),
+        snapshot=lambda st: [{"op": "snap", "v": st["v"]}],
+        **kw,
+    )
+
+
+def test_append_log_replay_and_bounded_resync(tmp_path):
+    a = _counter_log(str(tmp_path))
+    for _ in range(10):
+        with a.update() as (st, emit):
+            emit({"op": "add", "d": 1})
+    # a fresh instance replays the whole segment once...
+    b = _counter_log(str(tmp_path))
+    with b.view() as st:
+        assert st["v"] == 10
+    first_replay = b.replayed_records
+    # ...and subsequent syncs fold in only NEW records (bounded replay)
+    with a.update() as (st, emit):
+        emit({"op": "add", "d": 5})
+    with b.view() as st:
+        assert st["v"] == 15
+    assert b.replayed_records == first_replay + 1
+
+
+def test_append_log_compaction_retires_old_segment(tmp_path):
+    a = _counter_log(str(tmp_path), compact_every=8)
+    for _ in range(20):
+        with a.update() as (st, emit):
+            emit({"op": "add", "d": 1})
+    assert a.compactions >= 2
+    segs = [n for n in os.listdir(tmp_path) if ".seg" in n]
+    assert len(segs) == 1  # old generations swept
+    b = _counter_log(str(tmp_path))
+    with b.view() as st:
+        assert st["v"] == 20
+    # after a compaction the snapshot stands in for the full history
+    assert b.replayed_records <= 8 + 1
+
+
+def test_append_log_torn_tail_truncated(tmp_path):
+    a = _counter_log(str(tmp_path))
+    for _ in range(5):
+        with a.update() as (st, emit):
+            emit({"op": "add", "d": 1})
+    seg = os.path.join(tmp_path, "cnt.seg00000000.log")
+    size_before = os.path.getsize(seg)
+    with open(seg, "ab") as f:
+        f.write(b'{"op":"add","d":99')  # writer died mid-append: no newline
+    b = _counter_log(str(tmp_path))
+    with b.view() as st:
+        assert st["v"] == 5  # the unacknowledged record never happened
+    assert b.torn_tails_recovered == 1
+    assert os.path.getsize(seg) == size_before  # tail physically truncated
+    # the healed log accepts new records
+    with b.update() as (st, emit):
+        emit({"op": "add", "d": 1})
+    with b.view() as st:
+        assert st["v"] == 6
+
+
+def test_append_log_unparseable_tail_truncated(tmp_path):
+    a = _counter_log(str(tmp_path))
+    with a.update() as (st, emit):
+        emit({"op": "add", "d": 3})
+    seg = os.path.join(tmp_path, "cnt.seg00000000.log")
+    with open(seg, "ab") as f:
+        f.write(b'{"op":"add","d":#corrupt#}\n')  # terminated but garbage
+    b = _counter_log(str(tmp_path))
+    with b.view() as st:
+        assert st["v"] == 3
+    assert b.torn_tails_recovered == 1
+
+
+def _append_log_writer(dir_, n, compact_every):
+    log = _counter_log(dir_, compact_every=compact_every)
+    for _ in range(n):
+        with log.update() as (st, emit):
+            emit({"op": "add", "d": 1})
+
+
+def test_append_log_concurrent_writers_with_compaction(tmp_path):
+    """Satellite: compaction raced by concurrent writers must lose no
+    records — every process compacts eagerly (compact_every=5) while the
+    others append."""
+    ctx = multiprocessing.get_context("spawn")
+    procs = [
+        ctx.Process(target=_append_log_writer, args=(str(tmp_path), 40, 5))
+        for _ in range(3)
+    ]
+    for p in procs:
+        p.start()
+    for p in procs:
+        p.join(timeout=120)
+        assert p.exitcode == 0
+    log = _counter_log(str(tmp_path))
+    with log.view() as st:
+        assert st["v"] == 120
+    assert len([n for n in os.listdir(tmp_path) if ".seg" in n]) == 1
+
+
+def _crash_compactor(dir_, hook):
+    log = _counter_log(dir_)
+    log._crash_hooks[hook] = lambda: os._exit(17)
+    log.compact()
+
+
+@pytest.mark.parametrize("hook", ["after_seg", "after_gen"])
+def test_append_log_crash_mid_compaction_recovers(tmp_path, hook):
+    """Satellite: kill the compactor in both crash windows — after the new
+    segment is written but before the generation bump (orphan new segment),
+    and after the bump but before the old segment's unlink (orphan old
+    segment).  Either way the survivors read the exact pre-crash state."""
+    a = _counter_log(str(tmp_path))
+    for _ in range(7):
+        with a.update() as (st, emit):
+            emit({"op": "add", "d": 1})
+    ctx = multiprocessing.get_context("spawn")
+    p = ctx.Process(target=_crash_compactor, args=(str(tmp_path), hook))
+    p.start()
+    p.join(timeout=60)
+    assert p.exitcode == 17  # died exactly at the injected crash point
+    b = _counter_log(str(tmp_path))
+    with b.view() as st:
+        assert st["v"] == 7
+    # the next compaction sweeps whatever orphan the crash left behind
+    b.compact()
+    assert len([n for n in os.listdir(tmp_path) if ".seg" in n]) == 1
+    with _counter_log(str(tmp_path)).view() as st:
+        assert st["v"] == 7
+
+
+def test_journal_migrates_legacy_json_index(tmp_path):
+    """A pre-append-log index.json is folded into the gen-0 snapshot at
+    first open and retired as index.json.migrated."""
+    coord = tmp_path / ".coord"
+    coord.mkdir()
+    (tmp_path / "a.bin").write_bytes(b"x" * 700)
+    (tmp_path / "b.bin").write_bytes(b"x" * 200)
+    legacy = {
+        "capacity": 1_000,
+        "entries": [["a.bin", 700, True, 0.0], ["b.bin", 200, True, 0.0]],
+    }
+    (coord / "index.json").write_text(json.dumps(legacy))
+    j = SharedDiskJournal(str(tmp_path), 1_000)
+    assert j.entry_count() == 2
+    assert j.used_bytes() == 900
+    assert not os.path.exists(coord / "index.json")
+    assert os.path.exists(str(coord / "index.json") + ".migrated")
+    # migrated entries participate in LRU eviction as usual
+    r = j.reserve("c.bin", 400)
+    assert r.ok and r.evicted == 1 and r.evicted_bytes == 700
+    assert not os.path.exists(tmp_path / "a.bin")
+
+
+def test_json_journal_same_api_smoke(tmp_path):
+    """The legacy implementation stays importable behind the identical API
+    (bench baseline + migration source)."""
+    j = JsonDiskJournal(str(tmp_path), 1_000)
+    assert j.reserve("a.bin", 600).ok
+    assert j.finalize("a.bin")
+    (tmp_path / "a.bin").write_bytes(b"x" * 600)
+    assert j.reserve("a.bin", 600).dedup
+    r = j.reserve("b.bin", 600)
+    assert r.ok and r.evicted == 1
+    assert j.used_bytes() == 600 and j.entry_count() == 1
+
+
+# ---------------------------------------------------------------------------
+# membership / congestion / epoch-shard boards
+# ---------------------------------------------------------------------------
+
+
+class _FakeClock:
+    def __init__(self, t=1_000.0):
+        self.t = t
+
+    def __call__(self):
+        return self.t
+
+
+def test_membership_join_heartbeat_expiry_reap(tmp_path):
+    clk = _FakeClock()
+    a = MembershipBoard(str(tmp_path), member="a", ttl_s=10, clock=clk)
+    b = MembershipBoard(str(tmp_path), member="b", ttl_s=10, clock=clk)
+    a.join()
+    gen = b.join()
+    assert set(a.live()) == {"a", "b"}
+    clk.t += 6
+    a.heartbeat()  # extends a's lease; b's now expires at t=1010
+    clk.t += 6  # t=1012: b expired, a live until 1016
+    assert set(a.live()) == {"a"}
+    gen2 = a.heartbeat()  # reaps b
+    assert gen2 == gen + 1  # departure bumped the fleet generation
+    assert not a.is_live("b")
+    # a reaped member's next heartbeat re-joins it (with another bump)
+    gen3 = b.heartbeat()
+    assert gen3 == gen2 + 1 and a.is_live("b")
+    # join/leave/reap transitions land in the audit log
+    events = [
+        json.loads(ln)
+        for ln in open(tmp_path / "membership_audit.jsonl")
+        if ln.strip()
+    ]
+    assert [e["event"] for e in events].count("reap") == 1
+    reap = next(e for e in events if e["event"] == "reap")
+    assert reap["member"] == "b" and reap["by"] == "a"
+
+
+def test_membership_leave_is_immediate(tmp_path):
+    clk = _FakeClock()
+    a = MembershipBoard(str(tmp_path), member="a", ttl_s=100, clock=clk)
+    a.join()
+    assert a.is_live("a")
+    a.leave()
+    assert not a.is_live("a")
+
+
+def test_congestion_board_post_poll_rate_limit(tmp_path):
+    clk = _FakeClock()
+    a = CongestionBoard(str(tmp_path), host="a", clock=clk)
+    b = CongestionBoard(str(tmp_path), host="b", clock=clk)
+    assert b.last_seq() == 0
+    seq = a.post_shed(123.0)
+    assert seq == 1  # the event's own seq: polling from it skips ourselves
+    latest, events = b.poll(0)
+    assert latest == 1 and len(events) == 1
+    assert events[0]["h"] == "a" and events[0]["tput"] == 123.0
+    # rate limit: b observing the same collapse does NOT stack a second shed
+    assert b.post_shed(100.0, min_interval_s=5.0) is None
+    assert b.last_seq() == 1
+    clk.t += 6
+    assert b.post_shed(90.0, min_interval_s=5.0) is not None
+    latest, events = a.poll(1)
+    assert latest == 2 and [e["h"] for e in events] == ["b"]
+
+
+def test_shard_board_claim_progress_complete(tmp_path):
+    clk = _FakeClock()
+    board = EpochShardBoard(str(tmp_path), owner="a", ttl_s=10, clock=clk)
+    assert board.setup(0, num_batches=10, shard_batches=4) == 3
+    c = board.claim_next(0)
+    assert (c.shard, c.start, c.end, c.next_b) == (0, 0, 4, 0)
+    board.progress(0, 0, 4)  # confirming the last batch flips done
+    assert board.snapshot(0)["0"]["done"]
+    for want in (1, 2):
+        c = board.claim_next(0)
+        assert c.shard == want
+        board.progress(0, c.shard, c.end)
+    assert board.all_done(0)
+    assert board.claim_next(0) is None
+
+
+def test_shard_board_lease_expiry_takeover_resumes_cursor(tmp_path):
+    clk = _FakeClock()
+    a = EpochShardBoard(str(tmp_path), owner="a", ttl_s=10, clock=clk)
+    b = EpochShardBoard(str(tmp_path), owner="b", ttl_s=10, clock=clk)
+    a.setup(0, 8, 8)
+    ca = a.claim_next(0)
+    a.progress(0, ca.shard, 3)  # a confirmed batches 0..2, then stalls
+    assert b.claim_next(0) is None  # live lease: no takeover
+    clk.t += 11  # a's lease expires
+    cb = b.claim_next(0)
+    assert cb is not None and cb.next_b == 3  # resumes at a's cursor
+    # a's stale renew must fail: the claim moved
+    assert not a.renew(0, ca.shard)
+
+
+def test_shard_board_membership_reap_takeover(tmp_path):
+    """A dead-but-unexpired claim is reapable the moment its owner vanishes
+    from the membership board (no TTL wait)."""
+    clk = _FakeClock()
+    mem = MembershipBoard(str(tmp_path), member="a", ttl_s=5, clock=clk)
+    mem.join()
+    a = EpochShardBoard(
+        str(tmp_path), owner="a", ttl_s=1_000, clock=clk, membership=mem
+    )
+    memb = MembershipBoard(str(tmp_path), member="b", ttl_s=5, clock=clk)
+    b = EpochShardBoard(
+        str(tmp_path), owner="b", ttl_s=1_000, clock=clk, membership=memb
+    )
+    a.setup(0, 4, 4)
+    a.claim_next(0)
+    memb.join()
+    assert b.claim_next(0) is None  # a is live; its long lease holds
+    clk.t += 6  # a's MEMBERSHIP lease expires (no heartbeat = departure)
+    cb = b.claim_next(0)
+    assert cb is not None and cb.shard == 0
+
+
+def test_shard_board_exclude_skips_own_inflight_shard(tmp_path):
+    """Regression: the board's progress cursor lags delivery confirmation,
+    so a host that finished DISPATCHING its shard must not re-claim it via
+    the own-shard-reclaim path (that re-runs in-flight batches)."""
+    clk = _FakeClock()
+    board = EpochShardBoard(str(tmp_path), owner="a", ttl_s=10, clock=clk)
+    board.setup(0, 4, 4)
+    c = board.claim_next(0)
+    assert c.shard == 0
+    # no progress posted yet — without exclude we'd re-claim shard 0
+    assert board.claim_next(0, exclude=frozenset({0})) is None
+    again = board.claim_next(0)
+    assert again is not None and again.shard == 0  # restart path still works
+
+
+def test_upprobe_lease_reaps_vanished_holder(tmp_path):
+    """Satellite bugfix: a holder that dies between acquire and its first
+    renew leaves a live-looking lease; with a membership board wired, a
+    peer reaps it immediately instead of idling out the TTL."""
+    clk = _FakeClock()
+    mem_a = MembershipBoard(str(tmp_path), member="host-a", ttl_s=5, clock=clk)
+    mem_a.join()
+    lease_a = UpProbeLease(
+        str(tmp_path), owner="host-a", ttl_s=1_000, membership=mem_a
+    )
+    assert lease_a.try_acquire()
+    # host-a dies: no heartbeat, membership lease expires
+    clk.t += 6
+    mem_b = MembershipBoard(str(tmp_path), member="host-b", ttl_s=5, clock=clk)
+    mem_b.join()
+    lease_b = UpProbeLease(
+        str(tmp_path), owner="host-b", ttl_s=30, membership=mem_b
+    )
+    assert lease_b.try_acquire()  # reaped, not blocked for 1000 s
+    events = lease_b.read_events()
+    kinds = [e.event for e in events]
+    assert "reap" in kinds and kinds.index("reap") < kinds.index("takeover")
+    audit = validate_lease_events(events)
+    assert audit.ok, audit.violations
+
+
+def test_upprobe_lease_without_membership_waits_ttl(tmp_path):
+    """Without a membership board the reap path must stay off: a live
+    foreign lease blocks until its own TTL, exactly as before."""
+    lease_a = UpProbeLease(str(tmp_path), owner="host-a", ttl_s=1_000)
+    assert lease_a.try_acquire()
+    lease_b = UpProbeLease(str(tmp_path), owner="host-b", ttl_s=30)
+    assert not lease_b.try_acquire()
